@@ -1,0 +1,52 @@
+"""Paper Table IV: index sizes.  Compass stores ONE graph + IVF + clustered
+per-attribute sorted permutations; a SeRF-style specialized 1D index
+duplicates the vector-graph component once per attribute; NaviX equals a
+plain HNSW of doubled bottom-layer degree."""
+from __future__ import annotations
+
+import numpy as np
+
+from . import common as C
+
+
+def _bytes(tree) -> int:
+    import jax
+
+    return int(sum(np.asarray(l).nbytes for l in jax.tree_util.tree_leaves(tree)))
+
+
+def run(out=print):
+    idx_host, build_s = C.get_index("SYN-EASY")
+    idx = idx_host
+    out("# index_size (MiB), dataset=SYN-EASY")
+    graph_b = _bytes(idx.graph)
+    ivf_b = _bytes((idx.centroids, idx.medoids))
+    battrs_b = _bytes(idx.cattrs)
+    vectors_b = _bytes(idx.vectors)
+    compass_total = graph_b + ivf_b + battrs_b
+    # SeRF-style: one graph-index clone per attribute (the paper's x4)
+    serf_total = C.N_ATTRS * graph_b
+    # NaviX: HNSW with doubled bottom-layer degree (paper §V.B: M doubles)
+    navix_total = 2 * graph_b
+    mib = 1 / (1 << 20)
+    out(f"vectors(raw),{vectors_b*mib:.1f}")
+    out(f"compass_graph,{graph_b*mib:.1f}")
+    out(f"compass_ivf,{ivf_b*mib:.1f}")
+    out(f"compass_clustered_btrees,{battrs_b*mib:.1f}")
+    out(f"compass_total,{compass_total*mib:.1f}")
+    out(f"serf_x{C.N_ATTRS}_total,{serf_total*mib:.1f}")
+    out(f"navix_total,{navix_total*mib:.1f}")
+    out(f"compass_build_seconds,{build_s:.1f}")
+    return {
+        "compass": compass_total,
+        "serf": serf_total,
+        "navix": navix_total,
+    }
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

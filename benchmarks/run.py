@@ -1,0 +1,45 @@
+"""Benchmark driver — one module per paper table/figure.
+
+  bench_index_size    -> Table IV
+  bench_conjunctions  -> Figs. 4/5 + Table V (top)
+  bench_disjunctions  -> Figs. 6/7 + Table V (bottom)
+  bench_qps_recall    -> Figs. 8-10
+  bench_ablation      -> Fig. 11
+
+``python -m benchmarks.run [--only name] [--quick]``
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+ALL = (
+    "bench_index_size",
+    "bench_conjunctions",
+    "bench_disjunctions",
+    "bench_qps_recall",
+    "bench_ablation",
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--quick", action="store_true", help="shrink corpus for CI")
+    args = ap.parse_args()
+    if args.quick:
+        import os
+
+        os.environ.setdefault("REPRO_BENCH_N", "20000")
+        os.environ.setdefault("REPRO_BENCH_Q", "32")
+    names = [args.only] if args.only else list(ALL)
+    for name in names:
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t0 = time.time()
+        print(f"==== {name} ====", flush=True)
+        mod.run()
+        print(f"==== {name} done in {time.time()-t0:.0f}s ====", flush=True)
+
+
+if __name__ == "__main__":
+    main()

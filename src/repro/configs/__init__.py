@@ -1,0 +1,12 @@
+from .base import (
+    SHAPES,
+    ModelConfig,
+    MoEConfig,
+    ShapeConfig,
+    SSMConfig,
+    all_configs,
+    get_config,
+    reduced,
+    register,
+    shape_applicable,
+)

@@ -1,0 +1,217 @@
+"""Model / run configuration for the serving+training substrate.
+
+One :class:`ModelConfig` instance per assigned architecture lives in
+``repro/configs/<id>.py``; the registry resolves ``--arch <id>``.  Input
+shapes (the 4 assigned cells per arch) are in :data:`SHAPES`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int
+    n_shared: int = 0
+    capacity_factor: float = 1.25
+    first_dense: int = 0  # leading dense layers (e.g. deepseek-v2)
+    router_dtype: str = "float32"
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int
+    head_dim: int = 64
+    expand: int = 2
+    n_groups: int = 1
+    conv_kernel: int = 4
+    chunk: int = 128
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_ssm_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 => d_model // n_heads
+    mlp_type: str = "swiglu"  # swiglu | relu2 | geglu
+    qkv_bias: bool = False
+    attn_type: str = "gqa"  # gqa | mla
+    kv_lora_rank: int = 0  # MLA
+    q_lora_rank: int = 0  # MLA (0 = full-rank q)
+    rope_dim: int = 0  # MLA decoupled rope dims; 0 => head_dim for gqa
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # hybrid layout: period p => every p-th layer is (shared) attention
+    hybrid_period: int = 0
+    shared_attn: bool = False  # zamba2-style single shared attention block
+    # modality frontend stub: prefix embeddings prepended to the sequence
+    frontend: Optional[str] = None  # None | patch | frame
+    n_prefix: int = 0  # prefix embedding count for vlm
+    prefix_bidirectional: bool = False  # paligemma prefix-LM mask
+    embed_inputs: bool = True  # False => inputs are precomputed embeddings
+    sub_quadratic: bool = False  # supports long_500k decode
+    dtype: str = "bfloat16"
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        """Approximate parameter count (for roofline MODEL_FLOPS)."""
+        d, hd = self.d_model, self.resolved_head_dim
+        n_attn = self.n_layers
+        n_mamba = 0
+        if self.family in ("ssm",):
+            n_attn = 0
+            n_mamba = self.n_layers
+        elif self.hybrid_period:
+            n_attn_blocks = self.n_layers // self.hybrid_period
+            n_mamba = self.n_layers - n_attn_blocks
+            n_attn = 1 if self.shared_attn else n_attn_blocks
+        total = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        # attention
+        if self.attn_type == "mla":
+            r, rd = self.kv_lora_rank, self.rope_dim
+            attn = d * (self.n_heads * (hd + rd)) + d * (r + rd)
+            attn += r * self.n_heads * 2 * hd + self.n_heads * hd * d
+        else:
+            attn = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd + self.n_heads * hd * d
+        total += n_attn * attn
+        # mlp / moe
+        mult = 3 if self.mlp_type in ("swiglu", "geglu") else 2
+        if self.moe:
+            per_expert = mult * d * self.moe.d_expert
+            layers_moe = self.n_layers - self.moe.first_dense
+            total += layers_moe * (
+                (self.moe.n_experts + self.moe.n_shared) * per_expert + d * self.moe.n_experts
+            )
+            total += self.moe.first_dense * mult * d * self.d_ff
+        elif self.family != "ssm" and not self.hybrid_period:
+            total += self.n_layers * mult * d * self.d_ff
+        elif self.hybrid_period:
+            total += (1 if self.shared_attn else self.n_layers // self.hybrid_period) * mult * d * self.d_ff
+        # mamba blocks
+        if n_mamba and self.ssm:
+            di = self.ssm.d_inner(d)
+            nh = self.ssm.n_ssm_heads(d)
+            g = self.ssm.n_groups
+            per = d * (2 * di + 2 * g * self.ssm.d_state + nh) + di * d
+            total += n_mamba * per
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE-aware), for 6*N_active*D."""
+        if not self.moe:
+            return self.param_count()
+        d = self.d_model
+        mult = 3 if self.mlp_type in ("swiglu", "geglu") else 2
+        per_expert = mult * d * self.moe.d_expert
+        layers_moe = self.n_layers - self.moe.first_dense
+        inactive = layers_moe * (self.moe.n_experts - self.moe.top_k) * per_expert
+        return int(self.param_count() - inactive)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+_REGISTRY: dict[str, ModelConfig] = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    if not _REGISTRY:
+        _load_all()
+    return _REGISTRY[name]
+
+
+def all_configs() -> dict[str, ModelConfig]:
+    if not _REGISTRY:
+        _load_all()
+    return dict(_REGISTRY)
+
+
+def _load_all() -> None:
+    from . import (  # noqa: F401
+        deepseek_v2_lite_16b,
+        granite_moe_1b_a400m,
+        mamba2_2_7b,
+        musicgen_large,
+        nemotron_4_340b,
+        paligemma_3b,
+        qwen2_5_3b,
+        tinyllama_1_1b,
+        yi_34b,
+        zamba2_7b,
+    )
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> bool:
+    """long_500k requires sub-quadratic sequence mixing (DESIGN.md §Skips)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False
+    return True
+
+
+def reduced(cfg: ModelConfig) -> ModelConfig:
+    """A tiny same-family config for CPU smoke tests."""
+    kw: dict = dict(
+        n_layers=max(2, min(cfg.n_layers, 2)),
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=min(4, max(1, cfg.n_kv_heads // max(1, cfg.n_heads // 4))),
+        d_ff=256,
+        vocab_size=512,
+        head_dim=32 if cfg.head_dim else 0,
+    )
+    if cfg.attn_type == "mla":
+        kw.update(kv_lora_rank=32, q_lora_rank=0, rope_dim=16)
+    if cfg.moe:
+        # capacity_factor high enough to be drop-free at smoke scale so the
+        # prefill/decode consistency invariant holds exactly (capacity
+        # dropping is inherently batch-dependent; accepted at real scale)
+        kw["moe"] = dataclasses.replace(
+            cfg.moe, n_experts=4, top_k=2, d_expert=64, capacity_factor=8.0,
+            n_shared=min(cfg.moe.n_shared, 1), first_dense=min(cfg.moe.first_dense, 1),
+        )
+    if cfg.ssm:
+        kw["ssm"] = dataclasses.replace(cfg.ssm, d_state=16, head_dim=32, chunk=16)
+    if cfg.hybrid_period:
+        kw["hybrid_period"] = 2
+        kw["n_layers"] = 4
+    if cfg.n_prefix:
+        kw["n_prefix"] = 8
+    return dataclasses.replace(cfg, name=cfg.name + "-smoke", **kw)

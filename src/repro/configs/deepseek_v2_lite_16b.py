@@ -1,0 +1,12 @@
+"""DeepSeek-V2-Lite (16B) [arXiv:2405.04434]: MLA (kv_lora=512) + MoE
+(64 routed top-6, 2 shared), first layer dense."""
+from .base import ModelConfig, MoEConfig, register
+
+CONFIG = register(ModelConfig(
+    name="deepseek-v2-lite-16b", family="moe",
+    n_layers=27, d_model=2048, n_heads=16, n_kv_heads=16,
+    d_ff=10944, vocab_size=102400,
+    head_dim=128, attn_type="mla", kv_lora_rank=512, rope_dim=64,
+    mlp_type="swiglu", rope_theta=10000.0,
+    moe=MoEConfig(n_experts=64, top_k=6, d_expert=1408, n_shared=2, first_dense=1),
+))

@@ -1,0 +1,10 @@
+"""Granite-3.0-1B-A400M [hf:ibm-granite]: 32-expert top-8 MoE."""
+from .base import ModelConfig, MoEConfig, register
+
+CONFIG = register(ModelConfig(
+    name="granite-moe-1b-a400m", family="moe",
+    n_layers=24, d_model=1024, n_heads=16, n_kv_heads=8,
+    d_ff=512, vocab_size=49155,
+    mlp_type="swiglu", rope_theta=10000.0, tie_embeddings=True,
+    moe=MoEConfig(n_experts=32, top_k=8, d_expert=512, n_shared=0),
+))

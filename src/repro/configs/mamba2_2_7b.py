@@ -1,0 +1,10 @@
+"""Mamba2-2.7B [arXiv:2405.21060]: attention-free SSD (state-space duality)."""
+from .base import ModelConfig, SSMConfig, register
+
+CONFIG = register(ModelConfig(
+    name="mamba2-2.7b", family="ssm",
+    n_layers=64, d_model=2560, n_heads=1, n_kv_heads=1,
+    d_ff=0, vocab_size=50280,
+    ssm=SSMConfig(d_state=128, head_dim=64, expand=2, n_groups=1, chunk=256),
+    sub_quadratic=True,
+))

@@ -1,0 +1,15 @@
+"""MusicGen-large [arXiv:2306.05284]: decoder-only over EnCodec tokens.
+
+The EnCodec frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed frame embeddings (the sum of codebook embeddings); the backbone
+is a plain causal transformer with a 2048-way codebook head.
+"""
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="musicgen-large", family="audio",
+    n_layers=48, d_model=2048, n_heads=32, n_kv_heads=32,
+    d_ff=8192, vocab_size=2048,
+    mlp_type="geglu", rope_theta=10000.0,
+    frontend="frame", embed_inputs=False,
+))

@@ -1,0 +1,16 @@
+"""PaliGemma-3B [arXiv:2407.07726]: SigLIP + gemma backbone.
+
+The SigLIP vision tower is a STUB per the assignment: ``input_specs``
+provides 256 precomputed patch embeddings that enter via prefix_embeds
+with a bidirectional prefix-LM mask (PaliGemma's attention layout).
+"""
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="paligemma-3b", family="vlm",
+    n_layers=18, d_model=2048, n_heads=8, n_kv_heads=1,
+    d_ff=16384, vocab_size=257216,
+    head_dim=256, mlp_type="geglu", rope_theta=10000.0,
+    tie_embeddings=True,
+    frontend="patch", n_prefix=256, prefix_bidirectional=True,
+))

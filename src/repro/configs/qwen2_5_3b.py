@@ -1,0 +1,10 @@
+"""Qwen2.5-3B [hf:Qwen]: GQA with QKV bias."""
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="qwen2.5-3b", family="dense",
+    n_layers=36, d_model=2048, n_heads=16, n_kv_heads=2,
+    d_ff=11008, vocab_size=151936,
+    mlp_type="swiglu", qkv_bias=True, rope_theta=1000000.0,
+    tie_embeddings=True,
+))

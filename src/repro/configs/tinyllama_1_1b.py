@@ -1,0 +1,9 @@
+"""TinyLlama-1.1B [arXiv:2401.02385]: small llama2-architecture GQA."""
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="tinyllama-1.1b", family="dense",
+    n_layers=22, d_model=2048, n_heads=32, n_kv_heads=4,
+    d_ff=5632, vocab_size=32000,
+    mlp_type="swiglu", rope_theta=10000.0,
+))

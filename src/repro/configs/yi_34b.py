@@ -1,0 +1,9 @@
+"""Yi-34B [arXiv:2403.04652]: llama-architecture GQA."""
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="yi-34b", family="dense",
+    n_layers=60, d_model=7168, n_heads=56, n_kv_heads=8,
+    d_ff=20480, vocab_size=64000,
+    mlp_type="swiglu", rope_theta=5000000.0,
+))

@@ -1,0 +1,14 @@
+"""Zamba2-7B [arXiv:2411.15242]: Mamba2 backbone with a *shared*
+transformer block applied periodically (hybrid)."""
+from .base import ModelConfig, SSMConfig, register
+
+CONFIG = register(ModelConfig(
+    name="zamba2-7b", family="hybrid",
+    n_layers=81, d_model=3584, n_heads=32, n_kv_heads=32,
+    d_ff=14336, vocab_size=32000,
+    mlp_type="swiglu", rope_theta=10000.0,
+    ssm=SSMConfig(d_state=64, head_dim=64, expand=2, n_groups=2, chunk=256),
+    hybrid_period=6, shared_attn=True,
+    sub_quadratic=True,  # attention blocks are sparse-in-depth; decode state
+                         # is dominated by Mamba2 states => long_500k runs
+))

@@ -1,0 +1,46 @@
+"""Distance primitives shared by every index component.
+
+All distances are *squared* L2 by default (monotone w.r.t. L2, cheaper) or
+negative inner product for MIPS-style corpora.  Batched forms are plain
+matmuls so XLA maps them onto the MXU; the per-candidate gathered form is
+implemented as a Pallas kernel in ``repro.kernels.filter_distance`` with
+``pairwise_*`` here serving as the reference path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+METRICS = ("l2", "ip")
+
+
+def pairwise_l2(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Squared L2 distances. x: (m, d), y: (n, d) -> (m, n)."""
+    x2 = jnp.sum(x * x, axis=-1, keepdims=True)  # (m, 1)
+    y2 = jnp.sum(y * y, axis=-1)  # (n,)
+    xy = x @ y.T  # (m, n) -- MXU
+    return jnp.maximum(x2 + y2[None, :] - 2.0 * xy, 0.0)
+
+
+def pairwise_ip(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Negative inner product (so smaller == closer, like L2)."""
+    return -(x @ y.T)
+
+
+def pairwise(x: jax.Array, y: jax.Array, metric: str = "l2") -> jax.Array:
+    if metric == "l2":
+        return pairwise_l2(x, y)
+    if metric == "ip":
+        return pairwise_ip(x, y)
+    raise ValueError(f"unknown metric {metric!r}")
+
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def point_to_points(q: jax.Array, ys: jax.Array, metric: str = "l2") -> jax.Array:
+    """q: (d,), ys: (v, d) -> (v,)."""
+    if metric == "l2":
+        diff = ys - q[None, :]
+        return jnp.sum(diff * diff, axis=-1)
+    return -(ys @ q)

@@ -1,0 +1,228 @@
+"""Distributed Compass: corpus-sharded filtered search over the production
+mesh (the paper's step for the multi-pod dry-run).
+
+Deployment model (DESIGN.md §Distribution):
+  * The corpus is sharded record-wise across ALL mesh axes (512 shards on
+    the 2x16x16 pod mesh).  Each device owns a full local Compass index
+    over its shard: sub-graph, IVF centroids + medoids, clustered attrs.
+    Index build is embarrassingly parallel across hosts.
+  * A query batch is replicated; every shard runs the *identical* batched
+    CompassSearch loop on its local shard (shard_map), then a global top-k
+    merge runs over one all-gather of (B, k) candidates — k*B*8 bytes, so
+    the collective term is negligible and throughput scales ~linearly with
+    devices; the paper's single-node QPS results compose multiplicatively.
+  * Recall composition: per-shard recall lower-bounds global recall (the
+    global top-k is over the union of per-shard results, each shard's
+    ground-truth contribution is a subset of its local top-k).
+
+This module provides the real executable path (used by tests on 1 device
+and by examples) and the abstract 512-way dry-run used by launch/dryrun.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from . import predicate as PR
+from .clustered_attrs import ClusteredAttrs
+from .graph_build import GraphIndex
+from .index import BuildConfig, CompassIndex, build_index
+from .search import CompassParams, compass_search
+
+
+class ShardedIndex(NamedTuple):
+    """CompassIndex leaves stacked with a leading shard axis."""
+
+    vectors: jax.Array  # (S, n_loc + 1, d)
+    attrs: jax.Array  # (S, n_loc + 1, A)
+    neighbors: jax.Array  # (S, n_loc, M)
+    entry: jax.Array  # (S,)
+    centroids: jax.Array  # (S, nlist, d)
+    medoids: jax.Array  # (S, nlist)
+    order: jax.Array  # (S, A, n_loc)
+    sorted_vals: jax.Array  # (S, A, n_loc)
+    offsets: jax.Array  # (S, nlist + 1)
+    assignments: jax.Array  # (S, n_loc)
+
+    @property
+    def n_shards(self) -> int:
+        return self.vectors.shape[0]
+
+    @property
+    def n_local(self) -> int:
+        return self.vectors.shape[1] - 1
+
+
+def _to_local_index(s: ShardedIndex) -> CompassIndex:
+    """Inside shard_map: strip the (1,) shard axis into a CompassIndex."""
+    sq = lambda a: a[0]
+    return CompassIndex(
+        vectors=sq(s.vectors),
+        attrs=sq(s.attrs),
+        graph=GraphIndex(sq(s.neighbors), sq(s.entry)),
+        centroids=sq(s.centroids),
+        medoids=sq(s.medoids),
+        cattrs=ClusteredAttrs(
+            sq(s.order), sq(s.sorted_vals), sq(s.offsets), sq(s.assignments)
+        ),
+    )
+
+
+def build_sharded_index(
+    vectors: np.ndarray, attrs: np.ndarray, n_shards: int, cfg: BuildConfig = BuildConfig()
+) -> ShardedIndex:
+    """Host-side build: split the corpus round-robin, build per-shard
+    indices independently (as each host would), stack the leaves."""
+    n = vectors.shape[0]
+    per = n // n_shards
+    parts = []
+    for s in range(n_shards):
+        sl = slice(s * per, (s + 1) * per)
+        idx = build_index(vectors[sl], attrs[sl], cfg)
+        parts.append(idx)
+    return ShardedIndex(
+        vectors=jnp.stack([p.vectors for p in parts]),
+        attrs=jnp.stack([p.attrs for p in parts]),
+        neighbors=jnp.stack([p.graph.neighbors for p in parts]),
+        entry=jnp.stack([p.graph.entry for p in parts]),
+        centroids=jnp.stack([p.centroids for p in parts]),
+        medoids=jnp.stack([p.medoids for p in parts]),
+        order=jnp.stack([p.cattrs.order for p in parts]),
+        sorted_vals=jnp.stack([p.cattrs.sorted_vals for p in parts]),
+        offsets=jnp.stack([p.cattrs.offsets for p in parts]),
+        assignments=jnp.stack([p.cattrs.assignments for p in parts]),
+    )
+
+
+def make_distributed_search(mesh, pm: CompassParams):
+    """Returns jitted fn(sharded_index, queries, pred) -> (ids, dists).
+
+    ids are global record ids (shard * n_local + local).
+    """
+    axes = tuple(mesh.axis_names)
+    shard_spec = ShardedIndex(
+        vectors=P(axes), attrs=P(axes), neighbors=P(axes), entry=P(axes),
+        centroids=P(axes), medoids=P(axes), order=P(axes), sorted_vals=P(axes),
+        offsets=P(axes), assignments=P(axes),
+    )
+
+    def local_search(s_index: ShardedIndex, queries, lo, hi):
+        index = _to_local_index(s_index)
+        n_loc = index.n_records
+        res = compass_search(index, queries, PR.Predicate(lo, hi), pm)
+        shard_id = jnp.int32(0)
+        for ax in axes:
+            shard_id = shard_id * mesh.shape[ax] + jax.lax.axis_index(ax)
+        gids = jnp.where(res.ids < n_loc, shard_id * n_loc + res.ids, jnp.iinfo(jnp.int32).max)
+        # global merge: tiny (B, k) all-gather then top-k over union
+        all_d = jax.lax.all_gather(res.dists, axes, tiled=False)  # (S, B, k)
+        all_i = jax.lax.all_gather(gids, axes, tiled=False)
+        S, B, K = all_d.shape
+        flat_d = jnp.moveaxis(all_d, 0, 1).reshape(B, S * K)
+        flat_i = jnp.moveaxis(all_i, 0, 1).reshape(B, S * K)
+        neg, sel = jax.lax.top_k(-flat_d, pm.k)
+        return jnp.take_along_axis(flat_i, sel, axis=1), -neg
+
+    fn = jax.shard_map(
+        local_search,
+        mesh=mesh,
+        in_specs=(shard_spec, P(), P(), P()),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )
+
+    @jax.jit
+    def search(s_index: ShardedIndex, queries, pred: PR.Predicate):
+        return fn(s_index, queries, pred.lo, pred.hi)
+
+    return search
+
+
+# ---------------------------------------------------------------------------
+# Abstract production-scale dry-run
+# ---------------------------------------------------------------------------
+
+
+def abstract_sharded_index(
+    n_total: int, dim: int, n_attrs: int, n_shards: int, m: int = 32, nlist: int = 4096
+) -> ShardedIndex:
+    n_loc = n_total // n_shards
+    f32, i32 = jnp.float32, jnp.int32
+    sds = jax.ShapeDtypeStruct
+    return ShardedIndex(
+        vectors=sds((n_shards, n_loc + 1, dim), f32),
+        attrs=sds((n_shards, n_loc + 1, n_attrs), f32),
+        neighbors=sds((n_shards, n_loc, m), i32),
+        entry=sds((n_shards,), i32),
+        centroids=sds((n_shards, nlist, dim), f32),
+        medoids=sds((n_shards, nlist), i32),
+        order=sds((n_shards, n_attrs, n_loc), i32),
+        sorted_vals=sds((n_shards, n_attrs, n_loc), f32),
+        offsets=sds((n_shards, nlist + 1), i32),
+        assignments=sds((n_shards, n_loc), i32),
+    )
+
+
+def abstract_distributed_search(mesh, verbose: bool = True) -> dict:
+    """Production-scale cell: 1.07B vectors x 128d x 4 attrs, batch 64
+    filtered queries, T=4 DNF terms, over every device in the mesh."""
+    import time
+
+    from repro.roofline.analysis import collect_cell_report
+
+    n_dev = mesh.size
+    n_total = 2_097_152 * n_dev  # 2M records / device
+    dim, n_attrs, T, B = 128, 4, 4, 64
+    pm = CompassParams(k=10, ef=128, efi=64)
+    s_index = abstract_sharded_index(n_total, dim, n_attrs, n_dev)
+    queries = jax.ShapeDtypeStruct((B, dim), jnp.float32)
+    pred = PR.Predicate(
+        jax.ShapeDtypeStruct((B, T, n_attrs), jnp.float32),
+        jax.ShapeDtypeStruct((B, T, n_attrs), jnp.float32),
+    )
+    fn = make_distributed_search(mesh, pm)
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        lowered = fn.lower(s_index, queries, pred)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    meta = {
+        "arch": "compass-search",
+        "shape": f"corpus{n_total}_b{B}_ef{pm.ef}",
+        "mesh": "pod2x16x16" if "pod" in mesh.axis_names else "16x16",
+        "kind": "search",
+        "t_lower_s": round(t_lower, 2),
+        "t_compile_s": round(t_compile, 2),
+    }
+
+    class _Cfg:
+        @staticmethod
+        def active_param_count():
+            return 0
+
+        @staticmethod
+        def param_count():
+            return 0
+
+    class _Shape:
+        global_batch = B
+        seq_len = 1
+        kind = "search"
+
+    rec = collect_cell_report(_Cfg, _Shape, lowered, compiled, meta)
+    if verbose:
+        ma = rec["memory"]
+        print(
+            f"OK compass-search [{meta['mesh']}] lower={meta['t_lower_s']}s "
+            f"compile={meta['t_compile_s']}s bytes/dev={ma['total_bytes_per_device']/1e9:.2f}GB "
+            f"dominant={rec['roofline']['dominant']}"
+        )
+    return rec

@@ -1,0 +1,315 @@
+"""Proximity-graph construction, TPU-native.
+
+Hardware adaptation (DESIGN.md §Adaptation): HNSW's *incremental insertion*
+is inherently sequential pointer-chasing — each insert greedily walks the
+graph built so far.  That algorithm does not map to a systolic machine, but
+the paper itself notes (§IV.D "Flexibility") that the proximity graph is an
+interchangeable component ("HNSW can be replaced with a different proximity
+graph algorithm like NSG").  We therefore build a *flat* navigable graph
+(NSG/Vamana-family) with fully batched, MXU-friendly steps:
+
+  1. coarse k-means over the corpus,
+  2. per-cluster candidate pools from the ``link`` nearest clusters;
+     exact top-R neighbours inside each pool        (dense matmuls),
+  3. optional NN-descent rounds (neighbours-of-neighbours refinement,
+     batched gathers + matmuls),
+  4. vectorized occlusion ("robust") pruning à la HNSW heuristic / Vamana,
+  5. reverse-edge augmentation to a max out-degree M,
+  6. medoid entry point (replaces HNSW's upper layers; identical role:
+     a navigable, query-independent entry).
+
+Search-time traversal (``repro.core.search``) is byte-for-byte the paper's
+best-first loop and does not care which construction produced the graph.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .distances import pairwise
+from .kmeans import kmeans
+
+
+class GraphIndex(NamedTuple):
+    neighbors: jax.Array  # (N, M) int32; sentinel == N for missing edges
+    entry: jax.Array  # () int32 medoid entry point
+
+    @property
+    def n_nodes(self) -> int:
+        return self.neighbors.shape[0]
+
+    @property
+    def degree(self) -> int:
+        return self.neighbors.shape[1]
+
+
+def _topk_neighbors_in_pools(
+    x: np.ndarray,
+    assign: np.ndarray,
+    centroids: np.ndarray,
+    n_candidates: int,
+    link: int,
+    metric: str,
+) -> np.ndarray:
+    """Initial candidate lists: exact top-k inside cluster neighbourhoods."""
+    n = x.shape[0]
+    kc = centroids.shape[0]
+    link = min(link, kc)
+    cdist = np.asarray(pairwise(jnp.asarray(centroids), jnp.asarray(centroids), metric))
+    near_clusters = np.argsort(cdist, axis=1)[:, :link]  # (kc, link)
+    members: list[np.ndarray] = [np.where(assign == c)[0] for c in range(kc)]
+    cand = np.full((n, n_candidates), n, np.int32)
+
+    # Pure numpy: cluster shapes vary per iteration, which would retrigger
+    # XLA compilation every cluster; at these pool sizes BLAS is plenty.
+    x2 = (x * x).sum(1)
+    for c in range(kc):
+        mem = members[c]
+        if mem.size == 0:
+            continue
+        pool = np.concatenate([members[cc] for cc in near_clusters[c]])
+        xy = x[mem] @ x[pool].T
+        if metric == "l2":
+            d = x2[mem][:, None] + x2[pool][None, :] - 2.0 * xy
+        else:
+            d = -xy
+        # mask self
+        d[mem[:, None] == pool[None, :]] = np.inf
+        k = min(n_candidates, pool.size)
+        idx = np.argpartition(d, kth=k - 1, axis=1)[:, :k]
+        srt = np.take_along_axis(d, idx, axis=1).argsort(axis=1)
+        idx = np.take_along_axis(idx, srt, axis=1)
+        cand[mem, :k] = pool[idx]
+    return cand
+
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def _nn_descent_round(x: jax.Array, cand: jax.Array, metric: str) -> jax.Array:
+    """One neighbours-of-neighbours refinement round (batched)."""
+    n, r = cand.shape
+    sentinel = n
+    xp = jnp.concatenate([x, jnp.zeros((1, x.shape[1]), x.dtype)], 0)
+
+    def block(node_ids, cand_blk):
+        nbrs2 = cand.at[jnp.clip(cand_blk, 0, n - 1)].get(mode="clip")  # (b, r, r)
+        nbrs2 = jnp.where(cand_blk[:, :, None] >= n, sentinel, nbrs2)
+        pool = jnp.concatenate([cand_blk, nbrs2.reshape(cand_blk.shape[0], -1)], 1)
+        vecs = xp[jnp.clip(pool, 0, n)]  # (b, C, d)
+        q = x[node_ids]  # (b, d)
+        diff = vecs - q[:, None, :]
+        if metric == "l2":
+            d = jnp.sum(diff * diff, -1)
+        else:
+            d = -jnp.einsum("bcd,bd->bc", vecs, q)
+        invalid = (pool >= n) | (pool == node_ids[:, None])
+        d = jnp.where(invalid, jnp.inf, d)
+        # Dedup in O(C log C): identical ids have identical distances, so it
+        # is safe to keep an arbitrary single occurrence.  Sort ids, flag
+        # repeats, scatter flags back to original positions.
+        sort_idx = jnp.argsort(pool, axis=1)
+        pool_sorted = jnp.take_along_axis(pool, sort_idx, axis=1)
+        dup_sorted = jnp.concatenate(
+            [jnp.zeros((pool.shape[0], 1), bool), pool_sorted[:, 1:] == pool_sorted[:, :-1]], 1
+        )
+        dup = jnp.zeros_like(dup_sorted).at[
+            jnp.arange(pool.shape[0])[:, None], sort_idx
+        ].set(dup_sorted)
+        d = jnp.where(dup, jnp.inf, d)
+        _, top_idx = jax.lax.top_k(-d, r)
+        new_cand = jnp.take_along_axis(pool, top_idx, axis=1)
+        new_d = jnp.take_along_axis(d, top_idx, axis=1)
+        new_cand = jnp.where(jnp.isinf(new_d), sentinel, new_cand)
+        return new_cand.astype(jnp.int32)
+
+    bs = 1024
+    pad = (-n) % bs
+    ids = jnp.arange(n + pad, dtype=jnp.int32)
+    cand_p = jnp.concatenate([cand, jnp.full((pad, r), sentinel, jnp.int32)], 0)
+    out = jax.lax.map(
+        lambda args: block(*args),
+        (ids.reshape(-1, bs), cand_p.reshape(-1, bs, r)),
+    )
+    return out.reshape(-1, r)[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("m", "alpha", "metric"))
+def _robust_prune(x: jax.Array, cand: jax.Array, m: int, alpha: float, metric: str) -> jax.Array:
+    """Vectorized occlusion pruning (HNSW `select_neighbors_heuristic`).
+
+    Keep candidate c_i (ascending by distance) iff for every already-kept
+    c_j: alpha * d(c_i, c_j) >= d(node, c_i).
+    """
+    n, r = cand.shape
+    sentinel = n
+    xp = jnp.concatenate([x, jnp.zeros((1, x.shape[1]), x.dtype)], 0)
+
+    def block(node_ids, cand_blk):
+        vecs = xp[jnp.clip(cand_blk, 0, n)]  # (b, r, d)
+        q = x[node_ids]
+        if metric == "l2":
+            diff = vecs - q[:, None, :]
+            d_node = jnp.sum(diff * diff, -1)
+            cc = vecs[:, :, None, :] - vecs[:, None, :, :]
+            d_cc = jnp.sum(cc * cc, -1)  # (b, r, r)
+        else:
+            d_node = -jnp.einsum("brd,bd->br", vecs, q)
+            d_cc = -jnp.einsum("brd,bsd->brs", vecs, vecs)
+        invalid = cand_blk >= n
+        d_node = jnp.where(invalid, jnp.inf, d_node)
+        order = jnp.argsort(d_node, axis=1)
+        inv_d = jnp.take_along_axis(d_node, order, 1)
+        inv_c = jnp.take_along_axis(cand_blk, order, 1)
+        d_cc_o = jnp.take_along_axis(
+            jnp.take_along_axis(d_cc, order[:, :, None], 1), order[:, None, :], 2
+        )
+
+        def prune_one(dists, d_pair):
+            def body(i, kept):
+                occluded = jnp.any(kept & (alpha * d_pair[i] < dists[i]) & (jnp.arange(r) < i))
+                keep_i = jnp.isfinite(dists[i]) & ~occluded & (jnp.sum(kept) < m)
+                return kept.at[i].set(keep_i)
+
+            return jax.lax.fori_loop(0, r, body, jnp.zeros((r,), bool))
+
+        kept = jax.vmap(prune_one)(inv_d, d_cc_o)
+        ranked = jnp.where(kept, jnp.arange(r)[None, :], r)
+        slot = jnp.argsort(ranked, axis=1)[:, :m]
+        out = jnp.take_along_axis(inv_c, slot, 1)
+        out_kept = jnp.take_along_axis(kept, slot, 1)
+        return jnp.where(out_kept, out, sentinel).astype(jnp.int32)
+
+    bs = 1024
+    pad = (-n) % bs
+    ids = jnp.arange(n + pad, dtype=jnp.int32)
+    cand_p = jnp.concatenate([cand, jnp.full((pad, r), sentinel, jnp.int32)], 0)
+    out = jax.lax.map(
+        lambda args: block(*args), (ids.reshape(-1, bs), cand_p.reshape(-1, bs, r))
+    )
+    return out.reshape(-1, m)[:n]
+
+
+def _add_reverse_edges(neighbors: np.ndarray, m: int) -> np.ndarray:
+    """Host-side reverse-edge augmentation up to out-degree m (vectorized)."""
+    n = neighbors.shape[0]
+    nb = np.array(neighbors)
+    deg = (nb < n).sum(1)
+    out = np.full((n, m), n, np.int32)
+    # compact existing edges to the left
+    rows, cols = np.nonzero(nb < n)
+    rank_fwd = np.zeros_like(rows)
+    if rows.size:
+        # cumcount per row (rows are sorted by construction of nonzero)
+        first = np.r_[True, rows[1:] != rows[:-1]]
+        idx = np.arange(rows.size)
+        start = np.maximum.accumulate(np.where(first, idx, 0))
+        rank_fwd = idx - start
+    out[rows, rank_fwd] = nb[rows, cols]
+    # candidate reverse edges (v <- u), dropping ones already present
+    u, v = rows, nb[rows, cols].astype(np.int64)
+    key_exist = u.astype(np.int64) * (n + 1) + v
+    key_rev = v * (n + 1) + u
+    fresh = ~np.isin(key_rev, key_exist, assume_unique=False)
+    # dedup duplicate reverse pairs
+    key_rev_f = key_rev[fresh]
+    uniq, uniq_idx = np.unique(key_rev_f, return_index=True)
+    rv = v[fresh][uniq_idx]
+    ru = u[fresh][uniq_idx]
+    order = np.argsort(rv, kind="stable")
+    rv, ru = rv[order], ru[order]
+    if rv.size:
+        first = np.r_[True, rv[1:] != rv[:-1]]
+        idx = np.arange(rv.size)
+        start = np.maximum.accumulate(np.where(first, idx, 0))
+        rank = idx - start
+        slot = deg[rv] + rank
+        ok = slot < m
+        out[rv[ok], slot[ok]] = ru[ok]
+    return out
+
+
+def _repair_connectivity(neighbors: np.ndarray, x: np.ndarray, entry: int, metric: str) -> np.ndarray:
+    """Directed reachability repair: traversal follows out-edges, so repair
+    must too.  BFS from the entry; while nodes remain unreached, bridge the
+    closest (reached -> unreached) sampled pair bidirectionally and extend
+    the BFS from the new node.  Mirrors the connectivity HNSW gets from
+    insertion-time search, which a batch build must enforce explicitly."""
+    n = neighbors.shape[0]
+    out = np.array(neighbors)
+    rng = np.random.default_rng(0)
+    x2 = (x * x).sum(1)
+
+    reached = np.zeros(n, bool)
+
+    def bfs_from(seeds):
+        frontier = np.asarray(seeds, np.int64)
+        reached[frontier] = True
+        while frontier.size:
+            nxt = out[frontier].reshape(-1)
+            nxt = nxt[nxt < n]
+            nxt = np.unique(nxt)
+            nxt = nxt[~reached[nxt]]
+            reached[nxt] = True
+            frontier = nxt
+
+    bfs_from([entry])
+    for _ in range(n):  # each round strictly shrinks the unreached set
+        unreached = np.where(~reached)[0]
+        if unreached.size == 0:
+            break
+        r_nodes = np.where(reached)[0]
+        r_sample = r_nodes[rng.integers(0, r_nodes.size, min(4096, r_nodes.size))]
+        u_sample = unreached[rng.integers(0, unreached.size, min(1024, unreached.size))]
+        if metric == "l2":
+            dmat = (
+                x2[u_sample][:, None]
+                + x2[r_sample][None, :]
+                - 2.0 * (x[u_sample] @ x[r_sample].T)
+            )
+        else:
+            dmat = -(x[u_sample] @ x[r_sample].T)
+        i, j = np.unravel_index(np.argmin(dmat), dmat.shape)
+        u, v = int(u_sample[i]), int(r_sample[j])  # u unreached, v reached
+        for a, b in ((v, u), (u, v)):
+            slots = np.where(out[a] >= n)[0]
+            out[a, slots[0] if len(slots) else -1] = b
+        bfs_from([u])
+    return out
+
+
+def build_graph(
+    vectors: np.ndarray,
+    m: int = 16,
+    *,
+    n_candidates: int | None = None,
+    n_build_clusters: int | None = None,
+    link: int = 4,
+    nn_descent_rounds: int = 1,
+    prune_alpha: float = 1.2,
+    metric: str = "l2",
+    seed: int = 0,
+) -> GraphIndex:
+    """Build a flat navigable proximity graph with max out-degree ``m``."""
+    x = np.asarray(vectors, np.float32)
+    n, d = x.shape
+    n_candidates = n_candidates or max(2 * m, 16)
+    n_build_clusters = n_build_clusters or max(8, min(n // 128, 4096))
+    km = kmeans(jnp.asarray(x), n_build_clusters, iters=8, seed=seed, metric=metric)
+    assign = np.asarray(km.assignments)
+    cand = _topk_neighbors_in_pools(
+        x, assign, np.asarray(km.centroids), n_candidates, link, metric
+    )
+    xj = jnp.asarray(x)
+    cand_j = jnp.asarray(cand)
+    for _ in range(nn_descent_rounds):
+        cand_j = _nn_descent_round(xj, cand_j, metric)
+    pruned = _robust_prune(xj, cand_j, m, prune_alpha, metric)
+    neighbors = _add_reverse_edges(np.asarray(pruned), m)
+    # medoid entry: point nearest to the global mean
+    mean = x.mean(0, keepdims=True)
+    entry = int(np.argmin(np.asarray(pairwise(jnp.asarray(mean), xj, metric))[0]))
+    neighbors = _repair_connectivity(neighbors, x, entry, metric)
+    return GraphIndex(jnp.asarray(neighbors), jnp.asarray(np.int32(entry)))

@@ -1,0 +1,112 @@
+"""CompassIndex: the composed index of §IV.A.
+
+Components (one per paper element):
+  * ``graph``     — proximity graph over all record vectors (HNSW role).
+  * ``centroids`` — IVF layer.  The paper additionally builds a small
+    proximity graph over the centroids for "on-demand" cluster ranking
+    (§IV.C) because a CPU linear scan over many centroids is expensive.
+    On TPU a full centroid scan is a single (B, nlist) x (nlist, d) MXU
+    matmul — cheaper than pointer-chasing — so the ranking is computed
+    exactly in one shot and consumed *on demand* through a cursor, which
+    preserves the paper's semantics (clusters visited in centroid-distance
+    order, only as many as needed) while deleting the nprobe-tuning problem
+    the same way the paper's cluster graph does.  (DESIGN.md §Adaptation.)
+  * ``medoids``   — per-cluster medoid record, used for query-adaptive
+    graph entry (the role HNSW's upper layers play on CPU).
+  * ``cattrs``    — clustered per-attribute sorted permutations (the
+    clustered B+-trees).
+
+``vectors`` / ``attrs`` are stored padded with one sentinel row (index N) so
+fixed-shape gathers of sentinel edges read harmless data that is masked out.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .clustered_attrs import ClusteredAttrs, build_clustered_attrs
+from .distances import pairwise
+from .graph_build import GraphIndex, build_graph
+from .kmeans import kmeans
+
+
+class CompassIndex(NamedTuple):
+    vectors: jax.Array  # (N + 1, d) padded
+    attrs: jax.Array  # (N + 1, A) padded (sentinel row fails all predicates)
+    graph: GraphIndex  # neighbors (N, M), entry (global medoid fallback)
+    centroids: jax.Array  # (nlist, d)
+    medoids: jax.Array  # (nlist,) int32 — medoid record id per cluster
+    cattrs: ClusteredAttrs
+
+    @property
+    def n_records(self) -> int:
+        return self.vectors.shape[0] - 1
+
+    @property
+    def dim(self) -> int:
+        return self.vectors.shape[1]
+
+    @property
+    def n_attrs(self) -> int:
+        return self.attrs.shape[1]
+
+    @property
+    def nlist(self) -> int:
+        return self.centroids.shape[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class BuildConfig:
+    m: int = 16  # graph max out-degree
+    nlist: int = 64  # IVF cluster count
+    kmeans_iters: int = 10
+    nn_descent_rounds: int = 1
+    prune_alpha: float = 1.2
+    metric: str = "l2"
+    seed: int = 0
+
+
+def build_index(vectors: np.ndarray, attrs: np.ndarray, cfg: BuildConfig = BuildConfig()) -> CompassIndex:
+    vectors = np.asarray(vectors, np.float32)
+    attrs = np.asarray(attrs, np.float32)
+    n, d = vectors.shape
+    graph = build_graph(
+        vectors,
+        cfg.m,
+        nn_descent_rounds=cfg.nn_descent_rounds,
+        prune_alpha=cfg.prune_alpha,
+        metric=cfg.metric,
+        seed=cfg.seed,
+    )
+    km = kmeans(jnp.asarray(vectors), cfg.nlist, iters=cfg.kmeans_iters, seed=cfg.seed, metric=cfg.metric)
+    centroids = np.asarray(km.centroids)
+    assign = np.asarray(km.assignments)
+    # per-cluster medoid: member closest to the centroid
+    medoids = np.zeros((cfg.nlist,), np.int32)
+    x2 = (vectors * vectors).sum(1)
+    for c in range(cfg.nlist):
+        members = np.where(assign == c)[0]
+        if members.size == 0:
+            medoids[c] = graph.entry
+            continue
+        xy = vectors[members] @ centroids[c]
+        dd = x2[members] - 2.0 * xy if cfg.metric == "l2" else -xy
+        medoids[c] = members[np.argmin(dd)]
+    cattrs = build_clustered_attrs(attrs, assign, cfg.nlist)
+    # Sentinel padding rows. Attr sentinel = +inf fails every closed interval
+    # whose hi is finite; predicates with hi = +inf (one-sided) are protected
+    # by the validity masks in search, this is defence-in-depth.
+    vpad = np.concatenate([vectors, np.zeros((1, d), np.float32)], 0)
+    apad = np.concatenate([attrs, np.full((1, attrs.shape[1]), np.inf, np.float32)], 0)
+    return CompassIndex(
+        jnp.asarray(vpad),
+        jnp.asarray(apad),
+        graph,
+        jnp.asarray(centroids),
+        jnp.asarray(medoids),
+        cattrs,
+    )

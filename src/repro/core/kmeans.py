@@ -1,0 +1,99 @@
+"""Mini-batch-free Lloyd k-means in JAX, used to build the IVF layer.
+
+The IVF component of Compass (§IV.A) groups records into ``nlist`` clusters
+by vector; per-cluster relational indices are then built within each
+cluster.  On TPU the assignment step is a (N, nlist) distance matmul — MXU
+friendly — and the update step is a segment-sum; both are ``jit``-able and
+shardable along N.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .distances import pairwise
+
+
+class KMeansResult(NamedTuple):
+    centroids: jax.Array  # (k, d)
+    assignments: jax.Array  # (n,) int32
+    inertia: jax.Array  # () f32
+
+
+def _assign_blocked(x: jax.Array, centroids: jax.Array, block: int, metric: str):
+    """Blocked assignment to bound peak memory for large (n, k)."""
+    n = x.shape[0]
+    k = centroids.shape[0]
+    pad = (-n) % block
+    xp = jnp.pad(x, ((0, pad), (0, 0)))
+    nb = xp.shape[0] // block
+
+    def body(carry, xb):
+        d = pairwise(xb, centroids, metric)  # (block, k)
+        idx = jnp.argmin(d, axis=-1).astype(jnp.int32)
+        best = jnp.min(d, axis=-1)
+        return carry, (idx, best)
+
+    _, (idx, best) = jax.lax.scan(body, 0, xp.reshape(nb, block, -1))
+    return idx.reshape(-1)[:n], best.reshape(-1)[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _kmeanspp_init(x: jax.Array, k: int, key: jax.Array) -> jax.Array:
+    """k-means++ seeding (D² sampling) — avoids the merged-mode local optima
+    random init falls into on multi-modal corpora."""
+    n, d = x.shape
+    key, sub = jax.random.split(key)
+    first = jax.random.randint(sub, (), 0, n)
+    c0 = x[first]
+    min_d2 = jnp.sum((x - c0[None, :]) ** 2, axis=-1)
+
+    def body(i, carry):
+        centroids, min_d2, key = carry
+        key, sub = jax.random.split(key)
+        probs = jnp.maximum(min_d2, 1e-12)
+        idx = jax.random.categorical(sub, jnp.log(probs))
+        c = x[idx]
+        centroids = centroids.at[i].set(c)
+        d2 = jnp.sum((x - c[None, :]) ** 2, axis=-1)
+        return centroids, jnp.minimum(min_d2, d2), key
+
+    centroids = jnp.zeros((k, d), x.dtype).at[0].set(c0)
+    centroids, _, _ = jax.lax.fori_loop(1, k, body, (centroids, min_d2, key))
+    return centroids
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters", "block", "metric"))
+def kmeans(
+    x: jax.Array,
+    k: int,
+    *,
+    iters: int = 12,
+    seed: int = 0,
+    block: int = 4096,
+    metric: str = "l2",
+) -> KMeansResult:
+    """Lloyd's algorithm with k-means++ init and empty-cluster repair."""
+    n, d = x.shape
+    key = jax.random.PRNGKey(seed)
+    centroids = _kmeanspp_init(x, k, key)
+
+    def step(carry, _):
+        centroids, key = carry
+        idx, best = _assign_blocked(x, centroids, block, metric)
+        one_hot_sum = jax.ops.segment_sum(x, idx, num_segments=k)  # (k, d)
+        counts = jax.ops.segment_sum(jnp.ones((n,), x.dtype), idx, num_segments=k)
+        new_centroids = one_hot_sum / jnp.maximum(counts[:, None], 1.0)
+        # Empty-cluster repair: reseed from the points with the largest error.
+        key, sub = jax.random.split(key)
+        far_idx = jnp.argsort(-best)[:k]  # k farthest points
+        empty = counts < 0.5
+        new_centroids = jnp.where(empty[:, None], x[far_idx], new_centroids)
+        return (new_centroids, key), jnp.sum(best)
+
+    (centroids, _), inertias = jax.lax.scan(step, (centroids, key), None, length=iters)
+    idx, best = _assign_blocked(x, centroids, block, metric)
+    return KMeansResult(centroids, idx, jnp.sum(best))

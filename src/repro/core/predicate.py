@@ -1,0 +1,203 @@
+"""Predicate representation and vectorized evaluation for general filtered search.
+
+The paper (Compass, §II.A) defines a filtered query ``Q = (q, p)`` where ``p``
+is an arbitrary boolean combination (conjunctions / disjunctions) of range and
+equality conditions over numerical attributes.
+
+TPU adaptation: pointer-based predicate trees do not vectorize, so predicates
+are normalized to **DNF interval tensors**:
+
+    lo, hi : (T, A) float32   -- T disjuncts, A attributes, closed intervals.
+
+``pass(x) = OR_t AND_a (lo[t, a] <= x[a] <= hi[t, a])``
+
+* A pure conjunction is ``T == 1``.
+* A disjunction of single-attribute ranges is ``T == n_attrs`` with each row
+  constraining exactly one attribute (others are [-inf, +inf]).
+* Equality on a discrete attribute is the degenerate interval [v, v].
+
+This covers every predicate class in the paper's Table I (equality,
+comparison, range, conjunction, disjunction) with fully static shapes, at the
+cost of potential DNF blow-up for deeply-nested mixed trees (documented in
+DESIGN.md; the helper :class:`Pred` performs the tree -> DNF conversion).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = float(np.finfo(np.float32).min)
+POS_INF = float(np.finfo(np.float32).max)
+
+
+class Predicate(NamedTuple):
+    """DNF interval predicate. Arrays of shape (T, A) (or batched (B, T, A))."""
+
+    lo: jax.Array
+    hi: jax.Array
+
+    @property
+    def n_terms(self) -> int:
+        return self.lo.shape[-2]
+
+    @property
+    def n_attrs(self) -> int:
+        return self.lo.shape[-1]
+
+
+def always_true(n_attrs: int, n_terms: int = 1) -> Predicate:
+    lo = jnp.full((n_terms, n_attrs), NEG_INF, jnp.float32)
+    hi = jnp.full((n_terms, n_attrs), POS_INF, jnp.float32)
+    return Predicate(lo, hi)
+
+
+def evaluate(pred: Predicate, attrs: jax.Array) -> jax.Array:
+    """Evaluate predicate on attribute rows.
+
+    attrs: (..., A) -> bool (...,). Broadcasts the (T, A) terms over leading
+    dims of ``attrs``.
+    """
+    a = attrs[..., None, :]  # (..., 1, A)
+    term_ok = jnp.all((a >= pred.lo) & (a <= pred.hi), axis=-1)  # (..., T)
+    return jnp.any(term_ok, axis=-1)
+
+
+def term_bounds(pred: Predicate, term: jax.Array, attr: jax.Array):
+    """Bounds (lo, hi) for a given (term, attr) pair (dynamic indices)."""
+    return pred.lo[term, attr], pred.hi[term, attr]
+
+
+def chosen_attrs(pred: Predicate) -> jax.Array:
+    """Per-term attribute used to drive the clustered relational scan.
+
+    The paper picks a *random* attribute per B+-tree probe and linearly
+    filters the rest (§IV.D "Limitations").  We default to the tightest
+    constrained attribute per term (smallest interval width) which is the
+    classic "most selective first" planning rule — a strict, cheap
+    improvement the paper itself suggests.  Unconstrained attributes have
+    infinite width so they are never chosen unless the term is
+    unconstrained everywhere.
+    """
+    width = pred.hi - pred.lo  # (T, A)
+    return jnp.argmin(width, axis=-1)  # (T,)
+
+
+# ---------------------------------------------------------------------------
+# Host-side predicate construction helpers (tree -> DNF tensors).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Pred:
+    """Host-side predicate tree node.
+
+    Build with the class methods then call :meth:`to_dnf` / :meth:`tensor`.
+
+        p = Pred.and_(Pred.range(0, 0.2, 0.5), Pred.ge(1, 0.9))
+        pred = p.tensor(n_attrs=4)
+    """
+
+    kind: str  # 'leaf' | 'and' | 'or'
+    attr: int = -1
+    lo: float = NEG_INF
+    hi: float = POS_INF
+    children: tuple = ()
+
+    # -- constructors -------------------------------------------------------
+    @staticmethod
+    def range(attr: int, lo: float, hi: float) -> "Pred":
+        return Pred("leaf", attr=attr, lo=float(lo), hi=float(hi))
+
+    @staticmethod
+    def eq(attr: int, value: float) -> "Pred":
+        return Pred("leaf", attr=attr, lo=float(value), hi=float(value))
+
+    @staticmethod
+    def le(attr: int, value: float) -> "Pred":
+        return Pred("leaf", attr=attr, lo=NEG_INF, hi=float(value))
+
+    @staticmethod
+    def ge(attr: int, value: float) -> "Pred":
+        return Pred("leaf", attr=attr, lo=float(value), hi=POS_INF)
+
+    @staticmethod
+    def and_(*children: "Pred") -> "Pred":
+        return Pred("and", children=tuple(children))
+
+    @staticmethod
+    def or_(*children: "Pred") -> "Pred":
+        return Pred("or", children=tuple(children))
+
+    # -- DNF conversion ------------------------------------------------------
+    def to_dnf(self) -> list[dict[int, tuple[float, float]]]:
+        """Returns a list of conjunctive terms: {attr: (lo, hi)}."""
+        if self.kind == "leaf":
+            return [{self.attr: (self.lo, self.hi)}]
+        if self.kind == "and":
+            terms: list[dict[int, tuple[float, float]]] = [{}]
+            for child in self.children:
+                child_terms = child.to_dnf()
+                new_terms = []
+                for t in terms:
+                    for ct in child_terms:
+                        merged = dict(t)
+                        ok = True
+                        for a, (lo, hi) in ct.items():
+                            plo, phi = merged.get(a, (NEG_INF, POS_INF))
+                            nlo, nhi = max(plo, lo), min(phi, hi)
+                            if nlo > nhi:  # empty interval: drop term
+                                ok = False
+                                break
+                            merged[a] = (nlo, nhi)
+                        if ok:
+                            new_terms.append(merged)
+                terms = new_terms
+            return terms
+        if self.kind == "or":
+            out = []
+            for child in self.children:
+                out.extend(child.to_dnf())
+            return out
+        raise ValueError(self.kind)
+
+    def tensor(self, n_attrs: int, n_terms: int | None = None) -> Predicate:
+        """Lower to (T, A) interval tensors; pads with empty terms."""
+        dnf = self.to_dnf()
+        if not dnf:
+            dnf = [{0: (POS_INF, NEG_INF)}]  # unsatisfiable
+        T = n_terms if n_terms is not None else len(dnf)
+        if len(dnf) > T:
+            raise ValueError(f"DNF has {len(dnf)} terms > requested {T}")
+        lo = np.full((T, n_attrs), NEG_INF, np.float32)
+        hi = np.full((T, n_attrs), POS_INF, np.float32)
+        for t, term in enumerate(dnf):
+            for a, (l, h) in term.items():
+                lo[t, a] = l
+                hi[t, a] = h
+        # Pad rows: unsatisfiable (lo > hi on attr 0).
+        for t in range(len(dnf), T):
+            lo[t, 0], hi[t, 0] = POS_INF, NEG_INF
+        return Predicate(jnp.asarray(lo), jnp.asarray(hi))
+
+
+def stack_predicates(preds: Sequence[Predicate]) -> Predicate:
+    """Stack per-query predicates into batched (B, T, A) tensors (pads T)."""
+    T = max(p.n_terms for p in preds)
+    A = preds[0].n_attrs
+    los, his = [], []
+    for p in preds:
+        lo = np.asarray(p.lo, np.float32)
+        hi = np.asarray(p.hi, np.float32)
+        if lo.shape[0] < T:
+            pad_lo = np.full((T - lo.shape[0], A), NEG_INF, np.float32)
+            pad_hi = np.full((T - hi.shape[0], A), POS_INF, np.float32)
+            pad_lo[:, 0], pad_hi[:, 0] = POS_INF, NEG_INF  # unsatisfiable pad
+            lo = np.concatenate([lo, pad_lo], 0)
+            hi = np.concatenate([hi, pad_hi], 0)
+        los.append(lo)
+        his.append(hi)
+    return Predicate(jnp.asarray(np.stack(los)), jnp.asarray(np.stack(his)))

@@ -1,0 +1,87 @@
+"""Deterministic, shard-aware synthetic data pipelines.
+
+Token stream: a mixture of Zipfian unigrams and copied n-gram motifs so a
+~100M model trained for a few hundred steps shows a *decreasing* loss curve
+(pure uniform tokens would pin loss at log V).
+
+Shard-awareness / fault tolerance: batches are a pure function of
+(seed, step, shard) — any worker can deterministically regenerate any batch
+after a restart, and elastic re-sharding just changes the (shard, n_shards)
+split with no coordination state.  This mirrors how deterministic data
+pipelines are built at scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 1234
+    zipf_a: float = 1.2
+    motif_len: int = 16
+    n_motifs: int = 512
+
+
+class SyntheticTokens:
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        # fixed motif bank (regenerated identically on every worker)
+        ranks = np.arange(1, cfg.vocab_size + 1, dtype=np.float64)
+        p = ranks ** (-cfg.zipf_a)
+        self.probs = p / p.sum()
+        self.motifs = rng.choice(
+            cfg.vocab_size, size=(cfg.n_motifs, cfg.motif_len), p=self.probs
+        ).astype(np.int32)
+
+    def batch(self, step: int, shard: int = 0, n_shards: int = 1) -> dict:
+        """Batch for (step, shard). tokens/labels: (global_batch/n_shards, seq)."""
+        cfg = self.cfg
+        assert cfg.global_batch % n_shards == 0
+        bsz = cfg.global_batch // n_shards
+        rng = np.random.default_rng((cfg.seed, step, shard))
+        toks = rng.choice(cfg.vocab_size, size=(bsz, cfg.seq_len + 1), p=self.probs).astype(
+            np.int32
+        )
+        # splice motifs (learnable structure)
+        n_splice = max(1, cfg.seq_len // (4 * cfg.motif_len))
+        for b in range(bsz):
+            for _ in range(n_splice):
+                m = rng.integers(0, cfg.n_motifs)
+                pos = rng.integers(0, cfg.seq_len + 1 - cfg.motif_len)
+                toks[b, pos : pos + cfg.motif_len] = self.motifs[m]
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+def make_vector_corpus(
+    n: int,
+    dim: int,
+    n_attrs: int,
+    *,
+    n_modes: int = 64,
+    mode_scale: float = 3.0,
+    attr_correlated: bool = False,
+    seed: int = 0,
+):
+    """Clustered Gaussian corpus + uniform attributes (paper §V.A augments
+    real vector sets with 4 uniformly generated relational attributes).
+
+    attr_correlated=True ties attr 0 to the mode id — the adversarial case
+    where relational locality aligns with vector locality.
+    """
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(n_modes, dim)).astype(np.float32) * mode_scale
+    modes = rng.integers(0, n_modes, n)
+    x = (centers[modes] + rng.normal(size=(n, dim))).astype(np.float32)
+    attrs = rng.uniform(size=(n, n_attrs)).astype(np.float32)
+    if attr_correlated:
+        attrs[:, 0] = (modes + rng.uniform(size=n)) / n_modes
+    queries_modes = rng.integers(0, n_modes, 1024)
+    queries = (centers[queries_modes] + rng.normal(size=(1024, dim))).astype(np.float32)
+    return x, attrs, queries

@@ -1,0 +1,49 @@
+"""Elastic scaling: resume a run on a different mesh shape.
+
+Because (a) checkpoints are mesh-agnostic (checkpoint.restore re-device_puts
+every leaf with the *target* shardings) and (b) the data pipeline is a pure
+function of (seed, step, shard), growing 256 -> 512 chips or shrinking after
+losing a pod is: stop, restart with the new mesh, restore, continue — no
+resharding service needed.  This module holds the policy arithmetic the
+launcher uses.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    old_devices: int
+    new_devices: int
+    global_batch: int
+
+    @property
+    def per_device_batch_old(self) -> int:
+        return self.global_batch // self.old_devices
+
+    @property
+    def per_device_batch_new(self) -> int:
+        return self.global_batch // self.new_devices
+
+    def validate(self) -> list[str]:
+        """Constraints a resize must satisfy to preserve run semantics."""
+        problems = []
+        if self.global_batch % self.new_devices:
+            problems.append(
+                f"global_batch {self.global_batch} not divisible by "
+                f"{self.new_devices} devices; adjust microbatching"
+            )
+        return problems
+
+
+def remap_data_shards(step: int, old_shards: int, new_shards: int) -> dict:
+    """Deterministic pipeline means shard remapping is pure bookkeeping:
+    the new worker s regenerates batch(step, s, new_shards).  Returns an
+    audit record for the run log."""
+    return {
+        "step": step,
+        "old_shards": old_shards,
+        "new_shards": new_shards,
+        "note": "batches are pure f(seed, step, shard); no data motion",
+    }

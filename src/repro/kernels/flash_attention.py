@@ -1,0 +1,108 @@
+"""Causal flash-attention forward Pallas kernel (GQA-aware).
+
+Tiling (TPU-native):
+  grid = (B, H, S/BQ, T/BK) — the kv dimension is the innermost grid axis;
+  streaming-softmax state (m, l, acc) lives in VMEM scratch and survives
+  across kv steps (TPU grids iterate sequentially, so scratch carries).
+  q tile (BQ, dh) stays resident; k/v tiles (BK, dh) stream HBM->VMEM.
+  Scores (BQ, BK) land on the MXU; hardware-aligned 128-multiples.
+
+GQA: the kv-head index_map folds h -> h // group so grouped query heads
+re-read the same kv tile (VMEM-cached across consecutive h steps).
+
+VMEM per step: BQ*dh + 2*BK*dh + BQ*BK + BQ*(dh+2) floats
+            (= 512*128 + 2*512*128 + 512*512 + ... ~ 1.6 MB at defaults).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, bq, bk, nk, scale, seq_q, seq_k):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (bq, dh)
+    k = k_ref[0, 0].astype(jnp.float32)  # (bk, dh)
+    sc = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (bq, bk)
+    rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    cols = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    valid = (cols <= rows) & (cols < seq_k) & (rows < seq_q)
+    sc = jnp.where(valid, sc, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, sc.max(axis=1))
+    p = jnp.exp(sc - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+    v = v_ref[0, 0].astype(jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bk", "interpret"))
+def flash_attention(
+    q: jax.Array,  # (B, S, H, dh)
+    k: jax.Array,  # (B, T, KV, dh)
+    v: jax.Array,  # (B, T, KV, dh)
+    *,
+    bq: int = 512,
+    bk: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """Causal attention output (B, S, H, dh)."""
+    b, s, h, dh = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    group = h // kvh
+    scale = 1.0 / math.sqrt(dh)
+    pq, pk = (-s) % bq, (-t) % bk
+    qp = jnp.moveaxis(jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0))), 2, 1)  # (b,h,S,dh)
+    kp = jnp.moveaxis(jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0))), 2, 1)
+    vp = jnp.moveaxis(jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0))), 2, 1)
+    nq, nk = qp.shape[2] // bq, kp.shape[2] // bk
+    grid = (b, h, nq, nk)
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, bq=bq, bk=bk, nk=nk, scale=scale, seq_q=s, seq_k=t
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, dh), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, bk, dh), lambda bi, hi, qi, ki: (bi, hi // group, ki, 0)),
+            pl.BlockSpec((1, 1, bk, dh), lambda bi, hi, qi, ki: (bi, hi // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, dh), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(qp.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    out = jnp.moveaxis(out, 1, 2)[:, :s]
+    return out

@@ -1,0 +1,69 @@
+"""IVF centroid scoring Pallas kernel: blocked (B, C) squared-L2 distance
+matrix on the MXU.
+
+This is Compass's B.OPEN step (exact centroid ranking; see index.py for why
+the TPU replaces the paper's cluster graph with a scan).  Tiling:
+
+  grid = (B/BB, C/BC, d/BD)   —  classic three-loop matmul blocking
+  VMEM per step: BB*BD (queries) + BC*BD (centroids) + BB*BC f32 (acc)
+
+with hardware-aligned tiles (128-multiples) so the -2*q@c^T term lands on
+the MXU; ||q||^2 / ||c||^2 fold in on the final d-block.  The accumulator
+lives in the output block across the d-grid (revisited dimension).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, c_ref, out_ref, *, nd_blocks):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    qb = q_ref[...].astype(jnp.float32)  # (BB, BD)
+    cb = c_ref[...].astype(jnp.float32)  # (BC, BD)
+    acc = out_ref[...]
+    acc += -2.0 * jax.lax.dot_general(
+        qb, cb, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    acc += jnp.sum(qb * qb, axis=1, keepdims=True)
+    acc += jnp.sum(cb * cb, axis=1)[None, :]
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("bb", "bc", "bd", "interpret"))
+def ivf_score(
+    queries: jax.Array,  # (B, d)
+    centroids: jax.Array,  # (C, d)
+    *,
+    bb: int = 8,
+    bc: int = 128,
+    bd: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Squared L2 distances (B, C)."""
+    b, d = queries.shape
+    c = centroids.shape[0]
+    pb, pc, pd = (-b) % bb, (-c) % bc, (-d) % bd
+    qp = jnp.pad(queries, ((0, pb), (0, pd)))
+    cp = jnp.pad(centroids, ((0, pc), (0, pd)))
+    grid = (qp.shape[0] // bb, cp.shape[0] // bc, qp.shape[1] // bd)
+    out = pl.pallas_call(
+        functools.partial(_kernel, nd_blocks=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, bd), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bc, bd), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((bb, bc), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((qp.shape[0], cp.shape[0]), jnp.float32),
+        interpret=interpret,
+    )(qp, cp)
+    return out[:b, :c]

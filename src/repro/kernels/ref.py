@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def filter_distance_ref(vectors, attrs, idx, mask, q, lo, hi):
+    n = vectors.shape[0] - 1
+    safe = jnp.where(mask, jnp.clip(idx, 0, n), n)
+    vec = vectors[safe]
+    diff = (vec - q[None, :]).astype(jnp.float32)
+    dist = jnp.sum(diff * diff, axis=-1)
+    a = attrs[safe]
+    term_ok = jnp.all((a[:, None, :] >= lo[None]) & (a[:, None, :] <= hi[None]), axis=-1)
+    passed = jnp.any(term_ok, axis=-1) & mask
+    return jnp.where(mask, dist, jnp.inf), passed
+
+
+def ivf_score_ref(queries, centroids):
+    q2 = jnp.sum(queries.astype(jnp.float32) ** 2, axis=1, keepdims=True)
+    c2 = jnp.sum(centroids.astype(jnp.float32) ** 2, axis=1)
+    qc = queries.astype(jnp.float32) @ centroids.astype(jnp.float32).T
+    return q2 + c2[None, :] - 2.0 * qc
+
+
+def flash_attention_ref(q, k, v):
+    """Dense causal GQA attention in f32."""
+    b, s, h, d = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, s, kvh, g, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, kf) / math.sqrt(d)
+    mask = jnp.arange(t)[None, :] <= jnp.arange(s)[:, None]
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, h, d).astype(q.dtype)

@@ -1,0 +1,160 @@
+"""ShapeDtypeStruct stand-ins for every dry-run cell: weak-type-correct,
+shardable, zero allocation.
+
+For each (arch, shape) cell this module produces the abstract arguments the
+lowered step consumes:
+  train   : (params, opt_state, batch{tokens, labels[, prefix/frame embeds]})
+  prefill : (params, batch, empty caches)
+  decode  : (params, tokens|frame, caches @ seq_len, cache_pos)
+plus the matching NamedShardings from launch.shardings.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.model import init_caches, init_params
+from repro.optim.adamw import init_opt_state
+
+from .mesh import data_axes
+from .shardings import (
+    _ns,
+    batch_shardings,
+    cache_shardings,
+    opt_state_shardings,
+    param_shardings,
+)
+
+
+def _sds(tree):
+    return jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
+
+
+def abstract_params(cfg: ModelConfig, bf16_weights: bool = False):
+    """bf16_weights: store >=2D weights in bf16 (f32 master-less training
+    with f32 moments — §Perf hillclimb: halves param memory, param HBM
+    reads, and FSDP all-gather bytes)."""
+    ap = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+    if not bf16_weights:
+        return ap
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, jnp.bfloat16 if l.ndim >= 2 else l.dtype),
+        ap,
+    )
+
+
+def abstract_opt_state(aparams):
+    return jax.eval_shape(init_opt_state, aparams)
+
+
+def token_batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh) -> tuple[dict, dict]:
+    """(abstract batch, shardings) for a train batch."""
+    da = data_axes(mesh)
+    bspec = da if len(da) > 1 else (da[0] if da else None)
+    gb, s = shape.global_batch, shape.seq_len
+    batch: dict[str, Any] = {}
+    shard: dict[str, Any] = {}
+    if cfg.embed_inputs and cfg.frontend != "frame":
+        batch["tokens"] = jax.ShapeDtypeStruct((gb, s), jnp.int32)
+        shard["tokens"] = _ns(mesh, P(bspec, None), (gb, s))
+    else:  # audio stub: precomputed frame embeddings
+        batch["inputs_embeds"] = jax.ShapeDtypeStruct((gb, s, cfg.d_model), jnp.bfloat16)
+        shard["inputs_embeds"] = _ns(mesh, P(bspec, None, None), (gb, s, cfg.d_model))
+    if cfg.frontend == "patch":
+        batch["prefix_embeds"] = jax.ShapeDtypeStruct((gb, cfg.n_prefix, cfg.d_model), jnp.bfloat16)
+        shard["prefix_embeds"] = _ns(mesh, P(bspec, None, None), (gb, cfg.n_prefix, cfg.d_model))
+    batch["labels"] = jax.ShapeDtypeStruct((gb, s), jnp.int32)
+    shard["labels"] = _ns(mesh, P(bspec, None), (gb, s))
+    return batch, shard
+
+
+def decode_token_specs(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    da = data_axes(mesh)
+    bspec = da if len(da) > 1 else (da[0] if da else None)
+    gb = shape.global_batch
+    if cfg.embed_inputs:
+        tok = jax.ShapeDtypeStruct((gb, 1), jnp.int32)
+        shard = _ns(mesh, P(bspec, None), (gb, 1))
+    else:
+        tok = jax.ShapeDtypeStruct((gb, 1, cfg.d_model), jnp.bfloat16)
+        shard = _ns(mesh, P(bspec, None, None), (gb, 1, cfg.d_model))
+    return tok, shard
+
+
+def abstract_caches(cfg: ModelConfig, shape: ShapeConfig):
+    return jax.eval_shape(lambda: init_caches(cfg, shape.global_batch, shape.seq_len))
+
+
+def pick_microbatches(cfg: ModelConfig, shape: ShapeConfig, mesh, tokens_budget: int = 8192) -> int:
+    """Choose grad-accumulation microbatches so per-device live activation
+    tokens per microbatch stay near the budget (§Perf memory knob)."""
+    da = data_axes(mesh)
+    n_data = 1
+    for a in da:
+        n_data *= mesh.shape[a]
+    per_dev_batch = max(1, shape.global_batch // n_data)
+    per_dev_tokens = per_dev_batch * shape.seq_len
+    nm = max(1, math.ceil(per_dev_tokens / tokens_budget))
+    nm = min(nm, per_dev_batch)
+    # nm must divide global batch
+    while shape.global_batch % nm:
+        nm -= 1
+    return max(1, nm)
+
+
+def input_specs(
+    cfg: ModelConfig, shape: ShapeConfig, mesh,
+    bf16_weights: bool = False, decode_tp: bool = True,
+) -> dict:
+    """Everything dryrun.py needs for one cell.
+
+    decode steps default to weight-stationary TP (decode_tp) and bf16
+    weights — inference has no optimizer so FSDP buys nothing and costs a
+    full param re-gather per token (§Perf)."""
+    if shape.kind == "decode":
+        bf16_weights = True
+    aparams = abstract_params(cfg, bf16_weights)
+    mode = "tp" if (shape.kind == "decode" and decode_tp) else "fsdp"
+    p_shard = param_shardings(aparams, cfg, mesh, mode=mode)
+    out = {"params": aparams, "param_shardings": p_shard}
+    da = data_axes(mesh)
+    bspec = da if len(da) > 1 else (da[0] if da else None)
+    # sequence-parallel residuals between layers (norms stay local on D);
+    # decode has s == 1, so no activation constraint there
+    if shape.kind in ("train", "prefill") and shape.seq_len % max(mesh.shape.get("model", 1), 1) == 0:
+        out["act_sharding"] = NamedSharding(mesh, P(bspec, "model", None))
+    else:
+        out["act_sharding"] = None
+
+    if shape.kind == "train":
+        aopt = abstract_opt_state(aparams)
+        out["opt_state"] = aopt
+        out["opt_shardings"] = opt_state_shardings(aopt, p_shard)
+        batch, bshard = token_batch_specs(cfg, shape, mesh)
+        out["batch"] = batch
+        out["batch_shardings"] = bshard
+        out["n_microbatches"] = pick_microbatches(cfg, shape, mesh)
+    elif shape.kind == "prefill":
+        batch, bshard = token_batch_specs(cfg, shape, mesh)
+        batch.pop("labels")
+        bshard.pop("labels")
+        out["batch"] = batch
+        out["batch_shardings"] = bshard
+        ac = abstract_caches(cfg, shape)
+        out["caches"] = ac
+        out["cache_shardings"] = cache_shardings(ac, cfg, mesh, shape)
+    else:  # decode
+        tok, tshard = decode_token_specs(cfg, shape, mesh)
+        out["tokens"] = tok
+        out["token_shardings"] = tshard
+        ac = abstract_caches(cfg, shape)
+        out["caches"] = ac
+        out["cache_shardings"] = cache_shardings(ac, cfg, mesh, shape)
+        out["cache_pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+    return out

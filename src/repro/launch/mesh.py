@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+Axes:
+  pod   — inter-pod data parallelism (gradient all-reduce crosses the slow
+          inter-pod links; see optim.compression for the int8 path)
+  data  — intra-pod data parallelism + FSDP parameter/optimizer sharding
+  model — tensor / expert / sequence-parallel axis (fast ICI ring)
+
+A function, not a module-level constant: importing this module must never
+touch jax device state (dryrun.py sets XLA_FLAGS *before* first jax use).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh():
+    """Single-device mesh for CPU smoke runs (same axis names)."""
+    return jax.make_mesh(
+        (1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2
+    )
+
+
+def data_axes(mesh) -> tuple:
+    """Axes that shard the batch: ('pod','data') when pod exists."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -1,0 +1,232 @@
+"""Sharding rules: parameters (FSDP x TP x EP), caches, and batches.
+
+Strategy (DESIGN.md §Distribution):
+  * 2D weight sharding: the "parallel" output dim of each projection goes to
+    'model' (TP), the other big dim to 'data' (FSDP/ZeRO-3 — XLA inserts the
+    per-layer all-gathers; with lax.scan these happen once per layer step).
+  * MoE experts shard across 'model' (EP); within-expert dims take 'data'.
+  * Vocab: embed rows / head columns on 'model' so the (B,S,V) logits are
+    vocab-sharded (cross-entropy reduces with an all-reduce, never
+    materializing replicated 256k-wide logits).
+  * KV caches: batch on data axes; for long contexts the *sequence* axis is
+    sharded (sequence-parallel flash-decoding: XLA turns the masked softmax
+    reductions into all-reduces over the shard axis).
+  * Divisibility guard: any dim not divisible by its mesh axis falls back to
+    replicated on that axis (e.g. yi-34b's 56 heads on a 16-way model axis
+    shard fine at the weight level because 7168 % 16 == 0, but odd-sized
+    dims like vocab 49155 must drop the constraint).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+from .mesh import data_axes
+
+
+def _axis_size(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        out = 1
+        for a in axis:
+            out *= _axis_size(mesh, a)
+        return out
+    return mesh.shape[axis] if axis in mesh.axis_names else 0
+
+
+def _guard(mesh, spec: P, shape: tuple) -> P:
+    """Drop partitions that don't divide or whose axis is absent."""
+    out = []
+    for dim, axis in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if axis is None:
+            out.append(None)
+            continue
+        size = _axis_size(mesh, axis)
+        if size == 0 or size == 1 or dim % size != 0:
+            # try single-axis fallback for composite axes
+            if isinstance(axis, tuple):
+                picked = None
+                for a in axis:
+                    s = _axis_size(mesh, a)
+                    if s > 1 and dim % s == 0:
+                        picked = a
+                        break
+                out.append(picked)
+            else:
+                out.append(None)
+        else:
+            out.append(axis)
+    return P(*out)
+
+
+def _ns(mesh, spec: P, shape: tuple) -> NamedSharding:
+    return NamedSharding(mesh, _guard(mesh, spec, shape))
+
+
+def param_shardings(params: Any, cfg: ModelConfig, mesh, mode: str = "fsdp") -> Any:
+    """PartitionSpec tree matching the param tree, by name + rank.
+
+    mode="fsdp": 2D (data x model) sharding — training/prefill (params are
+      re-gathered per layer; optimizer state shards alongside).
+    mode="tp": weight-stationary full tensor parallelism over ALL axes —
+      decode (§Perf hillclimb: FSDP decode re-gathers every weight every
+      token step; TP keeps weights resident and only all-reduces small
+      activations)."""
+    da = data_axes(mesh)
+    if mode == "tp":
+        tp_axis = tuple(da) + ("model",)
+        return _tp_param_shardings(params, cfg, mesh, tp_axis)
+    fsdp = da[-1] if da else None  # 'data'
+
+    def rule(path, leaf):
+        names = [str(getattr(p, "key", "")) for p in path]
+        name = names[-1]
+        shape = leaf.shape
+        r = len(shape)
+        stacked = any(n.endswith("_layers") or n == "layers" for n in names)
+        lead = (None,) if stacked else ()
+
+        def spec(*core):
+            core = core[: r - len(lead)]
+            return _ns(mesh, P(*lead, *core), shape)
+
+        # embed (V, D): vocab over data (FSDP), D over model — the gather
+        # output is then D-sharded, matching the activation layout with no
+        # resharding (avoids SPMD "involuntary full rematerialization").
+        if name in ("embed",):
+            return _ns(mesh, P(fsdp, "model"), shape)
+        if name in ("head",):
+            return _ns(mesh, P(fsdp, "model"), shape)
+        if name in ("frontend_proj",):
+            return _ns(mesh, P(fsdp, "model"), shape)
+        # expert weights: (L?, E, din, dout)
+        if "experts" in names:
+            if name == "wo":
+                return spec("model", fsdp, None)
+            return spec("model", None, fsdp)
+        if name == "router":
+            return spec(fsdp, None)
+        # attention / mlp 2D weights
+        if name in ("wq", "wk", "wv", "wi", "wg", "wdkv", "in_proj"):
+            return spec(fsdp, "model")
+        if name in ("wuk", "wuv"):
+            return spec(fsdp, "model")
+        if name in ("wo", "out_proj"):
+            return spec("model", fsdp)
+        if name == "conv_w":  # (L?, K, C)
+            return spec(None, "model")
+        # 1D: norms, biases, A_log, D, dt_bias, conv_b
+        if r - len(lead) == 1:
+            return spec(None)
+        return spec(*([None] * (r - len(lead))))
+
+    paths = jax.tree_util.tree_flatten_with_path(params)[0]
+    leaves = [rule(p, l) for p, l in paths]
+    return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(params), leaves)
+
+
+def _tp_param_shardings(params: Any, cfg: ModelConfig, mesh, tp_axis) -> Any:
+    """Full tensor parallelism: every big weight sharded over the combined
+    axis on its parallel dim; contracting-dim weights (wo/out_proj) shard
+    the contraction (output all-reduce).  1D params replicate."""
+
+    def rule(path, leaf):
+        names = [str(getattr(p, "key", "")) for p in path]
+        name = names[-1]
+        shape = leaf.shape
+        r = len(shape)
+        stacked = any(n.endswith("_layers") or n == "layers" for n in names)
+        lead = (None,) if stacked else ()
+
+        def spec(*core):
+            core = core[: r - len(lead)]
+            return _ns(mesh, P(*lead, *core), shape)
+
+        if name in ("embed", "head", "frontend_proj"):
+            return _ns(mesh, P(None, tp_axis), shape)
+        if "experts" in names:
+            if name == "wo":
+                return spec("model", None, None)
+            return spec("model", None, None)
+        if name == "router":
+            return spec(None, None)
+        if name in ("wq", "wk", "wv", "wi", "wg", "wdkv", "wuk", "wuv", "in_proj"):
+            return spec(None, tp_axis)
+        if name in ("wo", "out_proj"):
+            return spec(tp_axis, None)
+        if name == "conv_w":
+            return spec(None, tp_axis)
+        return spec(*([None] * (r - len(lead))))
+
+    paths = jax.tree_util.tree_flatten_with_path(params)[0]
+    leaves = [rule(p, l) for p, l in paths]
+    return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(params), leaves)
+
+
+def batch_shardings(cfg: ModelConfig, mesh, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct-compatible shardings for step inputs."""
+    da = data_axes(mesh)
+    bspec = da if len(da) > 1 else (da[0] if da else None)
+    out = {}
+    if shape.kind == "train":
+        out["tokens"] = _ns(mesh, P(bspec, None), (shape.global_batch, shape.seq_len))
+        out["labels"] = _ns(mesh, P(bspec, None), (shape.global_batch, shape.seq_len))
+    return out
+
+
+def cache_shardings(cache_tree: Any, cfg: ModelConfig, mesh, shape: ShapeConfig) -> Any:
+    """Decode-cache shardings.
+
+    decode_32k: batch on data axes, kv sequence on 'model' (flash-decoding).
+    long_500k (batch 1): sequence sharded over ('data','model') jointly.
+    """
+    da = data_axes(mesh)
+    bspec = da if len(da) > 1 else (da[0] if da else None)
+    long_ctx = shape.global_batch < _axis_size(mesh, bspec)
+
+    seq_axes = (
+        ((bspec, "model") if isinstance(bspec, str) else tuple(bspec) + ("model",))
+        if bspec
+        else "model"
+    )
+
+    def rule(path, leaf):
+        names = [str(getattr(p, "key", "")) for p in path]
+        name = names[-1]
+        shape_ = leaf.shape
+        if name in ("k", "v"):  # (L, B, S, KV, hd)
+            if long_ctx or shape.kind == "decode":
+                # weight-stationary decode: cache seq over ALL axes (batch
+                # stays whole — the data axes are spent on TP)
+                return _ns(mesh, P(None, None, seq_axes, None, None), shape_)
+            return _ns(mesh, P(None, bspec, "model", None, None), shape_)
+        if name in ("c_kv", "k_pe"):  # (L, B, S, r)
+            if long_ctx or shape.kind == "decode":
+                return _ns(mesh, P(None, None, seq_axes, None), shape_)
+            return _ns(mesh, P(None, bspec, "model", None), shape_)
+        if name == "conv":  # (L, B, K-1, C)
+            return _ns(mesh, P(None, bspec, None, "model"), shape_)
+        if name == "ssm":  # (L, B, H, P, N)
+            return _ns(mesh, P(None, bspec, "model", None, None), shape_)
+        return _ns(mesh, P(*([None] * len(shape_))), shape_)
+
+    paths = jax.tree_util.tree_flatten_with_path(cache_tree)[0]
+    leaves = [rule(p, l) for p, l in paths]
+    return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(cache_tree), leaves)
+
+
+def opt_state_shardings(opt_state, param_shards):
+    """m/v shard exactly like their parameter; step is replicated."""
+    mesh = jax.tree_util.tree_leaves(param_shards)[0].mesh
+    return type(opt_state)(
+        NamedSharding(mesh, P()),
+        param_shards,
+        param_shards,
+    )

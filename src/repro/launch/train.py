@@ -1,0 +1,114 @@
+"""Training launcher: data -> step -> checkpoint -> watchdog, restartable.
+
+CPU-scale driver used by examples/train_lm.py and the fault-tolerance
+tests; the same loop drives the production mesh (the jitted step and the
+checkpoint/restore path are mesh-agnostic).
+
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+      --reduced --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/run1
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpoint import latest_steps, restore, save
+from repro.configs import get_config, reduced
+from repro.data.synthetic import DataConfig, SyntheticTokens
+from repro.ft.watchdog import StepWatchdog, WatchdogConfig, loss_is_poisoned
+from repro.models.model import init_params
+from repro.optim.adamw import AdamWConfig, init_opt_state
+from repro.train.step import TrainConfig, make_train_step
+
+
+def train_loop(
+    cfg,
+    *,
+    steps: int,
+    global_batch: int,
+    seq_len: int,
+    ckpt_dir: str | None = None,
+    ckpt_every: int = 20,
+    seed: int = 0,
+    lr: float = 3e-4,
+    n_microbatches: int = 1,
+    log=print,
+):
+    data = SyntheticTokens(DataConfig(cfg.vocab_size, seq_len, global_batch, seed=seed))
+    tc = TrainConfig(
+        optimizer=AdamWConfig(lr=lr, warmup_steps=max(steps // 10, 5), total_steps=steps),
+        n_microbatches=n_microbatches,
+        remat=False,
+    )
+    step_fn = jax.jit(make_train_step(cfg, tc), donate_argnums=(0, 1))
+
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    opt_state = init_opt_state(params)
+    start = 0
+    if ckpt_dir and latest_steps(ckpt_dir):
+        (params, opt_state), start = restore(ckpt_dir, (params, opt_state))
+        log(f"restored checkpoint at step {start}")
+
+    wd = StepWatchdog(WatchdogConfig())
+    losses = []
+    for step in range(start, steps):
+        batch = data.batch(step)
+        jb = {k: jnp.asarray(v) for k, v in batch.items()}
+        wd.start_step()
+        params, opt_state, metrics = step_fn(params, opt_state, jb)
+        loss = float(metrics["loss"])
+        straggler = wd.end_step(step)
+        losses.append(loss)
+        if loss_is_poisoned(loss):
+            if not ckpt_dir or not latest_steps(ckpt_dir):
+                raise RuntimeError(f"non-finite loss at step {step}, no checkpoint")
+            (params, opt_state), rollback = restore(ckpt_dir, (params, opt_state))
+            log(f"NaN at step {step}: rolled back to {rollback}, skipping batch")
+            continue
+        if step % max(1, steps // 20) == 0 or step == steps - 1:
+            log(
+                f"step {step}: loss={loss:.4f} gnorm={float(metrics['grad_norm']):.3f}"
+                + (" [straggler]" if straggler else "")
+            )
+        if ckpt_dir and (step + 1) % ckpt_every == 0:
+            save(ckpt_dir, step + 1, (params, opt_state))
+    if ckpt_dir:
+        save(ckpt_dir, steps, (params, opt_state))
+    return params, losses
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    t0 = time.time()
+    _, losses = train_loop(
+        cfg,
+        steps=args.steps,
+        global_batch=args.batch,
+        seq_len=args.seq,
+        ckpt_dir=args.ckpt_dir,
+        n_microbatches=args.microbatches,
+    )
+    print(
+        f"done in {time.time()-t0:.0f}s: loss {losses[0]:.3f} -> {losses[-1]:.3f} "
+        f"({'improved' if losses[-1] < losses[0] else 'NOT improved'})"
+    )
+
+
+if __name__ == "__main__":
+    main()

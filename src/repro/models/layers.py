@@ -1,0 +1,331 @@
+"""Core transformer layers: RMSNorm, RoPE, GQA / MLA attention, MLPs.
+
+Pure-functional (params are nested dicts of arrays) so every layer composes
+with ``jax.lax.scan`` over stacked per-layer params and shards transparently
+under pjit.  Initializers take an explicit key; dtypes follow the config
+(params kept in float32 for optimizer friendliness, compute cast per call).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Params = dict[str, Any]
+
+
+def _dense_init(key, shape, scale: float | None = None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight).astype(dtype)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D) with D even; positions: (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP variants
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None) -> Params:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        return {
+            "wi": _dense_init(ks[0], (d, f)),
+            "wg": _dense_init(ks[1], (d, f)),
+            "wo": _dense_init(ks[2], (f, d)),
+        }
+    return {"wi": _dense_init(ks[0], (d, f)), "wo": _dense_init(ks[2], (f, d))}
+
+
+def mlp(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    dt = x.dtype
+    if cfg.mlp_type == "swiglu":
+        h = jax.nn.silu(x @ params["wg"].astype(dt)) * (x @ params["wi"].astype(dt))
+    elif cfg.mlp_type == "geglu":
+        h = jax.nn.gelu(x @ params["wg"].astype(dt)) * (x @ params["wi"].astype(dt))
+    elif cfg.mlp_type == "relu2":  # nemotron-4 squared ReLU
+        h = jnp.square(jax.nn.relu(x @ params["wi"].astype(dt)))
+    else:
+        raise ValueError(cfg.mlp_type)
+    return h @ params["wo"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig) -> Params:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nh, nkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 5)
+    p = {
+        "wq": _dense_init(ks[0], (d, nh * hd)),
+        "wk": _dense_init(ks[1], (d, nkv * hd)),
+        "wv": _dense_init(ks[2], (d, nkv * hd)),
+        "wo": _dense_init(ks[3], (nh * hd, d)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nh * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((nkv * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((nkv * hd,), jnp.float32)
+    return p
+
+
+def _attn_mask(seq: int, n_prefix: int, bidirectional_prefix: bool) -> jax.Array:
+    """Causal mask, optionally bidirectional over the leading prefix
+    (PaliGemma-style prefix-LM)."""
+    i = jnp.arange(seq)[:, None]
+    j = jnp.arange(seq)[None, :]
+    causal = j <= i
+    if bidirectional_prefix and n_prefix > 0:
+        prefix = (i < n_prefix) & (j < n_prefix)
+        causal = causal | prefix
+    return causal
+
+
+def _sdpa(q, k, v, mask) -> jax.Array:
+    """q: (B,S,H,D) k,v: (B,T,KV,D); grouped-query attention (dense)."""
+    b, s, h, d = q.shape
+    kv = k.shape[2]
+    group = h // kv
+    qg = q.reshape(b, s, kv, group, d)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k) / math.sqrt(d)
+    scores = scores.astype(jnp.float32)
+    if mask is not None:
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, s, h, d)
+
+
+_FLASH_THRESHOLD = 2048  # switch to blocked attention above this seq len
+_FLASH_BLOCK_Q = 512
+_FLASH_BLOCK_KV = 1024
+
+
+def _sdpa_flash(q, k, v, n_prefix: int, bidirectional_prefix: bool) -> jax.Array:
+    """Flash-attention-style kv-blocked causal attention in pure jnp.
+
+    Never materializes (S, T) scores: a single scan over kv blocks carries
+    the streaming-softmax (m, l, acc) state.  The query/sequence axis stays
+    whole — under the sequence-parallel activation sharding it is already
+    model-sharded, so the live tile per device is (b_loc, kv, g, S_loc, BK).
+    Scanning over kv (replicated after a small per-block all-gather) keeps
+    the scan axis unsharded — scanning a *sharded* axis makes SPMD gather
+    whole tiles per step.  Also the reference oracle for
+    kernels/flash_attention (same math, same tiling).
+    """
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    kvh = k.shape[2]
+    dv = v.shape[3]  # may differ from d (MLA folds rope dims into q/k only)
+    g = h // kvh
+    bk = _FLASH_BLOCK_KV
+    pad_k = (-t) % bk
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    nk = kp.shape[1] // bk
+    kb = jnp.moveaxis(kp.reshape(b, nk, bk, kvh, d), 1, 0)  # (nk, b, bk, kv, d)
+    vb = jnp.moveaxis(vp.reshape(b, nk, bk, kvh, dv), 1, 0)
+    scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(b, s, kvh, g, d)
+    rows = jnp.arange(s)
+
+    def kv_block(state, inp):
+        m, l, acc = state
+        kblk, vblk, ki = inp
+        cols = ki * bk + jnp.arange(bk)
+        sc = jnp.einsum("bskgd,btkd->bkgst", qg, kblk).astype(jnp.float32) * scale
+        valid = (cols[None, :] <= rows[:, None]) & (cols[None, :] < t)
+        if bidirectional_prefix and n_prefix > 0:
+            pre = (rows[:, None] < n_prefix) & (cols[None, :] < n_prefix)
+            valid = valid | (pre & (cols[None, :] < t))
+        sc = jnp.where(valid[None, None, None], sc, -1e30)
+        m_new = jnp.maximum(m, sc.max(-1))
+        p = jnp.exp(sc - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgst,btkd->bkgsd", p.astype(q.dtype), vblk
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kvh, g, s), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, s), jnp.float32)
+    a0 = jnp.zeros((b, kvh, g, s, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        kv_block, (m0, l0, a0), (kb, vb, jnp.arange(nk))
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    # (b, kv, g, s, dv) -> (b, s, kv, g, dv)
+    out = jnp.moveaxis(out, 3, 1)
+    return out.reshape(b, s, h, dv).astype(q.dtype)
+
+
+def attention(
+    params: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    cache: Optional[dict] = None,
+    cache_pos: Optional[jax.Array] = None,
+    n_prefix: int = 0,
+):
+    """GQA attention.  Train/prefill when ``cache is None`` (returns y, new
+    kv for cache init); decode when cache given (single-step update).
+    """
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    nh, nkv = cfg.n_heads, cfg.n_kv_heads
+    dt = x.dtype
+    q = x @ params["wq"].astype(dt)
+    k = x @ params["wk"].astype(dt)
+    v = x @ params["wv"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    q = q.reshape(b, s, nh, hd)
+    k = k.reshape(b, s, nkv, hd)
+    v = v.reshape(b, s, nkv, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        if s > _FLASH_THRESHOLD:
+            y = _sdpa_flash(q, k, v, n_prefix, cfg.prefix_bidirectional)
+        else:
+            mask = _attn_mask(s, n_prefix, cfg.prefix_bidirectional)
+            y = _sdpa(q, k, v, mask)
+        new_cache = {"k": k, "v": v}
+    else:
+        # decode: scatter the new kv at cache_pos, attend over the cache
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, cache_pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, cache_pos, axis=1)
+        t = ck.shape[1]
+        # causal within the new block: row i sees cache positions <= pos + i
+        valid = jnp.arange(t)[None, :] <= (cache_pos + jnp.arange(s)[:, None])  # (s, t)
+        group = nh // nkv
+        qg = q.reshape(b, s, nkv, group, hd)
+        scores = jnp.einsum("bskgd,btkd->bkgst", qg, ck) / math.sqrt(hd)
+        scores = scores.astype(jnp.float32)
+        scores = jnp.where(valid[None, None, None, :, :], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(dt)
+        y = jnp.einsum("bkgst,btkd->bskgd", probs, cv).reshape(b, s, nh, hd)
+        new_cache = {"k": ck, "v": cv}
+    y = y.reshape(b, s, nh * hd) @ params["wo"].astype(dt)
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg: ModelConfig) -> Params:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nh, r, rd = cfg.n_heads, cfg.kv_lora_rank, cfg.rope_dim
+    ks = jax.random.split(key, 6)
+    return {
+        # queries: full-rank (q_lora omitted for the lite config)
+        "wq": _dense_init(ks[0], (d, nh * (hd + rd))),
+        # joint kv compression + decoupled rope key
+        "wdkv": _dense_init(ks[1], (d, r + rd)),
+        "wuk": _dense_init(ks[2], (r, nh * hd)),
+        "wuv": _dense_init(ks[3], (r, nh * hd)),
+        "wo": _dense_init(ks[4], (nh * hd, d)),
+        "norm_ckv": jnp.ones((r,), jnp.float32),
+    }
+
+
+def mla_attention(
+    params: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    cache: Optional[dict] = None,
+    cache_pos: Optional[jax.Array] = None,
+    n_prefix: int = 0,
+):
+    """Multi-head latent attention.  The cache stores only the compressed
+    c_kv (rank r) and the shared rope key (rd) — MLA's memory saving."""
+    b, s, d = x.shape
+    hd, nh = cfg.resolved_head_dim, cfg.n_heads
+    r, rd = cfg.kv_lora_rank, cfg.rope_dim
+    dt = x.dtype
+    q = (x @ params["wq"].astype(dt)).reshape(b, s, nh, hd + rd)
+    q_nope, q_pe = q[..., :hd], q[..., hd:]
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+
+    dkv = x @ params["wdkv"].astype(dt)  # (b, s, r + rd)
+    c_kv, k_pe = dkv[..., :r], dkv[..., r:]
+    c_kv = rms_norm(c_kv, params["norm_ckv"], cfg.norm_eps)
+    k_pe = apply_rope(k_pe[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+
+    if cache is not None:
+        c_kv = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_kv, cache_pos, axis=1)
+        k_pe = jax.lax.dynamic_update_slice_in_dim(cache["k_pe"], k_pe, cache_pos, axis=1)
+    new_cache = {"c_kv": c_kv, "k_pe": k_pe}
+    t = c_kv.shape[1]
+
+    k_nope = (c_kv @ params["wuk"].astype(dt)).reshape(b, t, nh, hd)
+    v = (c_kv @ params["wuv"].astype(dt)).reshape(b, t, nh, hd)
+
+    if cache is None and s > _FLASH_THRESHOLD:
+        # flash path: fold the decoupled rope dims into the head dim — the
+        # score is one dot product over (hd + rd), and flash's 1/sqrt(hd+rd)
+        # scale is exactly MLA's; MLA is MHA post-up-projection.
+        qc = jnp.concatenate([q_nope, q_pe], axis=-1)
+        kc = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_pe[:, :, None, :], (b, t, nh, rd))], axis=-1
+        )
+        y = _sdpa_flash(qc, kc, v, n_prefix, cfg.prefix_bidirectional)
+        y = y.reshape(b, s, nh * hd) @ params["wo"].astype(dt)
+        return y, new_cache
+
+    scale = 1.0 / math.sqrt(hd + rd)
+    scores = (
+        jnp.einsum("bshd,bthd->bhst", q_nope, k_nope)
+        + jnp.einsum("bshd,btd->bhst", q_pe, k_pe)
+    ) * scale
+    scores = scores.astype(jnp.float32)
+    if cache is None:
+        mask = _attn_mask(s, n_prefix, cfg.prefix_bidirectional)
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    else:
+        valid = jnp.arange(t)[None, :] <= (cache_pos + jnp.arange(s)[:, None])  # (s, t)
+        scores = jnp.where(valid[None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(dt)
+    y = jnp.einsum("bhst,bthd->bshd", probs, v).reshape(b, s, nh * hd)
+    y = y @ params["wo"].astype(dt)
+    return y, new_cache

@@ -1,0 +1,346 @@
+"""Model assembly: embeddings -> stacked blocks (lax.scan) -> head.
+
+Covers all assigned families:
+  dense / vlm / audio : [attn + mlp] x L, scanned (homogeneous stack)
+  moe                 : [attn + moe] x L (+ leading dense layers)
+  ssm                 : [mamba2] x L, scanned
+  hybrid (zamba2)     : groups of (p-1) mamba layers + a *shared* attention
+                        block applied between groups (weights reused)
+
+Params are nested dicts; homogeneous per-layer params are stacked along a
+leading L axis so the layer loop is a single ``lax.scan`` (compile-time and
+HLO size stay flat in depth — essential for the 96-layer dry-runs).
+
+Modality frontends (vlm/audio) are stubs per the assignment: `input_specs`
+provides precomputed patch/frame embeddings; here they enter through
+``prefix_embeds`` / ``inputs_embeds``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from . import layers as L
+from . import moe as MOE
+from . import ssm as SSM
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _layer_kind(cfg: ModelConfig, i: int) -> str:
+    if cfg.family == "ssm":
+        return "mamba"
+    if cfg.hybrid_period:
+        return "attn" if (i + 1) % cfg.hybrid_period == 0 else "mamba"
+    if cfg.moe and i >= cfg.moe.first_dense:
+        return "moe"
+    return "attn"
+
+
+def _init_attn_layer(key, cfg: ModelConfig) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    attn_init = L.init_mla if cfg.attn_type == "mla" else L.init_attention
+    return {
+        "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+        "attn": attn_init(k1, cfg),
+        "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+        "mlp": L.init_mlp(k2, cfg),
+    }
+
+
+def _init_moe_layer(key, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    attn_init = L.init_mla if cfg.attn_type == "mla" else L.init_attention
+    return {
+        "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+        "attn": attn_init(k1, cfg),
+        "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+        "moe": MOE.init_moe(k2, cfg),
+    }
+
+
+def _init_mamba_layer(key, cfg: ModelConfig) -> Params:
+    return {
+        "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+        "mamba": SSM.init_mamba2(key, cfg),
+    }
+
+
+def _stack(trees: list[Params]) -> Params:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    keys = jax.random.split(key, cfg.n_layers + 4)
+    p: Params = {
+        "embed": jax.random.normal(keys[-1], (cfg.vocab_size, cfg.d_model), jnp.float32) * 0.02,
+        "final_ln": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = L._dense_init(keys[-2], (cfg.d_model, cfg.vocab_size), scale=0.02)
+    if cfg.frontend:
+        # stub projection from precomputed features to d_model
+        p["frontend_proj"] = L._dense_init(keys[-3], (cfg.d_model, cfg.d_model))
+
+    kinds = [_layer_kind(cfg, i) for i in range(cfg.n_layers)]
+    if cfg.family == "ssm":
+        p["mamba_layers"] = _stack([_init_mamba_layer(keys[i], cfg) for i in range(cfg.n_layers)])
+    elif cfg.hybrid_period:
+        mamba_idx = [i for i, k in enumerate(kinds) if k == "mamba"]
+        p["mamba_layers"] = _stack([_init_mamba_layer(keys[i], cfg) for i in mamba_idx])
+        n_attn = len([k for k in kinds if k == "attn"])
+        if cfg.shared_attn:
+            p["attn_shared"] = _init_attn_layer(keys[cfg.n_layers], cfg)
+        else:
+            attn_idx = [i for i, k in enumerate(kinds) if k == "attn"]
+            p["attn_layers"] = _stack([_init_attn_layer(keys[i], cfg) for i in attn_idx])
+    elif cfg.moe:
+        dense_idx = [i for i, k in enumerate(kinds) if k == "attn"]
+        moe_idx = [i for i, k in enumerate(kinds) if k == "moe"]
+        if dense_idx:
+            p["dense_layers"] = _stack([_init_attn_layer(keys[i], cfg) for i in dense_idx])
+        p["moe_layers"] = _stack([_init_moe_layer(keys[i], cfg) for i in moe_idx])
+    else:
+        p["layers"] = _stack([_init_attn_layer(keys[i], cfg) for i in range(cfg.n_layers)])
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _attn_block(lp, x, cfg, positions, cache=None, cache_pos=None, n_prefix=0, ep=None):
+    attn_fn = L.mla_attention if cfg.attn_type == "mla" else L.attention
+    h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    y, new_cache = attn_fn(lp["attn"], h, cfg, positions, cache, cache_pos, n_prefix)
+    x = x + y
+    h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if "moe" in lp:
+        x = x + MOE.moe_block(lp["moe"], h, cfg, ep)
+    else:
+        x = x + L.mlp(lp["mlp"], h, cfg)
+    return x, new_cache
+
+
+def _mamba_block(lp, x, cfg, cache=None):
+    h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    y, new_cache = SSM.mamba2_block(lp["mamba"], h, cfg, cache)
+    return x + y, new_cache
+
+
+def _constrain(x, act_sharding):
+    if act_sharding is not None:
+        x = jax.lax.with_sharding_constraint(x, act_sharding)
+    return x
+
+
+def _scan_attn_stack(stacked, x, cfg, positions, caches, cache_pos, n_prefix, remat, act_sharding=None, unroll=False, ep=None):
+    """Scan a homogeneous stack of attention(+mlp/moe) layers.
+
+    caches: pytree with leading layer axis, or None (train/prefill: caches
+    are *returned* with leading layer axis for cache init)."""
+
+    def body(x, inp):
+        lp, cache_l = inp
+        fn = _attn_block
+        if remat:
+            # cfg, n_prefix, ep are static (checkpoint would trace the ints)
+            fn = jax.checkpoint(_attn_block, static_argnums=(2, 6, 7))
+        x, new_cache = fn(lp, x, cfg, positions, cache_l, cache_pos, n_prefix, ep)
+        return _constrain(x, act_sharding), new_cache
+
+    x, new_caches = jax.lax.scan(body, x, (stacked, caches), unroll=unroll)
+    return x, new_caches
+
+
+def _scan_mamba_stack(stacked, x, cfg, caches, remat, act_sharding=None, unroll=False):
+    def body(x, inp):
+        lp, cache_l = inp
+        fn = _mamba_block
+        if remat:
+            fn = jax.checkpoint(_mamba_block, static_argnums=(2,))
+        x, new_cache = fn(lp, x, cfg, cache_l)
+        return _constrain(x, act_sharding), new_cache
+
+    x, new_caches = jax.lax.scan(body, x, (stacked, caches), unroll=unroll)
+    return x, new_caches
+
+
+def _broadcast_none(tree_proto, n):
+    """None stand-in caches with a leading layer axis for scan."""
+    return None
+
+
+def forward(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: Optional[jax.Array] = None,  # (B, S) int32
+    inputs_embeds: Optional[jax.Array] = None,  # (B, S, d) modality stub
+    prefix_embeds: Optional[jax.Array] = None,  # (B, P, d) vlm patches
+    caches: Optional[dict] = None,
+    cache_pos: Optional[jax.Array] = None,
+    remat: bool = False,
+    act_sharding=None,
+    unroll: bool = False,
+    ep=None,
+):
+    """Returns (logits, new_caches).
+
+    Train / prefill: caches=None; new_caches hold full-length kv (prefill)
+    suitable for subsequent decode.  Decode: pass caches + cache_pos.
+    """
+    dt = jnp.dtype(cfg.dtype)
+    if inputs_embeds is not None:
+        x = inputs_embeds.astype(dt)
+        if cfg.frontend:
+            x = x @ params["frontend_proj"].astype(dt)
+    else:
+        x = params["embed"].astype(dt)[tokens]
+    n_prefix = 0
+    if prefix_embeds is not None:
+        pe = prefix_embeds.astype(dt)
+        if cfg.frontend:
+            pe = pe @ params["frontend_proj"].astype(dt)
+        x = jnp.concatenate([pe, x], axis=1)
+        n_prefix = prefix_embeds.shape[1]
+
+    b, s, _ = x.shape
+    if cache_pos is None:
+        positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    else:
+        positions = cache_pos + jnp.arange(s, dtype=jnp.int32)[None, :]
+    pos_b = jnp.broadcast_to(positions, (b, s))
+
+    new_caches: dict = {}
+    if cfg.family == "ssm":
+        stack = params["mamba_layers"]
+        cin = caches["mamba"] if caches else _none_like_stack(cfg.n_layers)
+        x, nc = _scan_mamba_stack(stack, x, cfg, cin, remat, act_sharding, unroll)
+        new_caches["mamba"] = nc
+    elif cfg.hybrid_period:
+        x, new_caches = _hybrid_forward(
+            params, cfg, x, pos_b, caches, cache_pos, remat, act_sharding, unroll
+        )
+    elif cfg.moe:
+        nd = cfg.moe.first_dense
+        if nd:
+            cin = caches["dense"] if caches else _none_like_stack(nd)
+            x, ncd = _scan_attn_stack(
+                params["dense_layers"], x, cfg, pos_b, cin, cache_pos, n_prefix, remat,
+                act_sharding, unroll, ep,
+            )
+            new_caches["dense"] = ncd
+        cin = caches["moe"] if caches else _none_like_stack(cfg.n_layers - nd)
+        x, ncm = _scan_attn_stack(
+            params["moe_layers"], x, cfg, pos_b, cin, cache_pos, n_prefix, remat,
+            act_sharding, unroll, ep,
+        )
+        new_caches["moe"] = ncm
+    else:
+        cin = caches["attn"] if caches else _none_like_stack(cfg.n_layers)
+        x, nc = _scan_attn_stack(
+            params["layers"], x, cfg, pos_b, cin, cache_pos, n_prefix, remat,
+            act_sharding, unroll,
+        )
+        new_caches["attn"] = nc
+
+    x = L.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = x @ head.astype(dt)
+    return logits, new_caches
+
+
+def _none_like_stack(n: int):
+    return None
+
+
+def _hybrid_forward(params, cfg, x, pos_b, caches, cache_pos, remat, act_sharding=None, unroll=False):
+    """zamba2-style: groups of (period-1) mamba layers with a (shared)
+    attention block between groups.  Mamba sub-stacks are scanned per group;
+    the attention block is applied n_groups times with shared weights."""
+    p = cfg.hybrid_period
+    n_groups = cfg.n_layers // p
+    per_group = p - 1
+    mamba_stack = params["mamba_layers"]  # (n_groups*per_group + rem, ...)
+    new_m_caches = []
+    new_a_caches = []
+    for gidx in range(n_groups):
+        lo = gidx * per_group
+        sub = jax.tree.map(lambda a: a[lo : lo + per_group], mamba_stack)
+        cin = (
+            jax.tree.map(lambda a: a[lo : lo + per_group], caches["mamba"])
+            if caches
+            else None
+        )
+        x, nmc = _scan_mamba_stack(sub, x, cfg, cin, remat, act_sharding, unroll)
+        new_m_caches.append(nmc)
+        ap = params["attn_shared"] if cfg.shared_attn else jax.tree.map(
+            lambda a: a[gidx], params["attn_layers"]
+        )
+        ac = jax.tree.map(lambda a: a[gidx], caches["attn"]) if caches else None
+        x, nac = _attn_block(ap, x, cfg, pos_b, ac, cache_pos, 0)
+        new_a_caches.append(nac)
+    # trailing mamba layers (n_layers % p, plus the per-group remainder)
+    used = n_groups * per_group
+    total_m = cfg.n_layers - n_groups
+    if total_m > used:
+        sub = jax.tree.map(lambda a: a[used:], mamba_stack)
+        cin = jax.tree.map(lambda a: a[used:], caches["mamba"]) if caches else None
+        x, nmc = _scan_mamba_stack(sub, x, cfg, cin, remat, act_sharding, unroll)
+        new_m_caches.append(nmc)
+    new_caches = {
+        "mamba": jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *new_m_caches),
+        "attn": jax.tree.map(lambda *xs: jnp.stack(xs, 0), *new_a_caches),
+    }
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Cache initialization (for decode dry-runs and serving)
+# ---------------------------------------------------------------------------
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    """Allocate decode caches (zeros) for a given batch/context length."""
+    hd = cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+
+    def attn_cache(n):
+        if cfg.attn_type == "mla":
+            return {
+                "c_kv": jnp.zeros((n, batch, max_seq, cfg.kv_lora_rank), dt),
+                "k_pe": jnp.zeros((n, batch, max_seq, cfg.rope_dim), dt),
+            }
+        return {
+            "k": jnp.zeros((n, batch, max_seq, cfg.n_kv_heads, hd), dt),
+            "v": jnp.zeros((n, batch, max_seq, cfg.n_kv_heads, hd), dt),
+        }
+
+    def mamba_cache(n):
+        base = SSM.init_ssm_cache(cfg, batch)
+        return jax.tree.map(lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), base)
+
+    if cfg.family == "ssm":
+        return {"mamba": mamba_cache(cfg.n_layers)}
+    if cfg.hybrid_period:
+        n_attn = cfg.n_layers // cfg.hybrid_period
+        return {"mamba": mamba_cache(cfg.n_layers - n_attn), "attn": attn_cache(n_attn)}
+    if cfg.moe:
+        nd = cfg.moe.first_dense
+        out = {"moe": attn_cache(cfg.n_layers - nd)}
+        if nd:
+            out["dense"] = attn_cache(nd)
+        return out
+    return {"attn": attn_cache(cfg.n_layers)}

@@ -1,0 +1,230 @@
+"""Mixture-of-Experts with token-choice top-k routing and capacity-based
+dispatch.
+
+Dispatch is scatter/gather into dense (E, C, d) buffers followed by a
+batched expert einsum — the standard TPU-native formulation: the expert
+matmul is block-diagonal on the MXU, shards cleanly along the expert axis
+(EP on the 'model' mesh axis), and its FLOPs are proportional to
+tokens * top_k * capacity_factor (so the roofline "useful compute" ratio
+stays honest, unlike dense one-hot dispatch which burns tokens * E).
+Over-capacity tokens are dropped (standard practice; the residual path
+carries them).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+
+from .layers import _dense_init, init_mlp, mlp
+
+Params = dict[str, Any]
+
+
+def init_moe(key, cfg: ModelConfig) -> Params:
+    mo = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 3 + mo.n_shared)
+    mult = ("wi", "wg", "wo") if cfg.mlp_type in ("swiglu", "geglu") else ("wi", "wo")
+
+    def expert_weights(k):
+        sub = jax.random.split(k, len(mult))
+        out = {}
+        for name, kk in zip(mult, sub):
+            if name == "wo":
+                out[name] = _dense_init(kk, (mo.n_experts, mo.d_expert, d))
+            else:
+                out[name] = _dense_init(kk, (mo.n_experts, d, mo.d_expert))
+        return out
+
+    p: Params = {
+        "router": _dense_init(ks[0], (d, mo.n_experts), scale=0.02),
+        "experts": expert_weights(ks[1]),
+    }
+    if mo.n_shared:
+        import dataclasses
+
+        shared_cfg = dataclasses.replace(cfg, d_ff=mo.d_expert * mo.n_shared)
+        p["shared"] = init_mlp(ks[2], shared_cfg, d_ff=mo.d_expert * mo.n_shared)
+    return p
+
+
+def _capacity(n_tokens: int, mo: MoEConfig) -> int:
+    c = int(n_tokens * mo.top_k * mo.capacity_factor / mo.n_experts)
+    return max(8, min(n_tokens, (c + 7) // 8 * 8))
+
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class EPContext:
+    """Expert-parallel execution context (threaded from the launcher).
+
+    batch_axes shard the token batch; model_axis shards experts AND the
+    sequence (sequence-parallel token split).  hash/eq by axis names so it
+    can ride through jax.checkpoint static args; the mesh is taken from the
+    ambient jax.set_mesh context at trace time.
+    """
+
+    batch_axes: tuple  # e.g. ("pod", "data")
+    model_axis: str = "model"
+
+    def all_axes(self):
+        return tuple(self.batch_axes) + (self.model_axis,)
+
+
+def moe_block_ep(params: Params, x: jax.Array, cfg: ModelConfig, ep: EPContext) -> jax.Array:
+    """Expert-parallel MoE via shard_map + all_to_all (the distributed-
+    optimization fix measured in EXPERIMENTS.md §Perf).
+
+    Why: under plain pjit, capacity dispatch is a data-dependent scatter;
+    SPMD cannot shard it and replicates the (E, C, d) expert compute on
+    every device (measured 150x useful flops).  Explicit EP:
+
+      tokens sharded (batch -> data axes, seq -> model axis);
+      local dispatch into (E, C_loc, d)  [per-device scatter, no SPMD];
+      all_to_all over `model`: experts E/M per rank x (M*C_loc) tokens;
+      batched expert matmul (sharded over BOTH data and model);
+      reverse all_to_all; local combine.
+
+    a2a bytes/device/layer ~ 2 * E * C_loc * d — orders below the
+    replicated compute it replaces.
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    mo = cfg.moe
+    P = jax.sharding.PartitionSpec
+    bspec = ep.batch_axes if len(ep.batch_axes) > 1 else ep.batch_axes[0]
+    m_sz = mesh.shape[ep.model_axis]
+
+    def local(w_router, w_experts, w_shared, xl):
+        b_loc, s_loc, d = xl.shape
+        t_loc = b_loc * s_loc
+        xt = xl.reshape(t_loc, d)
+        dt = xl.dtype
+        logits = (xt @ w_router.astype(dt)).astype(jnp.float32)
+        gates = jax.nn.softmax(logits, axis=-1)
+        top_g, top_e = jax.lax.top_k(gates, mo.top_k)
+        top_g = top_g / jnp.maximum(top_g.sum(-1, keepdims=True), 1e-9)
+        cap = _capacity(t_loc, mo)
+        flat_e = top_e.reshape(-1)
+        one_hot = jax.nn.one_hot(flat_e, mo.n_experts, dtype=jnp.int32)
+        pos_in_e = jnp.cumsum(one_hot, axis=0) - 1
+        my_pos = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]
+        keep = my_pos < cap
+        tok_idx = jnp.repeat(jnp.arange(t_loc), mo.top_k)
+        safe_e = jnp.where(keep, flat_e, 0)
+        safe_p = jnp.where(keep, my_pos, cap - 1)
+        buf = jnp.zeros((mo.n_experts, cap, d), dt)
+        buf = buf.at[safe_e, safe_p].add(jnp.where(keep[:, None], xt[tok_idx], 0))
+
+        # exchange: (E, C, d) -> (E/M, M*C, d); experts live on model ranks
+        buf = jax.lax.all_to_all(
+            buf, ep.model_axis, split_axis=0, concat_axis=1, tiled=True
+        )
+        e_loc = mo.n_experts // m_sz
+        we = {k: v for k, v in w_experts.items()}  # (E/M, d, f) local slices
+        if cfg.mlp_type in ("swiglu", "geglu"):
+            act = jax.nn.silu if cfg.mlp_type == "swiglu" else jax.nn.gelu
+            h = act(jnp.einsum("ecd,edf->ecf", buf, we["wg"].astype(dt))) * jnp.einsum(
+                "ecd,edf->ecf", buf, we["wi"].astype(dt)
+            )
+        else:
+            h = jnp.square(jax.nn.relu(jnp.einsum("ecd,edf->ecf", buf, we["wi"].astype(dt))))
+        out_buf = jnp.einsum("ecf,efd->ecd", h, we["wo"].astype(dt))
+        out_buf = jax.lax.all_to_all(
+            out_buf, ep.model_axis, split_axis=1, concat_axis=0, tiled=True
+        )  # back to (E, C, d)
+
+        picked = out_buf[safe_e, safe_p]
+        gate_flat = top_g.reshape(-1).astype(dt)
+        contrib = picked * jnp.where(keep, gate_flat, 0.0)[:, None]
+        y = jax.ops.segment_sum(contrib, tok_idx, num_segments=t_loc)
+        if mo.n_shared:
+            y = y + mlp(w_shared, xt, cfg)
+        return y.reshape(b_loc, s_loc, d)
+
+    shared = params.get("shared", {})
+    fn = jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(
+            P(),  # router replicated (auto-gathered from FSDP storage)
+            jax.tree.map(lambda _: P(ep.model_axis), params["experts"]),
+            jax.tree.map(lambda _: P(), shared),
+            P(bspec, ep.model_axis, None),
+        ),
+        out_specs=P(bspec, ep.model_axis, None),
+        check_vma=False,
+    )
+    return fn(params["router"], params["experts"], shared, x)
+
+
+def moe_block(params: Params, x: jax.Array, cfg: ModelConfig, ep: EPContext | None = None) -> jax.Array:
+    """x: (B, S, d) -> (B, S, d)."""
+    if ep is not None:
+        return moe_block_ep(params, x, cfg, ep)
+    mo = cfg.moe
+    b, s, d = x.shape
+    n_tok = b * s
+    xt = x.reshape(n_tok, d)
+    dt = x.dtype
+
+    logits = (xt @ params["router"].astype(dt)).astype(jnp.float32)  # (T, E)
+    gates = jax.nn.softmax(logits, axis=-1)
+    top_g, top_e = jax.lax.top_k(gates, mo.top_k)  # (T, K)
+    top_g = top_g / jnp.maximum(top_g.sum(-1, keepdims=True), 1e-9)  # renorm
+
+    cap = _capacity(n_tok, mo)
+    # position of each (token, k) assignment within its expert's buffer
+    flat_e = top_e.reshape(-1)  # (T*K,)
+    one_hot = jax.nn.one_hot(flat_e, mo.n_experts, dtype=jnp.int32)  # (T*K, E)
+    pos_in_e = jnp.cumsum(one_hot, axis=0) - 1  # running count per expert
+    my_pos = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]  # (T*K,)
+    keep = my_pos < cap
+    # scatter tokens into (E, C, d)
+    tok_idx = jnp.repeat(jnp.arange(n_tok), mo.top_k)
+    safe_e = jnp.where(keep, flat_e, 0)
+    safe_p = jnp.where(keep, my_pos, cap - 1)
+    buf = jnp.zeros((mo.n_experts, cap, d), dt)
+    buf = buf.at[safe_e, safe_p].add(jnp.where(keep[:, None], xt[tok_idx], 0))
+
+    # batched expert MLP: (E, C, d) x (E, d, f) -> (E, C, f)
+    w = params["experts"]
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp_type == "swiglu" else jax.nn.gelu
+        h = act(jnp.einsum("ecd,edf->ecf", buf, w["wg"].astype(dt))) * jnp.einsum(
+            "ecd,edf->ecf", buf, w["wi"].astype(dt)
+        )
+    else:
+        h = jnp.square(jax.nn.relu(jnp.einsum("ecd,edf->ecf", buf, w["wi"].astype(dt))))
+    out_buf = jnp.einsum("ecf,efd->ecd", h, w["wo"].astype(dt))  # (E, C, d)
+
+    # gather back and combine with gate weights
+    picked = out_buf[safe_e, safe_p]  # (T*K, d)
+    gate_flat = top_g.reshape(-1).astype(dt)
+    contrib = picked * jnp.where(keep, gate_flat, 0.0)[:, None]
+    y = jax.ops.segment_sum(contrib, tok_idx, num_segments=n_tok)
+
+    if mo.n_shared:
+        y = y + mlp(params["shared"], xt, cfg)
+    return y.reshape(b, s, d)
+
+
+def aux_load_balance_loss(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Switch-style load-balancing auxiliary loss (mean over layers is added
+    to the training objective by the caller)."""
+    mo = cfg.moe
+    b, s, d = x.shape
+    xt = x.reshape(-1, d)
+    logits = (xt @ params["router"].astype(x.dtype)).astype(jnp.float32)
+    gates = jax.nn.softmax(logits, -1)
+    _, top_e = jax.lax.top_k(gates, mo.top_k)
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(top_e, mo.n_experts, dtype=jnp.float32).sum(1), axis=0
+    ) / mo.top_k
+    frac_probs = jnp.mean(gates, axis=0)
+    return mo.n_experts * jnp.sum(frac_tokens * frac_probs)

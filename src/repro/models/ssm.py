@@ -1,0 +1,210 @@
+"""Mamba2 (SSD — state-space duality) blocks.
+
+Training/prefill uses the chunked SSD algorithm (arXiv:2405.21060 §6):
+quadratic attention-like compute *within* chunks (MXU-friendly batched
+matmuls) and a linear recurrence *across* chunks (lax.scan over nc chunks).
+Decode is the O(1) recurrent update on the (H, P, N) state.
+
+This is precisely the hardware adaptation the SSD paper advocates: the
+chunk size trades VMEM working set against recurrence length; on TPU we
+keep chunks at 128-256 so the intra-chunk einsums land on the MXU at
+hardware-aligned sizes.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from .layers import _dense_init, rms_norm
+
+Params = dict[str, Any]
+
+
+def init_mamba2(key, cfg: ModelConfig) -> Params:
+    sm = cfg.ssm
+    d = cfg.d_model
+    di = sm.d_inner(d)
+    nh = sm.n_ssm_heads(d)
+    g, n = sm.n_groups, sm.d_state
+    ks = jax.random.split(key, 5)
+    # in_proj emits [z (di), x (di), B (g*n), C (g*n), dt (nh)]
+    d_in_proj = 2 * di + 2 * g * n + nh
+    conv_dim = di + 2 * g * n
+    return {
+        "in_proj": _dense_init(ks[0], (d, d_in_proj)),
+        "conv_w": _dense_init(ks[1], (sm.conv_kernel, conv_dim), scale=0.5),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.full((nh,), -2.0, jnp.float32),
+        "norm": jnp.ones((di,), jnp.float32),
+        "out_proj": _dense_init(ks[4], (di, d)),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array, state: Optional[jax.Array] = None):
+    """Depthwise causal conv1d. x: (B, S, C); w: (K, C).
+
+    Returns (y, new_state) where state holds the trailing K-1 inputs for
+    streaming decode.
+    """
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+K-1, C)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :].astype(x.dtype) for i in range(k))
+    y = y + b.astype(x.dtype)
+    new_state = xp[:, -(k - 1) :, :] if k > 1 else jnp.zeros_like(pad)
+    return jax.nn.silu(y), new_state
+
+
+def _ssd_chunked(x, dt, A, B, C, chunk: int):
+    """SSD forward.
+
+    x: (b, L, H, P); dt: (b, L, H); A: (H,) (negative); B, C: (b, L, G, N).
+    Returns y: (b, L, H, P), final_state: (b, H, P, N).
+    """
+    b, L, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    assert L % chunk == 0, (L, chunk)
+    nc, Q = L // chunk, chunk
+    rep = H // G
+
+    xr = x.reshape(b, nc, Q, H, P)
+    dtr = dt.reshape(b, nc, Q, H)
+    Br = B.reshape(b, nc, Q, G, N)
+    Cr = C.reshape(b, nc, Q, G, N)
+
+    dA = dtr * A[None, None, None, :]  # (b, nc, Q, H) log-decay increments
+    cum = jnp.cumsum(dA, axis=2)  # inclusive cumulative log decay
+
+    # intra-chunk (the "duality" quadratic form)
+    # decay L[i, j] = exp(cum_i - cum_j) for i >= j
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (b,nc,Q_i,Q_j,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    Lmat = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bcign,bcjgn->bcijg", Cr, Br)  # (b,nc,Qi,Qj,G)
+    scores = jnp.repeat(scores, rep, axis=-1)  # (b,nc,Qi,Qj,H)
+    w = scores * Lmat * dtr[:, :, None, :, :]  # weight for x_j
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w, xr)
+
+    # inter-chunk recurrence over states
+    seg_end = cum[:, :, -1, :]  # (b, nc, H) total log decay per chunk
+    # state contribution of chunk c: sum_j exp(seg_end - cum_j) dt_j B_j x_j
+    decay_to_end = jnp.exp(seg_end[:, :, None, :] - cum)  # (b,nc,Q,H)
+    Br_h = jnp.repeat(Br, rep, axis=3)  # (b,nc,Q,H,N)
+    Cr_h = jnp.repeat(Cr, rep, axis=3)
+    contrib = jnp.einsum(
+        "bcqhn,bcqhp->bchpn", Br_h * (dtr * decay_to_end)[..., None], xr
+    )  # (b,nc,H,P,N)
+
+    def scan_fn(state, inp):
+        contrib_c, seg_end_c = inp  # (b,H,P,N), (b,H)
+        new_state = state * jnp.exp(seg_end_c)[:, :, None, None] + contrib_c
+        return new_state, state  # emit state *entering* the chunk
+
+    init = jnp.zeros((b, H, P, N), x.dtype)
+    final_state, states_in = jax.lax.scan(
+        scan_fn,
+        init,
+        (jnp.moveaxis(contrib, 1, 0), jnp.moveaxis(seg_end, 1, 0)),
+    )
+    states_in = jnp.moveaxis(states_in, 0, 1)  # (b, nc, H, P, N)
+
+    # y_inter[i] = exp(cum_i) * C_i . S_in
+    y_inter = jnp.einsum("bcqhn,bchpn->bcqhp", Cr_h * jnp.exp(cum)[..., None], states_in)
+    y = (y_intra + y_inter).reshape(b, L, H, P)
+    return y, final_state
+
+
+def mamba2_block(
+    params: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    cache: Optional[dict] = None,
+):
+    """x: (B, S, d).  cache = {'conv': (B,K-1,C), 'ssm': (B,H,P,N)} for
+    streaming decode (S small, typically 1); None for train/prefill."""
+    sm = cfg.ssm
+    b, s, d = x.shape
+    di = sm.d_inner(d)
+    nh = sm.n_ssm_heads(d)
+    g, n, p_dim = sm.n_groups, sm.d_state, sm.head_dim
+    dt_ = x.dtype
+
+    zxbcdt = x @ params["in_proj"].astype(dt_)
+    z, xin, Bc, Cc, dt_raw = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + g * n, 2 * di + 2 * g * n], axis=-1
+    )
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    conv_out, new_conv_state = _causal_conv(conv_in, params["conv_w"], params["conv_b"], conv_state)
+    xin, Bc, Cc = jnp.split(conv_out, [di, di + g * n], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (b,s,nh)
+    A = -jnp.exp(params["A_log"])  # (nh,) negative
+    xh = xin.reshape(b, s, nh, p_dim)
+    Bh = Bc.reshape(b, s, g, n).astype(jnp.float32)
+    Ch = Cc.reshape(b, s, g, n).astype(jnp.float32)
+
+    if cache is None:
+        # pad sequence to a chunk multiple
+        pad = (-s) % sm.chunk
+        if pad:
+            xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            Bh = jnp.pad(Bh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            Ch = jnp.pad(Ch, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        y, ssm_state = _ssd_chunked(
+            xh.astype(jnp.float32), dt, A, Bh, Ch, sm.chunk
+        )
+        y = y[:, :s]
+    else:
+        # recurrent single-step (or short-segment) update
+        rep = nh // g
+
+        def step(state, inp):
+            x_t, dt_t, B_t, C_t = inp  # (b,nh,p), (b,nh), (b,g,n), (b,g,n)
+            Bh_t = jnp.repeat(B_t, rep, axis=1)  # (b,nh,n)
+            Ch_t = jnp.repeat(C_t, rep, axis=1)
+            decay = jnp.exp(dt_t * A[None, :])  # (b,nh)
+            new_state = state * decay[..., None, None] + jnp.einsum(
+                "bh,bhn,bhp->bhpn", dt_t, Bh_t, x_t
+            )
+            y_t = jnp.einsum("bhpn,bhn->bhp", new_state, Ch_t)
+            return new_state, y_t
+
+        xs = (
+            jnp.moveaxis(xh.astype(jnp.float32), 1, 0),
+            jnp.moveaxis(dt, 1, 0),
+            jnp.moveaxis(Bh, 1, 0),
+            jnp.moveaxis(Ch, 1, 0),
+        )
+        ssm_state, ys = jax.lax.scan(step, cache["ssm"].astype(jnp.float32), xs)
+        y = jnp.moveaxis(ys, 0, 1)  # (b,s,nh,p)
+
+    y = y + xh.astype(jnp.float32) * params["D"][None, None, :, None]
+    y = y.reshape(b, s, di).astype(dt_)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, params["norm"], cfg.norm_eps)
+    out = y @ params["out_proj"].astype(dt_)
+    new_cache = {"conv": new_conv_state, "ssm": ssm_state.astype(jnp.float32)}
+    return out, new_cache
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int) -> dict:
+    sm = cfg.ssm
+    d = cfg.d_model
+    di = sm.d_inner(d)
+    nh = sm.n_ssm_heads(d)
+    conv_dim = di + 2 * sm.n_groups * sm.d_state
+    return {
+        "conv": jnp.zeros((batch, sm.conv_kernel - 1, conv_dim), jnp.float32),
+        "ssm": jnp.zeros((batch, nh, sm.head_dim, sm.d_state), jnp.float32),
+    }

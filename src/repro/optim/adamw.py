@@ -1,0 +1,73 @@
+"""AdamW + global-norm clipping + schedules, dependency-free.
+
+State layout mirrors the param pytree so FSDP-style sharding rules apply to
+optimizer state unchanged (m/v shard exactly like their parameter).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def init_opt_state(params) -> OptState:
+    """Moments are always f32 (params may be stored bf16)."""
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(jnp.zeros((), jnp.int32), jax.tree.map(f32, params), jax.tree.map(f32, params))
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def apply_updates(params, grads, state: OptState, cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree.map(lambda g: (g * scale).astype(jnp.float32), grads)
+
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state.m, grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state.v, grads)
+    mh = jax.tree.map(lambda m_: m_ / (1 - b1 ** step.astype(jnp.float32)), m)
+    vh = jax.tree.map(lambda v_: v_ / (1 - b2 ** step.astype(jnp.float32)), v)
+
+    def upd(p, mh_, vh_):
+        u = mh_ / (jnp.sqrt(vh_) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mh, vh)
+    return new_params, OptState(step, m, v), {"grad_norm": gnorm, "lr": lr}

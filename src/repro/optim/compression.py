@@ -1,0 +1,76 @@
+"""Gradient compression for cross-pod all-reduce.
+
+At 2+ pods the data-parallel gradient all-reduce crosses the (slow)
+inter-pod links; int8 block-quantized compression with error feedback cuts
+those bytes 4x(vs f32)/2x(vs bf16) at negligible quality cost.  This is the
+standard large-scale distributed-optimization trick (1-bit Adam family) in
+its simplest robust form:
+
+    q = round(g / s),  s = max|g| per block   (int8 payload + f32 scale)
+    residual r = g - q * s   (carried to the next step: error feedback)
+
+Usage: wrap the gradient tree before `jax.lax.pmean`-style reduction on the
+'pod' axis; the all-reduce then moves int8.  Under jit+pjit the quantized
+tree simply reduces over the pod axis like any other pytree.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressedGrads(NamedTuple):
+    q: Any  # int8 tree
+    scale: Any  # f32 per-block scales
+
+
+def _block_shape(x: jax.Array, block: int):
+    n = x.size
+    pad = (-n) % block
+    return n, pad
+
+
+def quantize(grads, block: int = 256):
+    """int8 block quantization with per-block absmax scales."""
+
+    def one(g):
+        g = g.astype(jnp.float32)
+        n = g.size
+        pad = (-n) % block
+        flat = jnp.pad(g.reshape(-1), (0, pad)).reshape(-1, block)
+        s = jnp.max(jnp.abs(flat), axis=1, keepdims=True) / 127.0
+        s = jnp.maximum(s, 1e-12)
+        q = jnp.clip(jnp.round(flat / s), -127, 127).astype(jnp.int8)
+        return q, s[:, 0]
+
+    qs = jax.tree.map(one, grads)
+    q = jax.tree.map(lambda t: t[0], qs, is_leaf=lambda t: isinstance(t, tuple))
+    s = jax.tree.map(lambda t: t[1], qs, is_leaf=lambda t: isinstance(t, tuple))
+    return CompressedGrads(q, s)
+
+
+def dequantize(c: CompressedGrads, like, block: int = 256):
+    def one(q, s, ref):
+        flat = q.astype(jnp.float32) * s[:, None]
+        return flat.reshape(-1)[: ref.size].reshape(ref.shape)
+
+    return jax.tree.map(one, c.q, c.scale, like)
+
+
+def compress_with_feedback(grads, residual, block: int = 256):
+    """Error-feedback compression: returns (compressed, new_residual).
+
+    new_residual = (g + residual) - dequant(quant(g + residual))
+    """
+    if residual is not None:
+        grads = jax.tree.map(lambda g, r: g.astype(jnp.float32) + r, grads, residual)
+    c = quantize(grads, block)
+    deq = dequantize(c, grads, block)
+    new_residual = jax.tree.map(lambda g, d: g.astype(jnp.float32) - d, grads, deq)
+    return c, new_residual
+
+
+def init_residual(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,66 @@
+"""Assemble the §Dry-run / §Roofline tables from experiments/dryrun/*.json.
+
+  PYTHONPATH=src python -m repro.roofline.report [--mesh 16x16] [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
+
+
+def load_all(mesh: str | None = None) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if mesh and r.get("mesh") != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def fmt_row(r: dict) -> str:
+    if "skipped" in r:
+        return (
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | — | — | — | "
+            f"skip: sub-quadratic only |"
+        )
+    rl = r["roofline"]
+    mem = r["memory"]["total_bytes_per_device"] / 1e9
+    fits = "y" if r["memory"]["fits_16gb_hbm"] else "**n**"
+    note = ""
+    return (
+        f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+        f"{rl['t_compute_s']:.4f} | {rl['t_memory_s']:.4f} | "
+        f"{rl['t_collective_s']:.4f} | {rl['dominant'][:4]} | "
+        f"{rl['useful_flops_ratio']:.2f} | {mem:.1f}/{fits} | "
+        f"{rl['mfu_upper_bound']:.3f} {note}|"
+    )
+
+
+HEADER = (
+    "| arch | shape | mesh | T_comp (s) | T_mem (s) | T_coll (s) | dom | "
+    "useful | GB/dev fits | MFU-UB |\n"
+    "|---|---|---|---|---|---|---|---|---|---|"
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args()
+    recs = load_all(args.mesh)
+    print(HEADER)
+    for r in recs:
+        print(fmt_row(r))
+    done = [r for r in recs if "skipped" not in r]
+    skipped = [r for r in recs if "skipped" in r]
+    print(f"\n{len(done)} compiled cells, {len(skipped)} skips")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,135 @@
+"""Batched request scheduler for serving (continuous batching, slot-based).
+
+A fixed pool of ``n_slots`` decode slots runs in lockstep through the jitted
+decode step (fixed shapes => one compiled program).  Requests queue up,
+claim a free slot (prefill writes its KV segment), decode until EOS or
+max_tokens, release the slot.  Per-slot position vectors handle ragged
+sequence lengths; finished slots keep decoding into a scratch position
+(masked out) until replaced — the standard fixed-shape continuous-batching
+compromise.
+
+Works with any arch config; used by examples/serve_filtered_rag.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.model import forward, init_caches
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (len,) int32
+    max_tokens: int = 32
+    eos_id: int = -1  # -1: never
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ContinuousBatcher:
+    def __init__(self, cfg: ModelConfig, params, n_slots: int = 4, max_seq: int = 512):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.caches = init_caches(cfg, n_slots, max_seq)
+        self.pos = np.zeros(n_slots, np.int32)  # next cache position per slot
+        self.slot_req: list[Optional[Request]] = [None] * n_slots
+        self.queue: deque[Request] = deque()
+        self.last_tok = np.zeros(n_slots, np.int32)
+
+        def decode(params, tokens, caches, positions):
+            # per-slot positions: run slots at their own cache_pos via vmap
+            def one(p, tok, cache, pos):
+                cache = jax.tree.map(lambda a: a[:, None], cache)  # batch dim
+                logits, new_cache = forward(
+                    p, cfg, tokens=tok[None, None], caches=cache, cache_pos=pos
+                )
+                new_cache = jax.tree.map(lambda a: a[:, 0], new_cache)
+                return jnp.argmax(logits[0, -1]).astype(jnp.int32), new_cache
+
+            # vmap over slots: cache leaves are (L, n_slots, ...) -> axis 1
+            return jax.vmap(one, in_axes=(None, 0, 1, 0), out_axes=(0, 1))(
+                params, tokens, caches, positions
+            )
+
+        self._decode = jax.jit(decode)
+
+        def prefill(params, tokens, caches, slot):
+            logits, new_caches = forward(
+                params, cfg, tokens=tokens[None], caches=caches, cache_pos=jnp.int32(0)
+            )
+            return jnp.argmax(logits[0, -1]).astype(jnp.int32), new_caches
+
+        self._prefill_cache = {}
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for s in range(self.n_slots):
+            if self.slot_req[s] is None and self.queue:
+                req = self.queue.popleft()
+                # prefill into slot s: run the model over the prompt with a
+                # single-slot cache view, then scatter it back
+                slot_caches = jax.tree.map(lambda a: a[:, s : s + 1], self.caches)
+                plen = len(req.prompt)
+                logits, new_sc = forward(
+                    self.params,
+                    self.cfg,
+                    tokens=jnp.asarray(req.prompt[None]),
+                    caches=slot_caches,
+                    cache_pos=jnp.int32(0),
+                )
+                self.caches = jax.tree.map(
+                    lambda a, nsc: a.at[:, s : s + 1].set(nsc.astype(a.dtype)),
+                    self.caches,
+                    new_sc,
+                )
+                first = int(jnp.argmax(logits[0, -1]))
+                req.out_tokens.append(first)
+                self.last_tok[s] = first
+                self.pos[s] = plen
+                self.slot_req[s] = req
+
+    def step(self) -> None:
+        """One lockstep decode over all active slots."""
+        self._admit()
+        active = [s for s in range(self.n_slots) if self.slot_req[s] is not None]
+        if not active:
+            return
+        toks, caches = self._decode(
+            self.params,
+            jnp.asarray(self.last_tok),
+            self.caches,
+            jnp.asarray(self.pos),
+        )
+        self.caches = caches
+        toks = np.asarray(toks)
+        for s in active:
+            req = self.slot_req[s]
+            self.pos[s] += 1
+            tok = int(toks[s])
+            req.out_tokens.append(tok)
+            self.last_tok[s] = tok
+            if (
+                len(req.out_tokens) >= req.max_tokens
+                or tok == req.eos_id
+                or self.pos[s] >= self.max_seq - 1
+            ):
+                req.done = True
+                self.slot_req[s] = None
+
+    def run_until_done(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if not self.queue and all(r is None for r in self.slot_req):
+                return
+            self.step()

@@ -1,0 +1,56 @@
+"""Serving steps: prefill and decode, plus greedy sampling.
+
+``serve_step`` (decode) is what the decode_* / long_* dry-run cells lower:
+one new token per request against a seq_len-deep KV cache.  Prefill
+returns last-position logits only (never materializes (B, S, V) logits —
+that alone would exceed HBM at 32k x 256k vocab).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import forward, init_caches
+
+
+def make_prefill_step(cfg: ModelConfig, act_sharding=None, unroll: bool = False, ep=None):
+    """Prefill runs the cache-free (flash-attention) path and *returns* the
+    populated caches — routing prefill through the decode branch would
+    materialize dense (S, T) score buffers."""
+
+    def prefill(params, batch):
+        kw = {}
+        if "inputs_embeds" in batch:
+            kw["inputs_embeds"] = batch["inputs_embeds"]
+        else:
+            kw["tokens"] = batch["tokens"]
+        if "prefix_embeds" in batch:
+            kw["prefix_embeds"] = batch["prefix_embeds"]
+        logits, new_caches = forward(
+            params, cfg, act_sharding=act_sharding, unroll=unroll, ep=ep, **kw
+        )
+        return logits[:, -1, :], new_caches
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, unroll: bool = False):
+    """One token for every sequence in the batch. cache_pos: scalar int32
+    (uniform position — continuous batching handles ragged positions by
+    per-slot pos vectors upstream; see serving/scheduler.py)."""
+
+    def decode(params, tokens, caches, cache_pos):
+        kw = {}
+        if cfg.embed_inputs:
+            kw["tokens"] = tokens
+        else:
+            # audio stub: decode consumes the previous frame embedding
+            kw["inputs_embeds"] = tokens
+        logits, new_caches = forward(params, cfg, caches=caches, cache_pos=cache_pos, unroll=unroll, **kw)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok, logits[:, -1, :], new_caches
+
+    return decode

@@ -1,0 +1,29 @@
+"""Shared fixtures: a small clustered corpus + built index, reused across
+test modules (session scope) to keep CPU build time bounded.
+
+NOTE: no XLA_FLAGS here on purpose — tests must see the single real CPU
+device; only launch/dryrun.py fakes 512 devices.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def corpus():
+    rng = np.random.default_rng(0)
+    n, d, a = 6000, 24, 4
+    centers = rng.normal(size=(40, d)).astype(np.float32) * 3
+    x = (centers[rng.integers(0, 40, n)] + rng.normal(size=(n, d))).astype(np.float32)
+    attrs = rng.uniform(size=(n, a)).astype(np.float32)
+    queries = (centers[rng.integers(0, 40, 16)] + rng.normal(size=(16, d))).astype(np.float32)
+    return x, attrs, queries
+
+
+@pytest.fixture(scope="session")
+def built_index(corpus):
+    from repro.core.index import BuildConfig, build_index
+
+    x, attrs, _ = corpus
+    return build_index(x, attrs, BuildConfig(m=12, nlist=32))

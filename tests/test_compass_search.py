@@ -1,0 +1,161 @@
+"""End-to-end behaviour of CompassSearch against brute-force ground truth,
+covering the paper's claim surface: conjunctions, disjunctions, selectivity
+extremes, ablations, and baselines."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import predicate as P
+from repro.core.baselines import (
+    brute_force,
+    navix_search,
+    postfilter_search,
+    prefilter_search,
+    recall,
+)
+from repro.core.index import BuildConfig, build_index
+from repro.core.search import CompassParams, compass_search
+
+
+def _preds(rng, n_queries, n_attrs, passrate, n_terms, disj=False):
+    preds = []
+    for _ in range(n_queries):
+        terms = []
+        for a in range(n_terms):
+            lo = rng.uniform(0, 1 - passrate)
+            terms.append(P.Pred.range(a, lo, lo + passrate))
+        tree = P.Pred.or_(*terms) if disj else P.Pred.and_(*terms)
+        preds.append(tree.tensor(n_attrs))
+    return P.stack_predicates(preds)
+
+
+def _recall(index, corpus, pred, pm):
+    x, attrs, queries = corpus
+    qj = jnp.asarray(queries)
+    truth = brute_force(jnp.asarray(x), jnp.asarray(attrs), qj, pred, pm.k)
+    res = compass_search(index, qj, pred, pm)
+    n = x.shape[0]
+    return (
+        recall(np.asarray(res.ids), np.asarray(truth.ids), np.asarray(truth.dists), n),
+        res,
+        truth,
+    )
+
+
+def test_unfiltered_high_recall(built_index, corpus):
+    rng = np.random.default_rng(0)
+    pred = _preds(rng, 16, 4, 1.0, 1)
+    r, res, _ = _recall(built_index, corpus, pred, CompassParams(k=10, ef=128))
+    assert r >= 0.85, r
+
+
+def test_moderate_passrate_conjunction(built_index, corpus):
+    rng = np.random.default_rng(1)
+    pred = _preds(rng, 16, 4, 0.3, 2)
+    r, res, _ = _recall(built_index, corpus, pred, CompassParams(k=10, ef=128))
+    assert r >= 0.9, r
+
+
+def test_low_passrate_uses_btree(built_index, corpus):
+    rng = np.random.default_rng(2)
+    pred = _preds(rng, 16, 4, 0.3, 4)  # ~0.8% passrate
+    r, res, _ = _recall(built_index, corpus, pred, CompassParams(k=10, ef=64))
+    assert r >= 0.9, r
+    assert np.asarray(res.stats.n_bcalls).mean() > 0  # relational injection fired
+
+
+def test_disjunction(built_index, corpus):
+    rng = np.random.default_rng(3)
+    pred = _preds(rng, 16, 4, 0.3, 3, disj=True)
+    r, _, _ = _recall(built_index, corpus, pred, CompassParams(k=10, ef=128))
+    assert r >= 0.9, r
+
+
+def test_results_pass_predicate_and_sorted(built_index, corpus):
+    x, attrs, queries = corpus
+    rng = np.random.default_rng(4)
+    pred = _preds(rng, 16, 4, 0.3, 2)
+    res = compass_search(built_index, jnp.asarray(queries), pred, CompassParams(k=10, ef=64))
+    ids = np.asarray(res.ids)
+    dists = np.asarray(res.dists)
+    n = x.shape[0]
+    lo, hi = np.asarray(pred.lo), np.asarray(pred.hi)
+    for b in range(ids.shape[0]):
+        valid = ids[b] < n
+        assert np.all(np.diff(dists[b][np.isfinite(dists[b])]) >= 0)  # sorted
+        for i in ids[b][valid]:
+            ok = np.any(np.all((attrs[i] >= lo[b]) & (attrs[i] <= hi[b]), axis=-1))
+            assert ok, (b, i)
+        # returned distances match recomputed distances
+        want = ((x[ids[b][valid]] - queries[b]) ** 2).sum(-1)
+        np.testing.assert_allclose(dists[b][valid], want, rtol=1e-4)
+
+
+def test_ef_monotonically_improves(built_index, corpus):
+    rng = np.random.default_rng(5)
+    pred = _preds(rng, 16, 4, 0.3, 1)
+    r32, *_ = _recall(built_index, corpus, pred, CompassParams(k=10, ef=32))
+    r256, *_ = _recall(built_index, corpus, pred, CompassParams(k=10, ef=256))
+    assert r256 >= r32 - 0.02
+    assert r256 >= 0.95
+
+
+def test_navix_fails_low_passrate_compass_does_not(built_index, corpus):
+    x, attrs, queries = corpus
+    rng = np.random.default_rng(6)
+    pred = _preds(rng, 16, 4, 0.02, 1)
+    qj = jnp.asarray(queries)
+    truth = brute_force(jnp.asarray(x), jnp.asarray(attrs), qj, pred, 10)
+    n = x.shape[0]
+    nav = navix_search(built_index, qj, pred, CompassParams(k=10, ef=128))
+    com = compass_search(built_index, qj, pred, CompassParams(k=10, ef=128))
+    r_nav = recall(np.asarray(nav.ids), np.asarray(truth.ids), np.asarray(truth.dists), n)
+    r_com = recall(np.asarray(com.ids), np.asarray(truth.ids), np.asarray(truth.dists), n)
+    assert r_com >= 0.9, r_com
+    assert r_com > r_nav  # the paper's central robustness claim
+
+
+def test_prefilter_is_exact(built_index, corpus):
+    x, attrs, queries = corpus
+    rng = np.random.default_rng(7)
+    pred = _preds(rng, 16, 4, 0.1, 1)
+    qj = jnp.asarray(queries)
+    truth = brute_force(jnp.asarray(x), jnp.asarray(attrs), qj, pred, 10)
+    pf = prefilter_search(built_index, qj, pred, 10)
+    n = x.shape[0]
+    assert recall(np.asarray(pf.ids), np.asarray(truth.ids), np.asarray(truth.dists), n) == 1.0
+
+
+def test_postfilter_runs(built_index, corpus):
+    x, attrs, queries = corpus
+    rng = np.random.default_rng(8)
+    pred = _preds(rng, 16, 4, 0.5, 1)
+    res = postfilter_search(built_index, jnp.asarray(queries), pred, 10)
+    ids = np.asarray(res.ids)
+    lo, hi = np.asarray(pred.lo), np.asarray(pred.hi)
+    n = x.shape[0]
+    for b in range(ids.shape[0]):
+        for i in ids[b][ids[b] < n]:
+            assert np.any(np.all((attrs[i] >= lo[b]) & (attrs[i] <= hi[b]), axis=-1))
+
+
+def test_compass_relational_ablation(built_index, corpus):
+    rng = np.random.default_rng(9)
+    pred = _preds(rng, 16, 4, 0.3, 1)
+    pm = CompassParams(k=10, ef=64, use_graph=False)
+    r, res, _ = _recall(built_index, corpus, pred, pm)
+    assert np.asarray(res.stats.n_bcalls).mean() > 0
+    # runs and returns only valid, predicate-passing records
+    assert r >= 0.2
+
+
+def test_unsatisfiable_predicate_terminates_empty(built_index, corpus):
+    x, attrs, queries = corpus
+    preds = P.stack_predicates(
+        [P.Pred.range(0, 2.0, 3.0).tensor(4) for _ in range(16)]
+    )  # attrs are U[0,1] -> empty
+    res = compass_search(built_index, jnp.asarray(queries), preds, CompassParams(k=10, ef=64))
+    assert np.all(~np.isfinite(np.asarray(res.dists)))
+    assert np.all(np.asarray(res.ids) == x.shape[0])

@@ -1,0 +1,110 @@
+"""Per-kernel validation: shape/dtype sweeps, interpret-mode Pallas vs the
+pure-jnp oracle in ref.py, plus hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ops, ref
+
+
+def _mk_corpus(rng, n, d, a):
+    vectors = rng.normal(size=(n + 1, d)).astype(np.float32)
+    attrs = rng.uniform(size=(n + 1, a)).astype(np.float32)
+    attrs[-1] = np.inf  # sentinel row
+    return jnp.asarray(vectors), jnp.asarray(attrs)
+
+
+@pytest.mark.parametrize("n,d,a,t,v", [
+    (50, 8, 2, 1, 16),
+    (200, 32, 4, 4, 33),   # non-multiple V
+    (100, 17, 3, 2, 8),    # odd dim
+])
+def test_filter_distance_matches_ref(n, d, a, t, v):
+    rng = np.random.default_rng(0)
+    vectors, attrs = _mk_corpus(rng, n, d, a)
+    idx = jnp.asarray(rng.integers(0, n + 1, v).astype(np.int32))
+    mask = jnp.asarray(rng.uniform(size=v) > 0.3)
+    q = jnp.asarray(rng.normal(size=d).astype(np.float32))
+    lo = jnp.asarray(rng.uniform(0, 0.5, (t, a)).astype(np.float32))
+    hi = jnp.asarray(rng.uniform(0.5, 1.0, (t, a)).astype(np.float32))
+    d_k, p_k = ops.filter_distance(vectors, attrs, idx, mask, q, lo, hi)
+    d_r, p_r = ref.filter_distance_ref(vectors, attrs, idx, mask, q, lo, hi)
+    np.testing.assert_allclose(np.asarray(d_k), np.asarray(d_r), rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(p_k), np.asarray(p_r))
+
+
+@pytest.mark.parametrize("b,c,d,dtype", [
+    (4, 100, 32, jnp.float32),
+    (3, 257, 48, jnp.float32),   # non-multiples of block
+    (8, 64, 130, jnp.bfloat16),  # odd feature dim + bf16
+])
+def test_ivf_score_matches_ref(b, c, d, dtype):
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(b, d))).astype(dtype)
+    cent = jnp.asarray(rng.normal(size=(c, d))).astype(dtype)
+    got = ops.ivf_score(q, cent, bb=2, bc=64, bd=32)
+    want = ref.ivf_score_ref(q, cent)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("b,s,h,kv,dh,dtype", [
+    (2, 128, 4, 4, 32, jnp.float32),
+    (1, 200, 8, 2, 64, jnp.float32),   # GQA + ragged seq
+    (2, 96, 4, 1, 16, jnp.bfloat16),   # MQA + bf16
+])
+def test_flash_attention_matches_ref(b, s, h, kv, dh, dtype):
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.normal(size=(b, s, h, dh)) * 0.5).astype(dtype)
+    k = jnp.asarray(rng.normal(size=(b, s, kv, dh)) * 0.5).astype(dtype)
+    v = jnp.asarray(rng.normal(size=(b, s, kv, dh)) * 0.5).astype(dtype)
+    got = ops.flash_attention(q, k, v, bq=64, bk=64)
+    want = ref.flash_attention_ref(q, k, v)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    v=st.integers(1, 40),
+    d=st.integers(2, 24),
+    seed=st.integers(0, 100),
+)
+def test_property_filter_distance(v, d, seed):
+    """Masked entries are +inf/false; unmasked distances are exact."""
+    rng = np.random.default_rng(seed)
+    n, a, t = 30, 2, 2
+    vectors, attrs = _mk_corpus(rng, n, d, a)
+    idx = jnp.asarray(rng.integers(0, n, v).astype(np.int32))
+    mask = jnp.asarray(rng.uniform(size=v) > 0.5)
+    q = jnp.asarray(rng.normal(size=d).astype(np.float32))
+    lo = jnp.zeros((t, a), jnp.float32)
+    hi = jnp.ones((t, a), jnp.float32)
+    d_k, p_k = ops.filter_distance(vectors, attrs, idx, mask, q, lo, hi)
+    m = np.asarray(mask)
+    assert np.all(np.isinf(np.asarray(d_k)[~m]))
+    assert not np.any(np.asarray(p_k)[~m])
+    want = ((np.asarray(vectors)[np.asarray(idx)[m]] - np.asarray(q)) ** 2).sum(-1)
+    np.testing.assert_allclose(np.asarray(d_k)[m], want, rtol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(s=st.integers(3, 80), seed=st.integers(0, 50))
+def test_property_flash_attention_row_stochastic(s, seed):
+    """Causality: output at position 0 equals v[0] exactly (only itself
+    visible); all outputs are finite."""
+    rng = np.random.default_rng(seed)
+    b, h, dh = 1, 2, 8
+    q = jnp.asarray(rng.normal(size=(b, s, h, dh)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, s, h, dh)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, s, h, dh)).astype(np.float32))
+    out = ops.flash_attention(q, k, v, bq=32, bk=32)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    np.testing.assert_allclose(
+        np.asarray(out[:, 0]), np.asarray(v[:, 0]), rtol=1e-5, atol=1e-5
+    )

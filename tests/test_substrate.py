@@ -1,0 +1,124 @@
+"""Substrate tests: optimizer, data pipeline, checkpoint/restart/elastic,
+gradient compression, watchdog."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.checkpoint.checkpoint import latest_steps, restore, save
+from repro.data.synthetic import DataConfig, SyntheticTokens
+from repro.ft.elastic import ElasticPlan, remap_data_shards
+from repro.ft.watchdog import StepWatchdog, WatchdogConfig
+from repro.optim.adamw import AdamWConfig, apply_updates, init_opt_state, schedule
+from repro.optim.compression import compress_with_feedback, dequantize, init_residual, quantize
+
+
+def test_adamw_reduces_quadratic_loss():
+    cfg = AdamWConfig(lr=0.1, warmup_steps=1, total_steps=200, weight_decay=0.0)
+    params = {"w": jnp.asarray([5.0, -3.0, 2.0])}
+    state = init_opt_state(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
+
+    l0 = float(loss(params))
+    for _ in range(100):
+        grads = jax.grad(loss)(params)
+        params, state, _ = apply_updates(params, grads, state, cfg)
+    assert float(loss(params)) < 0.05 * l0
+
+
+def test_schedule_warmup_and_decay():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_ratio=0.1)
+    assert float(schedule(cfg, jnp.int32(0))) == 0.0
+    assert abs(float(schedule(cfg, jnp.int32(10))) - 1.0) < 1e-6
+    assert float(schedule(cfg, jnp.int32(100))) == pytest.approx(0.1, rel=1e-3)
+
+
+def test_grad_clipping_bounds_update():
+    cfg = AdamWConfig(lr=1e-3, clip_norm=1.0, warmup_steps=0, weight_decay=0.0)
+    params = {"w": jnp.zeros(4)}
+    state = init_opt_state(params)
+    grads = {"w": jnp.full((4,), 1e6)}
+    _, _, metrics = apply_updates(params, grads, state, cfg)
+    assert float(metrics["grad_norm"]) > 1e5  # raw norm reported
+
+
+def test_data_pipeline_deterministic_and_shardable():
+    cfg = DataConfig(vocab_size=100, seq_len=32, global_batch=8, seed=42)
+    ds = SyntheticTokens(cfg)
+    b1 = ds.batch(step=3)
+    b2 = ds.batch(step=3)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # shards partition the batch deterministically
+    s0 = ds.batch(step=3, shard=0, n_shards=2)
+    assert s0["tokens"].shape == (4, 32)
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+
+
+def test_checkpoint_roundtrip_and_retention(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3), "b": {"c": jnp.float32(2.5)}}
+    for step in (10, 20, 30, 40):
+        save(str(tmp_path), step, tree, keep=2)
+    assert latest_steps(str(tmp_path)) == [30, 40]
+    like = jax.tree.map(jnp.zeros_like, tree)
+    restored, step = restore(str(tmp_path), like)
+    assert step == 40
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.asarray(tree["a"]))
+
+
+def test_checkpoint_restore_detects_mismatch(tmp_path):
+    save(str(tmp_path), 1, {"a": jnp.zeros(3)})
+    with pytest.raises(ValueError):
+        restore(str(tmp_path), {"different": jnp.zeros(3)})
+
+
+def test_elastic_plan_and_shard_remap():
+    plan = ElasticPlan(old_devices=256, new_devices=512, global_batch=512)
+    assert plan.validate() == []
+    bad = ElasticPlan(old_devices=256, new_devices=384, global_batch=256)
+    assert bad.validate()
+    rec = remap_data_shards(100, 256, 512)
+    assert rec["new_shards"] == 512
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 4096), st.integers(0, 3))
+def test_property_quantize_dequantize_error_bounded(n, seed):
+    rng = np.random.default_rng(seed)
+    g = {"w": jnp.asarray(rng.normal(size=n).astype(np.float32))}
+    c = quantize(g, block=128)
+    deq = dequantize(c, g, block=128)
+    scale = np.abs(np.asarray(g["w"])).reshape(-1)
+    err = np.abs(np.asarray(deq["w"]) - np.asarray(g["w"]))
+    # error bounded by half a quantization bucket of the block absmax
+    assert err.max() <= (np.abs(np.asarray(g["w"])).max() / 127.0) * 0.75 + 1e-7
+
+
+def test_error_feedback_conserves_signal():
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.normal(size=512).astype(np.float32))}
+    residual = init_residual(g)
+    acc = np.zeros(512, np.float32)
+    for _ in range(8):
+        c, residual = compress_with_feedback(g, residual)
+        acc += np.asarray(dequantize(c, g)["w"])
+    # over k steps, sum of dequantized ~= k * g (residual carries the error)
+    np.testing.assert_allclose(acc / 8, np.asarray(g["w"]), atol=2e-2)
+
+
+def test_watchdog_flags_stragglers():
+    import time
+
+    wd = StepWatchdog(WatchdogConfig(straggler_factor=5.0, warmup_steps=1))
+    flagged = []
+    for step in range(6):
+        wd.start_step()
+        time.sleep(0.15 if step == 4 else 0.01)
+        flagged.append(wd.end_step(step))
+    assert flagged[4] and not any(flagged[:4]) and not flagged[5]
