@@ -33,6 +33,32 @@ D = int(os.environ.get("REPRO_BENCH_D", 48))
 N_ATTRS = 4
 N_QUERIES = int(os.environ.get("REPRO_BENCH_Q", 64))
 K = 10
+# scoring backend for the compass runs: "ref" | "pallas" | "auto"
+BACKEND = os.environ.get("REPRO_BENCH_BACKEND", "auto")
+
+
+def bench_metadata() -> dict:
+    """Provenance block written into every BENCH_*.json: which engine and
+    backend produced the numbers, on what platform/scale — so benchmark
+    trajectories across PRs stay attributable."""
+    from repro.core.search import ENGINE_VERSION, resolve_backend
+
+    return {
+        "engine_version": ENGINE_VERSION,
+        "backend_requested": BACKEND,
+        "backend": resolve_backend(BACKEND).name,
+        # prefilter/brute-force rows are pure matmul scans with no engine
+        # backend; the backend fields describe every compass/navix/postfilter
+        # row in the file.
+        "backend_applies_to": ["compass*", "navix", "postfilter"],
+        "jax_version": jax.__version__,
+        "platform": jax.default_backend(),
+        "n": N,
+        "d": D,
+        "n_attrs": N_ATTRS,
+        "n_queries": N_QUERIES,
+        "k": K,
+    }
 
 # paper-aligned defaults
 EF_SWEEP = (16, 32, 64, 128, 256, 512)
@@ -110,19 +136,21 @@ def run_method(method: str, idx, x, attrs, queries, pred, ef: int, truth) -> Run
     n = x.shape[0]
     t0 = time.time()
     if method == "compass":
-        res = compass_search(idx, qj, pred, CompassParams(k=K, ef=ef))
+        res = compass_search(idx, qj, pred, CompassParams(k=K, ef=ef, backend=BACKEND))
         res.ids.block_until_ready()
     elif method == "compass_graph":  # ablation handled by caller's index
-        res = compass_search(idx, qj, pred, CompassParams(k=K, ef=ef))
+        res = compass_search(idx, qj, pred, CompassParams(k=K, ef=ef, backend=BACKEND))
         res.ids.block_until_ready()
     elif method == "compass_relational":
-        res = compass_search(idx, qj, pred, CompassParams(k=K, ef=ef, use_graph=False))
+        res = compass_search(
+            idx, qj, pred, CompassParams(k=K, ef=ef, use_graph=False, backend=BACKEND)
+        )
         res.ids.block_until_ready()
     elif method == "navix":
-        res = navix_search(idx, qj, pred, CompassParams(k=K, ef=ef))
+        res = navix_search(idx, qj, pred, CompassParams(k=K, ef=ef, backend=BACKEND))
         res.ids.block_until_ready()
     elif method == "postfilter":
-        res = postfilter_search(idx, qj, pred, K, ef0=ef)
+        res = postfilter_search(idx, qj, pred, K, ef0=ef, backend=BACKEND)
         res.ids.block_until_ready()
     elif method == "prefilter":
         bf = prefilter_search(idx, qj, pred, K)

@@ -6,12 +6,22 @@
   bench_qps_recall    -> Figs. 8-10
   bench_ablation      -> Fig. 11
 
-``python -m benchmarks.run [--only name] [--quick]``
+``python -m benchmarks.run [--only name] [--quick] [--json-dir DIR]``
+
+Each module's rows are also written to ``BENCH_<name>.json`` next to this
+file (or under ``--json-dir``), wrapped with a provenance block (engine
+version, scoring backend, platform, corpus scale — see
+``common.bench_metadata``) so benchmark trajectories across PRs are
+attributable to the code that produced them.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import json
+import os
 import time
+
 
 ALL = (
     "bench_index_size",
@@ -22,14 +32,50 @@ ALL = (
 )
 
 
+def _jsonable(obj):
+    """Benchmark rows are nested tuples/dicts of RunResults and numpy
+    scalars; lower them to plain JSON types."""
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        return _jsonable(dataclasses.asdict(obj))
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if hasattr(obj, "tolist"):  # numpy / jax array or scalar
+        return _jsonable(obj.tolist())
+    if hasattr(obj, "item"):  # other 0-d scalar wrappers
+        return obj.item()
+    if isinstance(obj, (str, int, float, bool)) or obj is None:
+        return obj
+    return repr(obj)
+
+
+def write_json(name: str, rows, wall_s: float, json_dir: str) -> str:
+    from . import common as C
+
+    payload = {
+        "bench": name,
+        "meta": C.bench_metadata(),
+        "wall_s": wall_s,
+        "rows": _jsonable(rows),
+    }
+    os.makedirs(json_dir, exist_ok=True)
+    path = os.path.join(json_dir, f"BENCH_{name.removeprefix('bench_')}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--quick", action="store_true", help="shrink corpus for CI")
+    ap.add_argument(
+        "--json-dir", default=os.path.dirname(os.path.abspath(__file__)),
+        help="where BENCH_<name>.json files land",
+    )
     args = ap.parse_args()
     if args.quick:
-        import os
-
         os.environ.setdefault("REPRO_BENCH_N", "20000")
         os.environ.setdefault("REPRO_BENCH_Q", "32")
     names = [args.only] if args.only else list(ALL)
@@ -37,8 +83,10 @@ def main() -> None:
         mod = __import__(f"benchmarks.{name}", fromlist=["run"])
         t0 = time.time()
         print(f"==== {name} ====", flush=True)
-        mod.run()
-        print(f"==== {name} done in {time.time()-t0:.0f}s ====", flush=True)
+        rows = mod.run()
+        wall = time.time() - t0
+        path = write_json(name, rows, wall, args.json_dir)
+        print(f"==== {name} done in {wall:.0f}s -> {path} ====", flush=True)
 
 
 if __name__ == "__main__":

@@ -102,6 +102,7 @@ def postfilter_search(
     ef0: int = 64,
     max_rounds: int = 4,
     metric: str = "l2",
+    backend: str = "auto",
 ) -> SearchResult:
     """§III.D post-filtering with host-side k' doubling.
 
@@ -126,7 +127,7 @@ def postfilter_search(
     ef = ef0
     last = None
     for _ in range(max_rounds):
-        pm = CompassParams(k=ef, ef=ef, use_btree=False, metric=metric)
+        pm = CompassParams(k=ef, ef=ef, use_btree=False, metric=metric, backend=backend)
         res = compass_search(index, queries, true_pred, pm)
         total_dist = total_dist + res.stats.n_dist
         total_steps = total_steps + res.stats.n_steps

@@ -1,0 +1,33 @@
+"""The Compass execution engine: CompassSearch (Algorithms 1-4) as three
+coordinated layers behind one public entry point.
+
+  * :mod:`~repro.core.engine.state`      — fixed-capacity queues, the fused
+    search state, the VISIT state update, credit/round pacing.
+  * :mod:`~repro.core.engine.graph_iter` / :mod:`~repro.core.engine.btree_iter`
+    — the pull-based G.NEXT / B.NEXT iterators, each a ``step(state)`` over
+    the shared state.
+  * :mod:`~repro.core.engine.backend`    — pluggable scoring (``"ref"`` jnp
+    gathers vs ``"pallas"`` fused TPU kernels), selected by
+    ``CompassParams.backend``.
+  * :mod:`~repro.core.engine.driver`     — Algorithm 1's coordination loop
+    and the public :func:`compass_search`.
+
+``repro.core.search`` re-exports the public names for compatibility.
+"""
+from .backend import PallasBackend, RefBackend, VisitBackend, resolve_backend
+from .driver import ENGINE_VERSION, CompassParams, compass_search
+from .state import EngineState, FixedQueue, SearchResult, SearchStats
+
+__all__ = [
+    "ENGINE_VERSION",
+    "CompassParams",
+    "EngineState",
+    "FixedQueue",
+    "PallasBackend",
+    "RefBackend",
+    "SearchResult",
+    "SearchStats",
+    "VisitBackend",
+    "compass_search",
+    "resolve_backend",
+]

@@ -1,0 +1,134 @@
+"""Scoring backends for the Compass execution engine.
+
+A :class:`VisitBackend` answers the two score queries the engine makes on
+its hot path, and nothing else:
+
+  * ``visit_scores``    — Algorithm 4's distance + predicate evaluation over
+    a fixed-size visit list (the per-step hot spot).
+  * ``centroid_scores`` — B.OPEN / G.OPEN's exact centroid ranking input
+    (one blocked scan per query *batch*, hoisted out of the per-query vmap
+    so the pallas path gets the cross-query MXU blocking ``ivf_score`` is
+    built for; see index.py for why this replaces the paper's cluster
+    graph G').
+
+Candidate *generation* (queue management, graph expansion, B+-tree cursors)
+stays in the iterators — the NaviX/CHASE lesson that hybrid-query engines
+need generation and scoring separable.  Backends agree exactly on
+semantics (masked entries score ``+inf`` / ``False``; the same records
+pass, the same distances are returned for VISIT), and the parity suite in
+tests/test_compass_search.py asserts end-to-end identical ids/dists on its
+fixed workloads.  One caveat keeps this short of a universal bit-for-bit
+guarantee: ``ivf_score`` computes centroid distances via the
+``||q||² - 2q·c + ||c||²`` MXU expansion while the ref path computes
+``Σ(c-q)²``, so two *near-equidistant* clusters can swap rank order under
+float32 rounding, which may reorder cluster visits on adversarial data.
+Result-queue contents are distance-sorted either way; only tie-adjacent
+candidate sets can differ, and never for VISIT scoring itself (the
+filter_distance kernel evaluates the same f32 ``Σ(v-q)²`` as the ref
+gather).
+
+``"ref"`` is the plain-jnp gather path (the original core/search.py math,
+moved verbatim).  ``"pallas"`` routes VISIT through the fused
+``kernels.filter_distance`` TPU kernel and centroid ranking through
+``kernels.ivf_score``; on CPU the kernels run in Pallas interpret mode (see
+kernels/ops.py) so tests exercise the kernel path.  ``"auto"`` resolves to
+``"pallas"`` on TPU and ``"ref"`` elsewhere.
+"""
+from __future__ import annotations
+
+from typing import Protocol
+
+import jax
+import jax.numpy as jnp
+
+from .. import predicate as P
+
+
+class VisitBackend(Protocol):
+    """Scoring interface consumed by :func:`engine.state.visit` and the
+    driver's OPEN step."""
+
+    name: str
+
+    def visit_scores(self, index, q, pred, safe_ids, mask, metric):
+        """(dist (V,) f32 with +inf where masked; passing (V,) bool)."""
+        ...
+
+    def centroid_scores(self, index, queries, metric):
+        """Per-cluster distance scores for a query batch: (B, nlist) f32."""
+        ...
+
+
+class RefBackend:
+    """Plain jnp gathers — the original search hot path, moved verbatim."""
+
+    name = "ref"
+
+    def visit_scores(self, index, q, pred, safe_ids, mask, metric):
+        vecs = index.vectors[safe_ids]  # (V, d)
+        if metric == "l2":
+            diff = vecs - q[None, :]
+            dist = jnp.sum(diff * diff, axis=-1)
+        else:
+            dist = -(vecs @ q)
+        dist = jnp.where(mask, dist, jnp.inf)
+        attrs = index.attrs[safe_ids]
+        passing = P.evaluate(pred, attrs) & mask
+        return dist, passing
+
+    def centroid_scores(self, index, queries, metric):
+        if metric == "l2":
+            cdiff = index.centroids[None, :, :] - queries[:, None, :]
+            return jnp.sum(cdiff * cdiff, axis=-1)
+        return -(queries @ index.centroids.T)
+
+
+class PallasBackend:
+    """Fused Pallas kernels on the hot path.
+
+    VISIT goes through ``kernels.filter_distance`` (scalar-prefetched row
+    gather + VPU distance + DNF predicate in one pass over VMEM) and the
+    centroid ranking through ``kernels.ivf_score`` (blocked MXU distance
+    matrix).  Both kernels implement squared L2 only, so for other metrics
+    this backend falls back to the reference math — the engine still runs,
+    just without kernel acceleration.
+    """
+
+    name = "pallas"
+
+    def visit_scores(self, index, q, pred, safe_ids, mask, metric):
+        if metric != "l2":
+            return RefBackend().visit_scores(index, q, pred, safe_ids, mask, metric)
+        from ...kernels import ops
+
+        dist, passing = ops.filter_distance(
+            index.vectors, index.attrs, safe_ids, mask, q, pred.lo, pred.hi
+        )
+        return dist, passing & mask
+
+    def centroid_scores(self, index, queries, metric):
+        if metric != "l2":
+            return RefBackend().centroid_scores(index, queries, metric)
+        from ...kernels import ops
+
+        return ops.ivf_score(queries, index.centroids)
+
+
+_BACKENDS = {"ref": RefBackend(), "pallas": PallasBackend()}
+
+
+def resolve_backend(name: str) -> VisitBackend:
+    """Map a CompassParams.backend value to a backend instance.
+
+    ``"auto"`` picks the Pallas kernels when running natively on TPU and the
+    reference path elsewhere (interpret-mode kernels are correct on CPU but
+    slower than XLA's fused gathers; tests opt in explicitly).
+    """
+    if name == "auto":
+        name = "pallas" if jax.default_backend() == "tpu" else "ref"
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; expected one of {sorted(_BACKENDS)} or 'auto'"
+        ) from None

@@ -1,0 +1,165 @@
+"""The Compass driver loop — Algorithm 1's G.NEXT/B.NEXT coordination as
+one fused, batched ``lax.while_loop``.
+
+Faithfulness notes (full discussion in DESIGN.md §Adaptation):
+
+* The paper structures the search as two pull-based iterators (G.NEXT /
+  B.NEXT) coordinating through a shared candidate queue.  On TPU, function
+  calls are free but *dynamic shapes are not*, so the two iterators become
+  two branches of a single fixed-shape loop body; the shared candidate
+  queue, visited set, progressive ``efs``, passrate-adaptive expansion,
+  round-paced result returns and relational injection are all preserved
+  with identical candidate flow.  The iterators live in graph_iter.py /
+  btree_iter.py behind the same ``step(state) -> state`` shape; scoring is
+  pluggable via backend.py (``"ref"`` jnp gathers vs ``"pallas"`` fused
+  kernels); this module is only the coordination.
+* The paper's cluster graph G' (§IV.C) is replaced by an exact centroid
+  ranking — one MXU matmul at OPEN — consumed through a cursor, preserving
+  the on-demand semantics (see index.py docstring).
+* Visited is a plain bool vector (a packed bitmap is a pure memory
+  optimization; noted in DESIGN.md §Perf).
+
+The same loop, parameterized by :class:`CompassParams`, also implements the
+paper's baselines and ablations:
+  * ``in_filter=True, use_btree=False``  -> NaviX/ACORN-style in-filtering.
+  * ``use_btree=False``                  -> plain progressive HNSW
+    (post-filtering building block).
+  * ``use_graph=False``                  -> CompassRelational ablation.
+  * index built with ``nlist=1``         -> CompassGraph ablation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .. import predicate as P
+from ..index import CompassIndex
+from . import btree_iter, graph_iter
+from . import state as S
+from .backend import VisitBackend, resolve_backend
+from .state import INF, EngineState, FixedQueue, SearchResult, SearchStats
+
+#: Bumped whenever the engine's candidate flow changes in a way that could
+#: move benchmark trajectories (recorded in BENCH_*.json by benchmarks/).
+ENGINE_VERSION = "engine/1"
+
+
+@dataclasses.dataclass(frozen=True)
+class CompassParams:
+    k: int = 10  # results to return
+    ef: int = 64  # target size of the filtered result queue (paper `ef`)
+    alpha: float = 0.3  # one-hop passrate threshold (paper default)
+    beta: float = 0.05  # two-hop / pivot passrate threshold (paper default)
+    efs0: int = 16  # initial progressive search width
+    stepsize: int = 16  # progressive efs increment (paper `stepsize`)
+    ef_cap: int = 0  # max efs; 0 => 2 * ef + 32
+    cand_cap: int = 0  # shared queue capacity; 0 => ef_cap + 64
+    efi: int = 32  # records fetched per B.NEXT (paper `efi`)
+    k2: int = 16  # two-hop visit budget per expansion
+    max_steps: int = 0  # hard iteration budget; 0 => heuristic
+    metric: str = "l2"
+    use_graph: bool = True  # False => CompassRelational ablation
+    use_btree: bool = True  # False => pure graph (NaviX / HNSW modes)
+    in_filter: bool = False  # True => NaviX-style distance-only-if-passing
+    adaptive_entry: bool = True  # IVF-guided entry (False: global medoid)
+    entry_fanout: int = 4  # medoids of the top-R clusters seed the traversal
+    cluster_tries: int = 8  # clusters examined per B step at most
+    beam: int = 1  # candidates popped+expanded per loop step (DESIGN.md
+    # §Perf: beam>1 amortizes the per-step queue sorts and raises the
+    # arithmetic intensity of each visit batch; passrate adaptivity is
+    # evaluated over the pooled beam neighborhood instead of per candidate)
+    backend: str = "auto"  # "ref" | "pallas" | "auto" (pallas on TPU)
+
+    def resolved(self) -> "CompassParams":
+        ef_cap = self.ef_cap or 2 * self.ef + 32
+        cand_cap = self.cand_cap or ef_cap + 64
+        max_steps = self.max_steps or (4 * ef_cap + 8 * self.ef + 64)
+        return dataclasses.replace(self, ef_cap=ef_cap, cand_cap=cand_cap, max_steps=max_steps)
+
+
+def _search_one(
+    index: CompassIndex, q, cdists, pred: P.Predicate, pm: CompassParams, backend: VisitBackend
+) -> SearchResult:
+    n = index.n_records
+    nlist = index.nlist
+    T = pred.lo.shape[0]
+    chosen = P.chosen_attrs(pred)
+
+    # B.OPEN / G.OPEN: exact centroid ranking shared by the relational
+    # iterator and the adaptive entry.  `cdists` is computed batched in
+    # compass_search (outside the per-query vmap) so the pallas backend's
+    # ivf_score kernel sees the full (B, C) blocked problem.
+    rank = jnp.argsort(cdists).astype(jnp.int32)
+
+    zero = jnp.int32(0)
+    stats = SearchStats(zero, jnp.int32(nlist), zero, zero, jnp.int32(pm.efs0))
+    st = EngineState(
+        cand=FixedQueue.full(pm.cand_cap, n),
+        gtop=FixedQueue.full(pm.ef_cap, n),
+        efs=jnp.int32(pm.efs0),
+        res=FixedQueue.full(pm.ef, n),
+        visited=jnp.zeros((n + 1,), bool),
+        rank=rank,
+        rank_pos=jnp.int32(0),
+        term_beg=jnp.zeros((T,), jnp.int32),
+        term_end=jnp.zeros((T,), jnp.int32),
+        b_exhausted=jnp.asarray(not pm.use_btree),
+        returned=jnp.int32(0),
+        stalled=jnp.asarray(False),
+        last_sel=jnp.float32(1.0),
+        stats=stats,
+    )
+    if pm.use_graph:
+        entries = graph_iter.seed_entries(index, rank, pm)
+        st = S.visit(index, q, pred, st, entries, jnp.ones(entries.shape, bool), pm, backend)
+
+    def cond(st: EngineState):
+        return (
+            (st.returned < pm.ef)
+            & (st.stats.n_steps < pm.max_steps)
+            & ~st.stalled
+        )
+
+    def body(st: EngineState):
+        if pm.use_graph:
+            st, need_b = graph_iter.step(index, q, pred, st, pm, backend)
+        else:
+            need_b = jnp.asarray(True)
+
+        if pm.use_btree:
+
+            def do_b(s):
+                s = btree_iter.step(index, q, pred, chosen, s, pm, backend)
+                return S.credit(s, max(1, pm.k // 2))  # Alg. 3 line 20: k/2 batch
+
+            st = jax.lax.cond(need_b & ~st.b_exhausted, do_b, lambda s: s, st)
+        # stall: nothing can make progress anymore
+        graph_dead = graph_iter.dead(st, pm) if pm.use_graph else jnp.asarray(True)
+        stalled = graph_dead & st.b_exhausted
+        # a stalled search still flushes whatever it found
+        st = jax.lax.cond(stalled, lambda s: S.credit(s, pm.ef), lambda s: s, st)
+        st = st._replace(
+            stalled=stalled,
+            stats=st.stats._replace(n_steps=st.stats.n_steps + 1, efs_final=st.efs),
+        )
+        return st
+
+    st = jax.lax.while_loop(cond, body, st)
+    return SearchResult(st.res.i[: pm.k], st.res.d[: pm.k], st.stats)
+
+
+@functools.partial(jax.jit, static_argnames=("pm",))
+def compass_search(
+    index: CompassIndex, queries: jax.Array, pred: P.Predicate, pm: CompassParams
+) -> SearchResult:
+    """Batched filtered search. queries: (B, d); pred arrays: (B, T, A)."""
+    pm = pm.resolved()
+    backend = resolve_backend(pm.backend)
+    # One blocked (B, C) centroid scan for the whole batch (B.OPEN / G.OPEN).
+    cdists = backend.centroid_scores(index, queries, pm.metric)
+    return jax.vmap(
+        lambda q, cd, lo, hi: _search_one(index, q, cd, P.Predicate(lo, hi), pm, backend)
+    )(queries, cdists, pred.lo, pred.hi)

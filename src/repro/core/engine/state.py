@@ -1,0 +1,156 @@
+"""State & queue layer of the Compass execution engine.
+
+Everything the two iterators (G.NEXT / B.NEXT) and the driver loop share
+lives here: the fixed-capacity sorted-array queue abstraction, the fused
+search state, the VISIT state update (Algorithm 4 minus the scoring, which
+a :mod:`~repro.core.engine.backend` provides), and the credit/round-pacing
+bookkeeping of Algorithm 1.
+
+Queue representation (DESIGN.md §Adaptation): a priority queue on TPU is a
+fixed-capacity ascending-sorted array with ``+inf`` marking empty slots.
+``RecycQ`` of Algorithm 2 is *implicit*: the graph-top queue always holds up
+to its full capacity and the live prefix is ``efs`` — enlarging ``efs``
+re-admits exactly the entries the paper's RecycQ would replay.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+INF = jnp.inf
+
+
+class FixedQueue(NamedTuple):
+    """Fixed-capacity priority queue as a sorted array (+inf == empty slot).
+
+    Shared by the candidate queue (CandQ), the graph-top queue (TopQ width
+    control) and the filtered result queue (the global TopQ of Alg. 1).
+    Being a NamedTuple of arrays it is a JAX pytree, so it threads through
+    ``lax.while_loop`` / ``vmap`` unchanged.
+    """
+
+    d: jax.Array  # (cap,) f32, ascending; +inf = empty
+    i: jax.Array  # (cap,) int32 record ids; sentinel where empty
+
+    @classmethod
+    def full(cls, cap: int, sentinel: int) -> "FixedQueue":
+        return cls(
+            jnp.full((cap,), INF, jnp.float32),
+            jnp.full((cap,), sentinel, jnp.int32),
+        )
+
+    @property
+    def cap(self) -> int:
+        return self.d.shape[0]
+
+    def merge(self, nd: jax.Array, ni: jax.Array) -> "FixedQueue":
+        """Merge new (dist, id) entries, keeping the best ``cap``."""
+        d = jnp.concatenate([self.d, nd])
+        i = jnp.concatenate([self.i, ni])
+        order = jnp.argsort(d)
+        return FixedQueue(d[order[: self.cap]], i[order[: self.cap]])
+
+    def count(self) -> jax.Array:
+        """Number of live (finite) entries."""
+        return jnp.sum(jnp.isfinite(self.d)).astype(jnp.int32)
+
+    def pop(self, w: int) -> tuple[jax.Array, jax.Array, "FixedQueue"]:
+        """Remove the best ``w`` entries; returns (dists, ids, rest)."""
+        heads_d, heads_i = self.d[:w], self.i[:w]
+        d = self.d.at[:w].set(INF)
+        order = jnp.argsort(d)
+        return heads_d, heads_i, FixedQueue(d[order], self.i[order])
+
+
+def dedup_new(ids: jax.Array, mask: jax.Array) -> jax.Array:
+    """Mask out later duplicate ids within a visit list."""
+    ids_masked = jnp.where(mask, ids, jnp.iinfo(jnp.int32).max)
+    sort_idx = jnp.argsort(ids_masked)
+    s = ids_masked[sort_idx]
+    dup_sorted = jnp.concatenate([jnp.zeros((1,), bool), s[1:] == s[:-1]])
+    dup = jnp.zeros_like(dup_sorted).at[sort_idx].set(dup_sorted)
+    return mask & ~dup
+
+
+class SearchStats(NamedTuple):
+    n_dist: jax.Array  # base-vector distance computations (paper #Comp)
+    n_cdist: jax.Array  # centroid distance computations
+    n_steps: jax.Array  # loop iterations
+    n_bcalls: jax.Array  # relational injections
+    efs_final: jax.Array
+
+
+class SearchResult(NamedTuple):
+    ids: jax.Array  # (k,) int32, padded with N
+    dists: jax.Array  # (k,) f32, padded with +inf
+    stats: SearchStats
+
+
+class EngineState(NamedTuple):
+    """The fused per-query search state threaded through the driver loop."""
+
+    cand: FixedQueue  # shared candidate queue (CandQ)
+    gtop: FixedQueue  # graph-internal top queue (width control; unfiltered)
+    efs: jax.Array  # progressive search width
+    res: FixedQueue  # filtered result queue (the global TopQ of Alg. 1)
+    visited: jax.Array  # (N + 1,) bool
+    # clustered B+-tree iterator state (owned by btree_iter)
+    rank: jax.Array  # (nlist,) clusters in centroid-distance order
+    rank_pos: jax.Array  # cursor into `rank`
+    term_beg: jax.Array  # (T,) cursors into order arrays (global positions)
+    term_end: jax.Array
+    b_exhausted: jax.Array
+    # round-pacing bookkeeping (Alg. 1)
+    returned: jax.Array  # records handed to the global TopQ so far
+    stalled: jax.Array
+    last_sel: jax.Array
+    stats: SearchStats
+
+
+def visit(index, q, pred, st: EngineState, ids, mask, pm, backend) -> EngineState:
+    """Algorithm 4 over a fixed-size visit list.
+
+    Scoring (distance + predicate) is delegated to ``backend``; this
+    function owns the state update: dedup, visited marking, and the pushes
+    into the shared queue, the graph top queue, and (for predicate-passing
+    records) the filtered result queue.
+    """
+    n = index.n_records
+    mask = dedup_new(ids, mask)
+    mask = mask & ~st.visited[ids]
+    safe = jnp.where(mask, ids, n).astype(jnp.int32)
+    dist, passing = backend.visit_scores(index, q, pred, safe, mask, pm.metric)
+    visited = st.visited.at[safe].set(True)  # sentinel slot absorbs masked
+    cand = st.cand.merge(dist, safe)
+    gtop = st.gtop.merge(dist, safe)
+    res = st.res.merge(jnp.where(passing, dist, INF), safe)
+    n_dist = st.stats.n_dist + jnp.sum(mask)
+    return st._replace(
+        cand=cand,
+        gtop=gtop,
+        res=res,
+        visited=visited,
+        stats=st.stats._replace(n_dist=n_dist),
+    )
+
+
+def res_count(st: EngineState) -> jax.Array:
+    return st.res.count()
+
+
+def credit(st: EngineState, batch: int) -> EngineState:
+    """A round boundary: the iterator hands <= batch of its found-but-
+    unreturned records to Alg. 1's global TopQ (ResQ/RelQ pops)."""
+    give = jnp.minimum(jnp.int32(batch), res_count(st) - st.returned)
+    return st._replace(returned=st.returned + jnp.maximum(give, 0))
+
+
+def graph_frontier(st: EngineState, pm) -> tuple[jax.Array, jax.Array]:
+    """(queue_empty, gstop): has the shared queue drained, and has this
+    G.NEXT round converged at the current efs (Alg. 2 line 13)."""
+    head_d = st.cand.d[0]
+    queue_empty = ~jnp.isfinite(head_d)
+    worst = st.gtop.d[jnp.minimum(st.efs, pm.ef_cap) - 1]
+    return queue_empty, queue_empty | (head_d > worst)

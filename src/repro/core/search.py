@@ -1,426 +1,38 @@
-"""CompassSearch — Algorithms 1-4 of the paper as one fused, batched
-``lax.while_loop``.
+"""CompassSearch — compatibility shim over :mod:`repro.core.engine`.
 
-Faithfulness notes (full discussion in DESIGN.md §Adaptation):
+The search core used to live here as one 430-line module; it is now the
+execution-engine package (state/queues, G.NEXT/B.NEXT iterators, pluggable
+scoring backends, driver loop — see ``engine/__init__.py`` and DESIGN.md
+§Perf).  This module re-exports the public surface so existing imports
+(``serving/rag.py``, ``benchmarks/``, ``examples/``, tests) keep working:
 
-* The paper structures the search as two pull-based iterators (G.NEXT /
-  B.NEXT) coordinating through a shared candidate queue.  On TPU, function
-  calls are free but *dynamic shapes are not*, so the two iterators become
-  two branches of a single fixed-shape loop body; the shared candidate
-  queue, visited set, progressive ``efs``, passrate-adaptive expansion,
-  round-paced result returns and relational injection are all preserved
-  with identical candidate flow.
-* Priority queues are fixed-capacity sorted arrays (+inf == empty slot).
-  ``RecycQ`` of Algorithm 2 is *implicit*: our TopQ array always holds up to
-  its full capacity and the live prefix is ``efs`` — enlarging ``efs``
-  re-admits exactly the entries the paper's RecycQ would replay.  Instead of
-  the pop-then-recycle dance we *peek* the shared queue before committing,
-  which arrays support at no cost (heaps do not).
-* The paper's cluster graph G' (§IV.C) is replaced by an exact centroid
-  ranking — one MXU matmul at OPEN — consumed through a cursor, preserving
-  the on-demand semantics (see index.py docstring).
-* Graph entry is query-adaptive: the medoid of the nearest IVF cluster.
-  This is the role HNSW's upper layers play; our flat build has no
-  hierarchy, so the IVF layer (already in the index) provides the descent.
-* Visited is a plain bool vector (a packed bitmap is a pure memory
-  optimization; noted in §Perf).
+    from repro.core.search import CompassParams, compass_search
 
-The same loop, parameterized by :class:`CompassParams`, also implements the
-paper's baselines and ablations:
-  * ``in_filter=True, use_btree=False``  -> NaviX/ACORN-style in-filtering.
-  * ``use_btree=False``                  -> plain progressive HNSW
-    (post-filtering building block).
-  * ``use_graph=False``                  -> CompassRelational ablation.
-  * index built with ``nlist=1``         -> CompassGraph ablation.
+Backend selection: ``CompassParams(backend="pallas")`` routes VISIT through
+``kernels.filter_distance`` and centroid ranking through
+``kernels.ivf_score``; ``"ref"`` is the plain-jnp path; the default
+``"auto"`` picks pallas on TPU and ref elsewhere.  Both produce identical
+results (enforced by tests/test_compass_search.py).
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import NamedTuple
-
-import jax
-import jax.numpy as jnp
-
-from . import predicate as P
-from .clustered_attrs import searchsorted_slice
-from .index import CompassIndex
-
-INF = jnp.inf
-
-
-@dataclasses.dataclass(frozen=True)
-class CompassParams:
-    k: int = 10  # results to return
-    ef: int = 64  # target size of the filtered result queue (paper `ef`)
-    alpha: float = 0.3  # one-hop passrate threshold (paper default)
-    beta: float = 0.05  # two-hop / pivot passrate threshold (paper default)
-    efs0: int = 16  # initial progressive search width
-    stepsize: int = 16  # progressive efs increment (paper `stepsize`)
-    ef_cap: int = 0  # max efs; 0 => 2 * ef + 32
-    cand_cap: int = 0  # shared queue capacity; 0 => ef_cap + 64
-    efi: int = 32  # records fetched per B.NEXT (paper `efi`)
-    k2: int = 16  # two-hop visit budget per expansion
-    max_steps: int = 0  # hard iteration budget; 0 => heuristic
-    metric: str = "l2"
-    use_graph: bool = True  # False => CompassRelational ablation
-    use_btree: bool = True  # False => pure graph (NaviX / HNSW modes)
-    in_filter: bool = False  # True => NaviX-style distance-only-if-passing
-    adaptive_entry: bool = True  # IVF-guided entry (False: global medoid)
-    entry_fanout: int = 4  # medoids of the top-R clusters seed the traversal
-    cluster_tries: int = 8  # clusters examined per B step at most
-    beam: int = 1  # candidates popped+expanded per loop step (§Perf:
-    # beam>1 amortizes the per-step queue sorts and raises the arithmetic
-    # intensity of each visit batch; passrate adaptivity is evaluated over
-    # the pooled beam neighborhood instead of per candidate)
-
-    def resolved(self) -> "CompassParams":
-        ef_cap = self.ef_cap or 2 * self.ef + 32
-        cand_cap = self.cand_cap or ef_cap + 64
-        max_steps = self.max_steps or (4 * ef_cap + 8 * self.ef + 64)
-        return dataclasses.replace(self, ef_cap=ef_cap, cand_cap=cand_cap, max_steps=max_steps)
-
-
-class SearchStats(NamedTuple):
-    n_dist: jax.Array  # base-vector distance computations (paper #Comp)
-    n_cdist: jax.Array  # centroid distance computations
-    n_steps: jax.Array  # loop iterations
-    n_bcalls: jax.Array  # relational injections
-    efs_final: jax.Array
-
-
-class SearchResult(NamedTuple):
-    ids: jax.Array  # (k,) int32, padded with N
-    dists: jax.Array  # (k,) f32, padded with +inf
-    stats: SearchStats
-
-
-class _State(NamedTuple):
-    # shared candidate queue (sorted ascending; +inf = empty)
-    cand_d: jax.Array
-    cand_i: jax.Array
-    # graph-internal top queue (width control; unfiltered)
-    gtop_d: jax.Array
-    efs: jax.Array
-    # filtered result queue (the global TopQ of Alg. 1)
-    res_d: jax.Array
-    res_i: jax.Array
-    # visited flags
-    visited: jax.Array  # (N + 1,) bool
-    # clustered B+-tree iterator state
-    rank: jax.Array  # (nlist,) clusters in centroid-distance order
-    rank_pos: jax.Array  # cursor into `rank`
-    term_beg: jax.Array  # (T,) cursors into order arrays (global positions)
-    term_end: jax.Array
-    b_exhausted: jax.Array
-    # bookkeeping
-    returned: jax.Array  # records handed to the global TopQ so far (Alg. 1)
-    stalled: jax.Array
-    last_sel: jax.Array
-    stats: SearchStats
-
-
-def _merge(qd, qi, nd, ni, cap):
-    """Merge new entries into a sorted fixed-capacity queue."""
-    d = jnp.concatenate([qd, nd])
-    i = jnp.concatenate([qi, ni])
-    order = jnp.argsort(d)
-    return d[order[:cap]], i[order[:cap]]
-
-
-def _dedup_new(ids, mask):
-    """Mask out later duplicate ids within a visit list."""
-    ids_masked = jnp.where(mask, ids, jnp.iinfo(jnp.int32).max)
-    sort_idx = jnp.argsort(ids_masked)
-    s = ids_masked[sort_idx]
-    dup_sorted = jnp.concatenate([jnp.zeros((1,), bool), s[1:] == s[:-1]])
-    dup = jnp.zeros_like(dup_sorted).at[sort_idx].set(dup_sorted)
-    return mask & ~dup
-
-
-def _visit(index: CompassIndex, q, pred, st: _State, ids, mask, pm: CompassParams):
-    """Algorithm 4 over a fixed-size visit list.
-
-    Computes distances for the masked list, marks visited, pushes into the
-    shared queue + graph top queue, and into the filtered result queue for
-    predicate-passing records.
-    """
-    n = index.n_records
-    mask = _dedup_new(ids, mask)
-    mask = mask & ~st.visited[ids]
-    safe = jnp.where(mask, ids, n).astype(jnp.int32)
-    vecs = index.vectors[safe]  # (V, d)
-    if pm.metric == "l2":
-        diff = vecs - q[None, :]
-        dist = jnp.sum(diff * diff, axis=-1)
-    else:
-        dist = -(vecs @ q)
-    dist = jnp.where(mask, dist, INF)
-    attrs = index.attrs[safe]
-    passing = P.evaluate(pred, attrs) & mask
-
-    visited = st.visited.at[safe].set(True)  # sentinel slot absorbs masked
-    cand_d, cand_i = _merge(st.cand_d, st.cand_i, dist, safe, pm.cand_cap)
-    gtop_d, _ = _merge(st.gtop_d, jnp.zeros_like(st.gtop_d, jnp.int32), dist, safe, pm.ef_cap)
-    res_dist = jnp.where(passing, dist, INF)
-    res_d, res_i = _merge(st.res_d, st.res_i, res_dist, safe, pm.ef)
-    n_dist = st.stats.n_dist + jnp.sum(mask)
-    return st._replace(
-        cand_d=cand_d,
-        cand_i=cand_i,
-        gtop_d=gtop_d,
-        res_d=res_d,
-        res_i=res_i,
-        visited=visited,
-        stats=st.stats._replace(n_dist=n_dist),
-    )
-
-
-def _inject_relational(index: CompassIndex, q, pred, chosen, st: _State, pm: CompassParams):
-    """B.NEXT (Algorithm 3): pull predicate-passing records from the
-    clustered B+-trees of the clusters nearest to the query, on demand."""
-    ca = index.cattrs
-    nlist = index.nlist
-    T = pred.lo.shape[0]
-
-    def advance_cluster(st: _State):
-        """Advance the ranked-cluster cursor; point the per-term cursors at
-        the new cluster's per-attribute sorted runs."""
-        exhausted = st.rank_pos >= nlist
-        c = st.rank[jnp.clip(st.rank_pos, 0, nlist - 1)]
-        c_beg, c_end = ca.offsets[c], ca.offsets[c + 1]
-
-        def one_term(t):
-            a = chosen[t]
-            lo_v, hi_v = pred.lo[t, a], pred.hi[t, a]
-            beg = searchsorted_slice(ca.sorted_vals[a], c_beg, c_end, lo_v, "left")
-            end = searchsorted_slice(ca.sorted_vals[a], c_beg, c_end, hi_v, "right")
-            return beg, end
-
-        beg, end = jax.vmap(one_term)(jnp.arange(T))
-        return st._replace(
-            rank_pos=jnp.where(exhausted, st.rank_pos, st.rank_pos + 1),
-            term_beg=jnp.where(exhausted, st.term_beg, beg),
-            term_end=jnp.where(exhausted, st.term_end, end),
-            b_exhausted=st.b_exhausted | exhausted,
-        )
-
-    def maybe_advance(st: _State):
-        rem = jnp.sum(jnp.maximum(st.term_end - st.term_beg, 0))
-        need = (rem == 0) & ~st.b_exhausted
-        return jax.lax.cond(need, advance_cluster, lambda s: s, st)
-
-    st = jax.lax.fori_loop(0, pm.cluster_tries, lambda _, s: maybe_advance(s), st)
-
-    # fetch up to efi positions across terms (term-major order)
-    rem = jnp.maximum(st.term_end - st.term_beg, 0)  # (T,)
-    cum = jnp.cumsum(rem)
-    total = cum[-1]
-    cum_e = jnp.minimum(cum, pm.efi)
-    taken = cum_e - jnp.concatenate([jnp.zeros((1,), cum.dtype), cum_e[:-1]])
-    slots = jnp.arange(pm.efi)
-    term_of = jnp.searchsorted(cum, slots, side="right").astype(jnp.int32)
-    term_of_c = jnp.clip(term_of, 0, T - 1)
-    before = jnp.where(term_of_c > 0, cum[jnp.maximum(term_of_c - 1, 0)], 0)
-    pos = st.term_beg[term_of_c] + (slots - before)
-    slot_ok = slots < jnp.minimum(total, pm.efi)
-    attr_of = chosen[term_of_c]
-    ids = ca.order[attr_of, jnp.clip(pos, 0, ca.n_records - 1)]
-    # full-predicate filter on the remaining attributes (paper: linear scan)
-    n = index.n_records
-    safe = jnp.where(slot_ok, ids, n)
-    passing = P.evaluate(pred, index.attrs[safe]) & slot_ok
-    st = st._replace(term_beg=st.term_beg + taken)
-    st = _visit(index, q, pred, st, jnp.where(passing, ids, n), passing, pm)
-    return st._replace(stats=st.stats._replace(n_bcalls=st.stats.n_bcalls + 1))
-
-
-def _expand_graph(index: CompassIndex, q, pred, st: _State, pm: CompassParams):
-    """Pop the best `beam` shared-queue candidates and expand per
-    neighbourhood passrate (Algorithm 2 lines 12-17; beam == 1 is the
-    paper-faithful per-candidate loop)."""
-    n = index.n_records
-    m = index.graph.degree
-    w = pm.beam
-    heads_d = st.cand_d[:w]
-    heads_i = st.cand_i[:w]
-    head_ok = jnp.isfinite(heads_d)
-    # pop: drop heads, keep sorted
-    cand_d = st.cand_d.at[:w].set(INF)
-    order = jnp.argsort(cand_d)
-    st = st._replace(cand_d=cand_d[order], cand_i=st.cand_i[order])
-
-    nbrs = index.graph.neighbors[jnp.clip(heads_i, 0, n - 1)].reshape(-1)  # (W*M,)
-    valid = (nbrs < n) & jnp.repeat(head_ok, m)
-    safe = jnp.where(valid, nbrs, n)
-    npass = P.evaluate(pred, index.attrs[safe]) & valid
-    sel = jnp.sum(npass) / jnp.maximum(jnp.sum(valid), 1)
-
-    unvis = valid & ~st.visited[safe]
-    wm = w * m
-    vl = wm + pm.k2
-
-    def one_hop(_):
-        mask = unvis & npass if pm.in_filter else unvis
-        ids = jnp.concatenate([nbrs, jnp.full((pm.k2,), n, jnp.int32)])
-        mk = jnp.concatenate([mask, jnp.zeros((pm.k2,), bool)])
-        return ids, mk
-
-    def two_hop(_):
-        nbrs2 = index.graph.neighbors[safe].reshape(-1)  # (W*M*M,)
-        valid2 = (nbrs2 < n) & jnp.repeat(valid, m)
-        safe2 = jnp.where(valid2, nbrs2, n)
-        pass2 = P.evaluate(pred, index.attrs[safe2]) & valid2
-        unvis2 = pass2 & ~st.visited[safe2]
-        unvis2 = _dedup_new(nbrs2, unvis2)
-        # pick a bounded subset of passing two-hop neighbours
-        score = unvis2.astype(jnp.float32)
-        _, top_idx = jax.lax.top_k(score, pm.k2)
-        sel_ids = nbrs2[top_idx]
-        sel_mk = unvis2[top_idx]
-        ids = jnp.concatenate([nbrs, sel_ids])
-        mk = jnp.concatenate([unvis & npass, sel_mk])
-        return ids, mk
-
-    def none_(_):
-        return jnp.full((vl,), n, jnp.int32), jnp.zeros((vl,), bool)
-
-    if pm.in_filter:  # NaviX-style: never pivots, two-hop when sel < alpha
-        branch = jnp.where(sel >= pm.alpha, 0, 1)
-    else:
-        branch = jnp.where(sel >= pm.alpha, 0, jnp.where(sel >= pm.beta, 1, 2))
-    ids, mk = jax.lax.switch(branch, [one_hop, two_hop, none_], None)
-    st = _visit(index, q, pred, st, ids, mk, pm)
-    return st._replace(last_sel=sel)
-
-
-def _search_one(index: CompassIndex, q, pred: P.Predicate, pm: CompassParams) -> SearchResult:
-    n = index.n_records
-    nlist = index.nlist
-    T = pred.lo.shape[0]
-    chosen = P.chosen_attrs(pred)
-
-    # B.OPEN / G.OPEN: exact centroid ranking (one MXU matmul; see module
-    # docstring) shared by the relational iterator and the adaptive entry.
-    if pm.metric == "l2":
-        cdiff = index.centroids - q[None, :]
-        cdists = jnp.sum(cdiff * cdiff, axis=-1)
-    else:
-        cdists = -(index.centroids @ q)
-    rank = jnp.argsort(cdists).astype(jnp.int32)
-
-    zero = jnp.int32(0)
-    stats = SearchStats(zero, jnp.int32(nlist), zero, zero, jnp.int32(pm.efs0))
-    st = _State(
-        cand_d=jnp.full((pm.cand_cap,), INF, jnp.float32),
-        cand_i=jnp.full((pm.cand_cap,), n, jnp.int32),
-        gtop_d=jnp.full((pm.ef_cap,), INF, jnp.float32),
-        efs=jnp.int32(pm.efs0),
-        res_d=jnp.full((pm.ef,), INF, jnp.float32),
-        res_i=jnp.full((pm.ef,), n, jnp.int32),
-        visited=jnp.zeros((n + 1,), bool),
-        rank=rank,
-        rank_pos=jnp.int32(0),
-        term_beg=jnp.zeros((T,), jnp.int32),
-        term_end=jnp.zeros((T,), jnp.int32),
-        b_exhausted=jnp.asarray(not pm.use_btree),
-        returned=jnp.int32(0),
-        stalled=jnp.asarray(False),
-        last_sel=jnp.float32(1.0),
-        stats=stats,
-    )
-    # visit the graph entry points (Alg. 2 line 8, SELECTENTRYPOINT).
-    # HNSW descends its upper layers to locate a good entry; our flat build
-    # instead seeds with the medoids of the entry_fanout nearest IVF
-    # clusters — same role, and robust when clusters straddle modes.
-    if pm.use_graph:
-        if pm.adaptive_entry:
-            fan = min(pm.entry_fanout, nlist)
-            entries = index.medoids[rank[:fan]].astype(jnp.int32)
-            entries = jnp.concatenate(
-                [entries, index.graph.entry.astype(jnp.int32)[None]]
-            )
-        else:
-            entries = index.graph.entry.astype(jnp.int32)[None]
-        st = _visit(index, q, pred, st, entries, jnp.ones(entries.shape, bool), pm)
-
-    def res_count(st):
-        return jnp.sum(jnp.isfinite(st.res_d)).astype(jnp.int32)
-
-    def credit(st: _State, batch: int):
-        """A round boundary: the iterator hands <= batch of its found-but-
-        unreturned records to Alg. 1's global TopQ (ResQ/RelQ pops)."""
-        give = jnp.minimum(jnp.int32(batch), res_count(st) - st.returned)
-        return st._replace(returned=st.returned + jnp.maximum(give, 0))
-
-    def cond(st: _State):
-        return (
-            (st.returned < pm.ef)
-            & (st.stats.n_steps < pm.max_steps)
-            & ~st.stalled
-        )
-
-    def body(st: _State):
-        head_d = st.cand_d[0]
-        queue_empty = ~jnp.isfinite(head_d)
-        worst = st.gtop_d[jnp.minimum(st.efs, pm.ef_cap) - 1]
-        gstop = queue_empty | (head_d > worst)
-
-        if pm.use_graph:
-            # gstop == Alg. 2 line 13: this G.NEXT round converged at the
-            # current efs. Return <= k found records to the global TopQ,
-            # then ExpandSearch widens efs for the next round.
-            st = jax.lax.cond(gstop, lambda s: credit(s, pm.k), lambda s: s, st)
-            new_efs = jnp.minimum(st.efs + pm.stepsize, pm.ef_cap)
-            at_cap = st.efs >= pm.ef_cap
-            st = st._replace(efs=jnp.where(gstop & ~at_cap, new_efs, st.efs))
-            do_pop = ~gstop
-            st = jax.lax.cond(
-                do_pop, lambda s: _expand_graph(index, q, pred, s, pm), lambda s: s, st
-            )
-            low_sel = do_pop & (st.last_sel < pm.beta)
-            # low-sel break is also a G.NEXT round boundary (Alg. 2 line 17)
-            st = jax.lax.cond(low_sel, lambda s: credit(s, pm.k), lambda s: s, st)
-            need_b = low_sel | (gstop & at_cap) | queue_empty
-        else:
-            need_b = jnp.asarray(True)
-            gstop = jnp.asarray(True)
-            at_cap = jnp.asarray(True)
-
-        if pm.use_btree:
-
-            def do_b(s):
-                s = _inject_relational(index, q, pred, chosen, s, pm)
-                return credit(s, max(1, pm.k // 2))  # Alg. 3 line 20: k/2 batch
-
-            st = jax.lax.cond(need_b & ~st.b_exhausted, do_b, lambda s: s, st)
-        # stall: nothing can make progress anymore
-        head_d2 = st.cand_d[0]
-        empty2 = ~jnp.isfinite(head_d2)
-        worst2 = st.gtop_d[jnp.minimum(st.efs, pm.ef_cap) - 1]
-        gstop2 = empty2 | (head_d2 > worst2)
-        graph_dead = (gstop2 & (st.efs >= pm.ef_cap)) | empty2 if pm.use_graph else jnp.asarray(True)
-        stalled = graph_dead & st.b_exhausted
-        # a stalled search still flushes whatever it found
-        st = jax.lax.cond(stalled, lambda s: credit(s, pm.ef), lambda s: s, st)
-        st = st._replace(
-            stalled=stalled,
-            stats=st.stats._replace(n_steps=st.stats.n_steps + 1, efs_final=st.efs),
-        )
-        return st
-
-    st = jax.lax.while_loop(cond, body, st)
-    ids = st.res_i[: pm.k]
-    dists = st.res_d[: pm.k]
-    return SearchResult(ids, dists, st.stats)
-
-
-@functools.partial(jax.jit, static_argnames=("pm",))
-def compass_search(
-    index: CompassIndex, queries: jax.Array, pred: P.Predicate, pm: CompassParams
-) -> SearchResult:
-    """Batched filtered search. queries: (B, d); pred arrays: (B, T, A)."""
-    pm = pm.resolved()
-    return jax.vmap(lambda q, lo, hi: _search_one(index, q, P.Predicate(lo, hi), pm))(
-        queries, pred.lo, pred.hi
-    )
+from .engine import (  # noqa: F401
+    ENGINE_VERSION,
+    CompassParams,
+    EngineState,
+    FixedQueue,
+    SearchResult,
+    SearchStats,
+    compass_search,
+    resolve_backend,
+)
+__all__ = [
+    "ENGINE_VERSION",
+    "CompassParams",
+    "EngineState",
+    "FixedQueue",
+    "SearchResult",
+    "SearchStats",
+    "compass_search",
+    "resolve_backend",
+]

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .interpret import default_interpret
+
 
 def _kernel(idx_ref, vec_ref, attr_ref, q_ref, lo_ref, hi_ref, dist_ref, pass_ref, *, n):
     i = pl.program_id(0)
@@ -42,7 +44,6 @@ def _kernel(idx_ref, vec_ref, attr_ref, q_ref, lo_ref, hi_ref, dist_ref, pass_re
     pass_ref[0] = jnp.where(valid, passed, False).astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
 def filter_distance(
     vectors: jax.Array,  # (N + 1, d) padded corpus (row N = sentinel)
     attrs: jax.Array,  # (N + 1, A)
@@ -52,19 +53,28 @@ def filter_distance(
     lo: jax.Array,  # (T, A)
     hi: jax.Array,  # (T, A)
     *,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
-    """Returns (dists (V,) f32, +inf where masked; passed (V,) bool)."""
+    """Returns (dists (V,) f32, +inf where masked; passed (V,) bool).
+
+    The interpret default comes from kernels/interpret.py — see its
+    docstring for the env overrides and the trace-time-baking caveat.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    return _filter_distance(vectors, attrs, idx, mask, q, lo, hi, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _filter_distance(vectors, attrs, idx, mask, q, lo, hi, *, interpret: bool):
     v = idx.shape[0]
     n = vectors.shape[0] - 1
     d = vectors.shape[1]
     a = attrs.shape[1]
     t = lo.shape[0]
     safe_idx = jnp.where(mask, jnp.clip(idx, 0, n), n).astype(jnp.int32)
-    import functools as ft
-
     dists, passed = pl.pallas_call(
-        ft.partial(_kernel, n=n),
+        functools.partial(_kernel, n=n),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=(v,),

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .interpret import default_interpret
+
 NEG_INF = -1e30
 
 
@@ -64,7 +66,6 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, bq, bk, nk, sc
         ).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("bq", "bk", "interpret"))
 def flash_attention(
     q: jax.Array,  # (B, S, H, dh)
     k: jax.Array,  # (B, T, KV, dh)
@@ -72,9 +73,20 @@ def flash_attention(
     *,
     bq: int = 512,
     bk: int = 512,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
-    """Causal attention output (B, S, H, dh)."""
+    """Causal attention output (B, S, H, dh).
+
+    The interpret default comes from kernels/interpret.py — see its
+    docstring for the env overrides and the trace-time-baking caveat.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    return _flash_attention(q, k, v, bq=bq, bk=bk, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bk", "interpret"))
+def _flash_attention(q, k, v, *, bq: int, bk: int, interpret: bool):
     b, s, h, dh = q.shape
     t, kvh = k.shape[1], k.shape[2]
     group = h // kvh

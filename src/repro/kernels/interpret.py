@@ -1,0 +1,28 @@
+"""Single source of truth for the Pallas interpret-mode default.
+
+Interpret mode is platform auto-detected: native TPU lowers to Mosaic,
+everywhere else (CPU containers included) the Pallas interpreter executes
+the kernel body for correctness.  Env overrides, checked in order:
+
+  REPRO_PALLAS_COMPILE=1    force native lowering
+  REPRO_PALLAS_INTERPRET=1  force the interpreter
+
+The overrides are read when :func:`default_interpret` runs, which for the
+engine hot path is at *trace* time inside the outer ``compass_search`` jit
+— the result is baked into the cached executable and later in-process env
+changes are ignored for already-traced shapes.  Set the override before
+the first traced call (eager kernel calls re-read it every time).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+
+def default_interpret() -> bool:
+    if os.environ.get("REPRO_PALLAS_COMPILE", "0") == "1":
+        return False
+    if os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1":
+        return True
+    return jax.default_backend() != "tpu"

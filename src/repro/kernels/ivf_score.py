@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .interpret import default_interpret
+
 
 def _kernel(q_ref, c_ref, out_ref, *, nd_blocks):
     k = pl.program_id(2)
@@ -38,7 +40,6 @@ def _kernel(q_ref, c_ref, out_ref, *, nd_blocks):
     out_ref[...] = acc
 
 
-@functools.partial(jax.jit, static_argnames=("bb", "bc", "bd", "interpret"))
 def ivf_score(
     queries: jax.Array,  # (B, d)
     centroids: jax.Array,  # (C, d)
@@ -46,9 +47,20 @@ def ivf_score(
     bb: int = 8,
     bc: int = 128,
     bd: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
-    """Squared L2 distances (B, C)."""
+    """Squared L2 distances (B, C).
+
+    The interpret default comes from kernels/interpret.py — see its
+    docstring for the env overrides and the trace-time-baking caveat.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    return _ivf_score(queries, centroids, bb=bb, bc=bc, bd=bd, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bb", "bc", "bd", "interpret"))
+def _ivf_score(queries, centroids, *, bb: int, bc: int, bd: int, interpret: bool):
     b, d = queries.shape
     c = centroids.shape[0]
     pb, pc, pd = (-b) % bb, (-c) % bc, (-d) % bd

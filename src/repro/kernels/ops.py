@@ -1,40 +1,36 @@
 """jit'd public wrappers around the Pallas kernels.
 
-On this CPU container every kernel runs with ``interpret=True`` (the Pallas
-interpreter executes the kernel body on CPU for correctness); on real TPU
-set ``REPRO_PALLAS_COMPILE=1`` to lower natively.  ``use_pallas=False``
-falls back to the jnp oracle — search code paths stay identical either way.
+Interpret mode is platform auto-detected (see ``kernels/interpret.py``:
+native TPU lowers to Mosaic, everywhere else the Pallas interpreter
+executes the kernel body for correctness, so the engine's ``"pallas"``
+backend is testable on CPU; ``REPRO_PALLAS_COMPILE=1`` /
+``REPRO_PALLAS_INTERPRET=1`` force-override).  The detection runs per
+*trace*, not per call: inside an outer jit (e.g. ``compass_search``) the
+value is baked into the cached executable, so set the env overrides before
+the first traced call.  ``use_pallas=False`` falls back to the jnp oracle —
+search code paths stay identical either way.
 """
 from __future__ import annotations
-
-import os
-
-import jax
-import jax.numpy as jnp
 
 from . import ref
 from .filter_distance import filter_distance as _filter_distance_kernel
 from .flash_attention import flash_attention as _flash_kernel
 from .ivf_score import ivf_score as _ivf_kernel
 
-_INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
-
 
 def filter_distance(vectors, attrs, idx, mask, q, lo, hi, *, use_pallas: bool = True):
     if not use_pallas:
         return ref.filter_distance_ref(vectors, attrs, idx, mask, q, lo, hi)
-    return _filter_distance_kernel(
-        vectors, attrs, idx, mask, q, lo, hi, interpret=_INTERPRET
-    )
+    return _filter_distance_kernel(vectors, attrs, idx, mask, q, lo, hi)
 
 
 def ivf_score(queries, centroids, *, use_pallas: bool = True, **kw):
     if not use_pallas:
         return ref.ivf_score_ref(queries, centroids)
-    return _ivf_kernel(queries, centroids, interpret=_INTERPRET, **kw)
+    return _ivf_kernel(queries, centroids, **kw)
 
 
 def flash_attention(q, k, v, *, use_pallas: bool = True, **kw):
     if not use_pallas:
         return ref.flash_attention_ref(q, k, v)
-    return _flash_kernel(q, k, v, interpret=_INTERPRET, **kw)
+    return _flash_kernel(q, k, v, **kw)

@@ -53,7 +53,9 @@ class RagIndex:
         return cls(build_index(embs, doc_attrs, build_cfg), doc_tokens)
 
     def retrieve(self, params, cfg, query_tokens: np.ndarray, pred: P.Predicate,
-                 k: int = 2, ef: int = 16) -> np.ndarray:
+                 k: int = 2, ef: int = 16, backend: str = "auto") -> np.ndarray:
+        """``backend`` selects the engine's scoring path ("ref" | "pallas" |
+        "auto"); serving keeps the engine default unless overridden."""
         q = embed_tokens(params, cfg, jnp.asarray(query_tokens))
         res = compass_search(
             self.index, q,
@@ -61,7 +63,7 @@ class RagIndex:
                 jnp.broadcast_to(pred.lo, (q.shape[0],) + pred.lo.shape),
                 jnp.broadcast_to(pred.hi, (q.shape[0],) + pred.hi.shape),
             ),
-            CompassParams(k=k, ef=ef),
+            CompassParams(k=k, ef=ef, backend=backend),
         )
         return np.asarray(res.ids)  # (B, k), id == n_docs for padding
 

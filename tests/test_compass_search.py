@@ -151,6 +151,75 @@ def test_compass_relational_ablation(built_index, corpus):
     assert r >= 0.2
 
 
+# ---------------------------------------------------------------------------
+# Execution-engine backend parity: the "pallas" backend (kernels on the VISIT
+# hot path, interpret mode on CPU) must be indistinguishable from the "ref"
+# jnp path — identical ids, dists, and distance counts.  Seeds are fixed:
+# centroid scores may differ in ULPs between the two formulas (see
+# engine/backend.py), so exact equality is asserted on these workloads, not
+# claimed for adversarially tie-heavy data.
+# ---------------------------------------------------------------------------
+
+_PARITY_CASES = {
+    "conjunction": dict(passrate=0.3, n_terms=2, disj=False),
+    "disjunction": dict(passrate=0.3, n_terms=3, disj=True),
+    "high_selectivity": dict(passrate=0.05, n_terms=2, disj=False),  # ~0.25%
+}
+
+
+@pytest.mark.parametrize("case", sorted(_PARITY_CASES))
+def test_backend_parity(built_index, corpus, case):
+    x, attrs, queries = corpus
+    rng = np.random.default_rng(12)
+    pred = _preds(rng, 16, 4, **_PARITY_CASES[case])
+    qj = jnp.asarray(queries)
+    ref = compass_search(built_index, qj, pred, CompassParams(k=10, ef=64, backend="ref"))
+    pal = compass_search(built_index, qj, pred, CompassParams(k=10, ef=64, backend="pallas"))
+    np.testing.assert_array_equal(np.asarray(ref.ids), np.asarray(pal.ids))
+    np.testing.assert_array_equal(np.asarray(ref.dists), np.asarray(pal.dists))
+    np.testing.assert_array_equal(
+        np.asarray(ref.stats.n_dist), np.asarray(pal.stats.n_dist)
+    )
+
+
+def test_pallas_backend_routes_visit_through_kernel(built_index, corpus, monkeypatch):
+    """backend="pallas" must hit kernels.filter_distance / kernels.ivf_score
+    at trace time (a fresh ef forces a fresh trace)."""
+    from repro.kernels import ops
+
+    calls = {"filter_distance": 0, "ivf_score": 0}
+    real_fd, real_ivf = ops.filter_distance, ops.ivf_score
+
+    def spy_fd(*a, **kw):
+        calls["filter_distance"] += 1
+        return real_fd(*a, **kw)
+
+    def spy_ivf(*a, **kw):
+        calls["ivf_score"] += 1
+        return real_ivf(*a, **kw)
+
+    monkeypatch.setattr(ops, "filter_distance", spy_fd)
+    monkeypatch.setattr(ops, "ivf_score", spy_ivf)
+    x, attrs, queries = corpus
+    rng = np.random.default_rng(13)
+    pred = _preds(rng, 16, 4, 0.3, 2)
+    compass_search(
+        built_index, jnp.asarray(queries), pred, CompassParams(k=7, ef=48, backend="pallas")
+    )
+    assert calls["filter_distance"] > 0
+    assert calls["ivf_score"] > 0
+
+
+def test_unknown_backend_rejected(built_index, corpus):
+    x, attrs, queries = corpus
+    rng = np.random.default_rng(14)
+    pred = _preds(rng, 16, 4, 0.3, 1)
+    with pytest.raises(ValueError, match="unknown backend"):
+        compass_search(
+            built_index, jnp.asarray(queries), pred, CompassParams(k=10, ef=64, backend="vulkan")
+        )
+
+
 def test_unsatisfiable_predicate_terminates_empty(built_index, corpus):
     x, attrs, queries = corpus
     preds = P.stack_predicates(
