@@ -5,6 +5,7 @@
   bench_disjunctions  -> Figs. 6/7 + Table V (bottom)
   bench_qps_recall    -> Figs. 8-10
   bench_ablation      -> Fig. 11
+  bench_serving       -> serving-layer QPS/latency/compile counts (ours)
 
 ``python -m benchmarks.run [--only name] [--quick] [--json-dir DIR]``
 
@@ -29,6 +30,7 @@ ALL = (
     "bench_disjunctions",
     "bench_qps_recall",
     "bench_ablation",
+    "bench_serving",
 )
 
 

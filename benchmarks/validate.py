@@ -1,0 +1,66 @@
+"""Validate BENCH_*.json artifacts — the CI gate behind bench-smoke.
+
+Every file must parse as JSON and carry the provenance envelope written by
+``benchmarks/run.py`` (``bench`` / ``meta`` / ``wall_s`` / ``rows`` with the
+engine-version + backend fields from ``common.bench_metadata``), so a
+malformed or provenance-free artifact fails the workflow instead of
+silently polluting the benchmark trajectory.
+
+  python -m benchmarks.validate [dir]
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+REQUIRED = ("bench", "meta", "wall_s", "rows")
+META_REQUIRED = ("engine_version", "backend", "platform", "jax_version", "n")
+
+
+def validate_file(path: str) -> list[str]:
+    """Returns a list of problems (empty == valid)."""
+    errs = []
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"unreadable/malformed JSON: {e}"]
+    if not isinstance(payload, dict):
+        return [f"top level is {type(payload).__name__}, expected object"]
+    for key in REQUIRED:
+        if key not in payload:
+            errs.append(f"missing key {key!r}")
+    meta = payload.get("meta")
+    if not isinstance(meta, dict):
+        errs.append("meta is not an object")
+    else:
+        errs.extend(f"meta missing {k!r}" for k in META_REQUIRED if k not in meta)
+    if "wall_s" in payload and not isinstance(payload["wall_s"], (int, float)):
+        errs.append("wall_s is not numeric")
+    return errs
+
+
+def main(argv: list[str] | None = None) -> int:
+    args = sys.argv[1:] if argv is None else argv
+    bench_dir = args[0] if args else os.path.dirname(os.path.abspath(__file__))
+    paths = sorted(glob.glob(os.path.join(bench_dir, "BENCH_*.json")))
+    if not paths:
+        print(f"FAIL: no BENCH_*.json files under {bench_dir}")
+        return 1
+    bad = 0
+    for path in paths:
+        errs = validate_file(path)
+        if errs:
+            bad += 1
+            for e in errs:
+                print(f"FAIL {os.path.basename(path)}: {e}")
+        else:
+            print(f"ok   {os.path.basename(path)}")
+    print(f"{len(paths) - bad}/{len(paths)} artifacts valid")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

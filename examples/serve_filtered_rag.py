@@ -4,20 +4,22 @@
   corpus docs (tokens + price/date attrs)
     -> LM embeddings -> CompassIndex
   request (prompt + predicate)
-    -> Compass filtered retrieval -> augmented prompt
-    -> continuous-batching decode
+    -> SearchService (shape-bucketed continuous batching over CompassSearch)
+    -> augmented prompt -> continuous-batching decode
+
+Requests carry *mixed* predicate shapes (a pure conjunction and a
+disjunction); the service buckets them by padded term count, so the whole
+stream is served by exactly one compiled executable per occupied bucket.
 
   PYTHONPATH=src python examples/serve_filtered_rag.py
 """
-import dataclasses
-
 import jax
 import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.core import predicate as P
 from repro.models.model import init_params
-from repro.serving.rag import RagIndex, augment_prompt
+from repro.serving.rag import RagIndex, augment_prompt, embed_tokens
 from repro.serving.scheduler import ContinuousBatcher, Request
 
 
@@ -33,28 +35,44 @@ def main():
     rag = RagIndex.build(params, cfg, doc_tokens, doc_attrs)
     print(f"indexed {n_docs} docs (price, freshness attrs)")
 
-    # requests: retrieve docs similar to the prompt with price <= 0.3
-    pred = P.Pred.le(0, 0.3).tensor(2)
+    # mixed-shape request stream:
+    #   even rids: price <= 0.3                      (conjunction, T=1)
+    #   odd rids:  price <= 0.2 OR freshness >= 0.8  (disjunction,  T=2)
+    preds = [
+        P.Pred.le(0, 0.3),
+        P.Pred.or_(P.Pred.le(0, 0.2), P.Pred.ge(1, 0.8)),
+    ]
     prompts = [rng.integers(0, cfg.vocab_size, 8).astype(np.int32) for _ in range(6)]
-    doc_ids = rag.retrieve(params, cfg, np.stack(prompts), pred, k=2, ef=16)
+    embs = np.asarray(embed_tokens(params, cfg, np.stack(prompts)))
 
-    # verify the filter held
-    for b in range(len(prompts)):
-        for i in doc_ids[b]:
+    service = rag.make_service(k=2, ef=16, batch_size=4, max_wait_s=0.0)
+    rids = [service.submit(embs[i], preds[i % 2], k=2) for i in range(len(prompts))]
+    service.run_until_idle()
+    results = [service.poll(rid) for rid in rids]
+    doc_ids = np.stack([r.ids for r in results])
+    stats = service.stats()
+    print(
+        f"served {stats['n_requests']} requests through "
+        f"{stats['occupied_buckets']} shape buckets with {stats['compiles']} compiles"
+    )
+
+    # verify the filters held
+    for b, ids in enumerate(doc_ids):
+        for i in ids:
             if i < n_docs:
-                assert doc_attrs[i, 0] <= 0.3 + 1e-6, (i, doc_attrs[i])
-    print("all retrieved docs satisfy price <= 0.3")
+                price, fresh = doc_attrs[i]
+                if b % 2 == 0:
+                    assert price <= 0.3 + 1e-6, (i, doc_attrs[i])
+                else:
+                    assert price <= 0.2 + 1e-6 or fresh >= 0.8 - 1e-6, (i, doc_attrs[i])
+    print("all retrieved docs satisfy their request's predicate")
 
     batcher = ContinuousBatcher(cfg, params, n_slots=3, max_seq=128)
     for rid, prompt in enumerate(prompts):
         full = augment_prompt(doc_tokens, doc_ids[rid], prompt)
         batcher.submit(Request(rid=rid, prompt=full, max_tokens=8))
     batcher.run_until_done()
-    print("served 6 augmented requests through the continuous batcher:")
-    done = 0
-    for rid in range(len(prompts)):
-        done += 1
-    print(f"  {done} requests completed (8 tokens each)")
+    print(f"served {len(prompts)} augmented requests through the continuous batcher")
 
 
 if __name__ == "__main__":

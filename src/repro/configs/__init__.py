@@ -10,3 +10,16 @@ from .base import (
     register,
     shape_applicable,
 )
+
+__all__ = [
+    "SHAPES",
+    "ModelConfig",
+    "MoEConfig",
+    "ShapeConfig",
+    "SSMConfig",
+    "all_configs",
+    "get_config",
+    "reduced",
+    "register",
+    "shape_applicable",
+]

@@ -20,13 +20,11 @@ and by examples) and the abstract 512-way dry-run used by launch/dryrun.py.
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from . import predicate as PR

@@ -40,7 +40,7 @@ from ..index import CompassIndex
 from . import btree_iter, graph_iter
 from . import state as S
 from .backend import VisitBackend, resolve_backend
-from .state import INF, EngineState, FixedQueue, SearchResult, SearchStats
+from .state import EngineState, FixedQueue, SearchResult, SearchStats
 
 #: Bumped whenever the engine's candidate flow changes in a way that could
 #: move benchmark trajectories (recorded in BENCH_*.json by benchmarks/).

@@ -29,7 +29,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from .clustered_attrs import ClusteredAttrs, build_clustered_attrs
-from .distances import pairwise
 from .graph_build import GraphIndex, build_graph
 from .kmeans import kmeans
 

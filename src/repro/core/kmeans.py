@@ -26,7 +26,6 @@ class KMeansResult(NamedTuple):
 def _assign_blocked(x: jax.Array, centroids: jax.Array, block: int, metric: str):
     """Blocked assignment to bound peak memory for large (n, k)."""
     n = x.shape[0]
-    k = centroids.shape[0]
     pad = (-n) % block
     xp = jnp.pad(x, ((0, pad), (0, 0)))
     nb = xp.shape[0] // block

@@ -55,6 +55,19 @@ def always_true(n_attrs: int, n_terms: int = 1) -> Predicate:
     return Predicate(lo, hi)
 
 
+def never_true(n_attrs: int, n_terms: int = 1) -> Predicate:
+    """All-unsatisfiable predicate: every term has lo > hi on attr 0.
+
+    Used as the micro-batch filler by the serving layer — a filler query
+    can never contribute a result, so stripping it from the batch recovers
+    exactly the unpadded responses.
+    """
+    lo = np.full((n_terms, n_attrs), NEG_INF, np.float32)
+    hi = np.full((n_terms, n_attrs), POS_INF, np.float32)
+    lo[:, 0], hi[:, 0] = POS_INF, NEG_INF
+    return Predicate(jnp.asarray(lo), jnp.asarray(hi))
+
+
 def evaluate(pred: Predicate, attrs: jax.Array) -> jax.Array:
     """Evaluate predicate on attribute rows.
 
@@ -184,20 +197,58 @@ class Pred:
         return Predicate(jnp.asarray(lo), jnp.asarray(hi))
 
 
-def stack_predicates(preds: Sequence[Predicate]) -> Predicate:
-    """Stack per-query predicates into batched (B, T, A) tensors (pads T)."""
-    T = max(p.n_terms for p in preds)
-    A = preds[0].n_attrs
+def _pad_terms_np(lo: np.ndarray, hi: np.ndarray, n_terms: int):
+    """Pad host-side (T0, A) interval arrays to T == n_terms with
+    unsatisfiable rows (lo > hi on attr 0); extra OR-terms that never fire."""
+    T0, A = lo.shape
+    if T0 > n_terms:
+        raise ValueError(f"predicate has {T0} terms > requested {n_terms}")
+    if T0 == n_terms:
+        return lo, hi
+    pad_lo = np.full((n_terms - T0, A), NEG_INF, np.float32)
+    pad_hi = np.full((n_terms - T0, A), POS_INF, np.float32)
+    pad_lo[:, 0], pad_hi[:, 0] = POS_INF, NEG_INF  # unsatisfiable pad
+    return np.concatenate([lo, pad_lo], 0), np.concatenate([hi, pad_hi], 0)
+
+
+def pad_terms(pred: Predicate, n_terms: int) -> Predicate:
+    """Pad a (T, A) predicate to exactly ``n_terms`` disjuncts.
+
+    The pad rows are unsatisfiable, so evaluation (``OR`` over terms) and
+    the relational iterator (empty runs) are unaffected — search results
+    are identical to the unpadded predicate.
+    """
+    lo, hi = _pad_terms_np(
+        np.asarray(pred.lo, np.float32), np.asarray(pred.hi, np.float32), n_terms
+    )
+    return Predicate(jnp.asarray(lo), jnp.asarray(hi))
+
+
+def term_bucket(n_terms: int) -> int:
+    """Shape bucket for a term count: the next power of two >= n_terms.
+
+    The serving layer normalizes arbitrary DNF widths into a logarithmic
+    number of static shapes so the compiled-executable cache stays small
+    under mixed conjunction/disjunction traffic.
+    """
+    if n_terms < 1:
+        raise ValueError(f"n_terms must be >= 1, got {n_terms}")
+    return 1 << (n_terms - 1).bit_length()
+
+
+def stack_predicates(preds: Sequence[Predicate], n_terms: int | None = None) -> Predicate:
+    """Stack per-query predicates into batched (B, T, A) tensors.
+
+    T is ``n_terms`` when given (e.g. a serving shape bucket), else the max
+    term count in the batch; narrower predicates are padded with
+    unsatisfiable terms.
+    """
+    T = n_terms if n_terms is not None else max(p.n_terms for p in preds)
     los, his = [], []
     for p in preds:
-        lo = np.asarray(p.lo, np.float32)
-        hi = np.asarray(p.hi, np.float32)
-        if lo.shape[0] < T:
-            pad_lo = np.full((T - lo.shape[0], A), NEG_INF, np.float32)
-            pad_hi = np.full((T - hi.shape[0], A), POS_INF, np.float32)
-            pad_lo[:, 0], pad_hi[:, 0] = POS_INF, NEG_INF  # unsatisfiable pad
-            lo = np.concatenate([lo, pad_lo], 0)
-            hi = np.concatenate([hi, pad_hi], 0)
+        lo, hi = _pad_terms_np(
+            np.asarray(p.lo, np.float32), np.asarray(p.hi, np.float32), T
+        )
         los.append(lo)
         his.append(hi)
     return Predicate(jnp.asarray(np.stack(los)), jnp.asarray(np.stack(his)))

@@ -21,7 +21,6 @@ corresponding mitigations wired in here:
 from __future__ import annotations
 
 import dataclasses
-import os
 import time
 from typing import Optional
 

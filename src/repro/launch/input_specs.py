@@ -25,7 +25,6 @@ from repro.optim.adamw import init_opt_state
 from .mesh import data_axes
 from .shardings import (
     _ns,
-    batch_shardings,
     cache_shardings,
     opt_state_shardings,
     param_shardings,

@@ -10,12 +10,10 @@ checkpoint/restore path are mesh-agnostic).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint.checkpoint import latest_steps, restore, save
 from repro.configs import get_config, reduced

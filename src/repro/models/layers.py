@@ -7,7 +7,6 @@ under pjit.  Initializers take an explicit key; dtypes follow the config
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 from typing import Any, Optional
 

@@ -17,8 +17,6 @@ provides precomputed patch/frame embeddings; here they enter through
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, Optional
 
 import jax
@@ -99,7 +97,6 @@ def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
     elif cfg.hybrid_period:
         mamba_idx = [i for i, k in enumerate(kinds) if k == "mamba"]
         p["mamba_layers"] = _stack([_init_mamba_layer(keys[i], cfg) for i in mamba_idx])
-        n_attn = len([k for k in kinds if k == "attn"])
         if cfg.shared_attn:
             p["attn_shared"] = _init_attn_layer(keys[cfg.n_layers], cfg)
         else:

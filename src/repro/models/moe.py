@@ -98,7 +98,6 @@ def moe_block_ep(params: Params, x: jax.Array, cfg: ModelConfig, ep: EPContext) 
     mo = cfg.moe
     P = jax.sharding.PartitionSpec
     bspec = ep.batch_axes if len(ep.batch_axes) > 1 else ep.batch_axes[0]
-    m_sz = mesh.shape[ep.model_axis]
 
     def local(w_router, w_experts, w_shared, xl):
         b_loc, s_loc, d = xl.shape
@@ -125,7 +124,6 @@ def moe_block_ep(params: Params, x: jax.Array, cfg: ModelConfig, ep: EPContext) 
         buf = jax.lax.all_to_all(
             buf, ep.model_axis, split_axis=0, concat_axis=1, tiled=True
         )
-        e_loc = mo.n_experts // m_sz
         we = {k: v for k, v in w_experts.items()}  # (E/M, d, f) local slices
         if cfg.mlp_type in ("swiglu", "geglu"):
             act = jax.nn.silu if cfg.mlp_type == "swiglu" else jax.nn.gelu

@@ -22,9 +22,6 @@ Hardware model (TPU v5e-class, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
 from __future__ import annotations
 
 import re
-from typing import Any
-
-import numpy as np
 
 PEAK_FLOPS = 197e12  # bf16 / chip
 HBM_BW = 819e9  # bytes/s / chip

@@ -23,6 +23,7 @@ from repro.core import predicate as P
 from repro.core.index import BuildConfig, CompassIndex, build_index
 from repro.core.search import CompassParams, compass_search
 from repro.models.model import forward
+from repro.serving.search_service import SearchService
 
 
 def embed_tokens(params, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
@@ -52,11 +53,32 @@ class RagIndex:
         embs = np.asarray(embed_tokens(params, cfg, jnp.asarray(doc_tokens)))
         return cls(build_index(embs, doc_attrs, build_cfg), doc_tokens)
 
+    def make_service(self, k: int = 4, ef: int = 16, backend: str = "auto",
+                     **service_kw) -> SearchService:
+        """A continuous-batching :class:`SearchService` over this index —
+        the production retrieval path (shape-bucketed, bounded compiles)."""
+        return SearchService(
+            self.index, CompassParams(k=k, ef=ef, backend=backend), **service_kw
+        )
+
     def retrieve(self, params, cfg, query_tokens: np.ndarray, pred: P.Predicate,
-                 k: int = 2, ef: int = 16, backend: str = "auto") -> np.ndarray:
-        """``backend`` selects the engine's scoring path ("ref" | "pallas" |
-        "auto"); serving keeps the engine default unless overridden."""
+                 k: int = 2, ef: int = 16, backend: str = "auto",
+                 service: SearchService | None = None) -> np.ndarray:
+        """Filtered retrieval for a batch of queries sharing one predicate.
+
+        With ``service`` the queries go through the continuous-batching
+        serving layer (shape-bucketed predicates, compiled-executable
+        cache) and ``k`` truncates the service's ``params.k`` results;
+        without it this is a direct one-shot ``compass_search``
+        (``backend`` selects the engine's scoring path).  Service padding
+        is result-neutral: responses match a direct call made with the
+        service's ``CompassParams``.
+        """
         q = embed_tokens(params, cfg, jnp.asarray(query_tokens))
+        if service is not None:
+            rids = [service.submit(np.asarray(q[b]), pred, k=k) for b in range(q.shape[0])]
+            service.run_until_idle()
+            return np.stack([service.poll(rid).ids for rid in rids])
         res = compass_search(
             self.index, q,
             P.Predicate(

@@ -8,13 +8,24 @@ sequence lengths; finished slots keep decoding into a scratch position
 (masked out) until replaced — the standard fixed-shape continuous-batching
 compromise.
 
+Prefill is jitted over *bucketed* prompt lengths: prompts are right-padded
+to the next power of two (min 8, capped at ``max_seq``), so arbitrary
+ragged lengths compile O(log max_seq) programs instead of one per distinct
+length.  The true length is a dynamic argument (selects the next-token
+logit row); KV written for pad positions is never attended — the decode
+mask is causal in cache position, and decode overwrites those positions
+in order.  That argument only holds for attention caches: an SSM scan
+folds every input token into its recurrent state, so configs with mamba
+layers (``family == "ssm"`` or ``hybrid_period``) prefill at the exact
+prompt length instead (one jitted compile per distinct length).
+
 Works with any arch config; used by examples/serve_filtered_rag.py.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +33,19 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models.model import forward, init_caches
+
+
+def prefill_bucket(plen: int, max_seq: int, recurrent: bool = False) -> int:
+    """Padded prompt length: next power of two (>= 8, <= max_seq).
+
+    ``recurrent`` configs (SSM / hybrid) get the exact length — right-pad
+    tokens would be scanned into the recurrent state and corrupt decode.
+    """
+    if plen > max_seq:
+        raise ValueError(f"prompt length {plen} > max_seq {max_seq}")
+    if recurrent:
+        return plen
+    return min(max(8, 1 << (plen - 1).bit_length()), max_seq)
 
 
 @dataclasses.dataclass
@@ -63,13 +87,15 @@ class ContinuousBatcher:
 
         self._decode = jax.jit(decode)
 
-        def prefill(params, tokens, caches, slot):
+        def prefill(params, tokens, slot_caches, plen):
+            # tokens: (1, L) right-padded to a bucket length; plen dynamic
             logits, new_caches = forward(
-                params, cfg, tokens=tokens[None], caches=caches, cache_pos=jnp.int32(0)
+                params, cfg, tokens=tokens, caches=slot_caches, cache_pos=jnp.int32(0)
             )
-            return jnp.argmax(logits[0, -1]).astype(jnp.int32), new_caches
+            return jnp.argmax(logits[0, plen - 1]).astype(jnp.int32), new_caches
 
-        self._prefill_cache = {}
+        # one compile per (bucket length,) thanks to jit's shape cache
+        self._prefill = jax.jit(prefill)
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
@@ -78,23 +104,22 @@ class ContinuousBatcher:
         for s in range(self.n_slots):
             if self.slot_req[s] is None and self.queue:
                 req = self.queue.popleft()
-                # prefill into slot s: run the model over the prompt with a
-                # single-slot cache view, then scatter it back
+                # prefill into slot s: run the model over the bucket-padded
+                # prompt with a single-slot cache view, then scatter it back
                 slot_caches = jax.tree.map(lambda a: a[:, s : s + 1], self.caches)
                 plen = len(req.prompt)
-                logits, new_sc = forward(
-                    self.params,
-                    self.cfg,
-                    tokens=jnp.asarray(req.prompt[None]),
-                    caches=slot_caches,
-                    cache_pos=jnp.int32(0),
+                recurrent = self.cfg.family == "ssm" or bool(self.cfg.hybrid_period)
+                padded = np.zeros(prefill_bucket(plen, self.max_seq, recurrent), np.int32)
+                padded[:plen] = req.prompt
+                tok0, new_sc = self._prefill(
+                    self.params, jnp.asarray(padded[None]), slot_caches, jnp.int32(plen)
                 )
                 self.caches = jax.tree.map(
                     lambda a, nsc: a.at[:, s : s + 1].set(nsc.astype(a.dtype)),
                     self.caches,
                     new_sc,
                 )
-                first = int(jnp.argmax(logits[0, -1]))
+                first = int(tok0)
                 req.out_tokens.append(first)
                 self.last_tok[s] = first
                 self.pos[s] = plen

@@ -1,0 +1,310 @@
+"""Continuous-batching serving layer for Compass filtered search.
+
+``compass_search`` is a jitted function over static shapes: every distinct
+term count ``T``, batch size ``B``, attribute count ``A`` or
+:class:`CompassParams` is a fresh XLA program.  Serving traffic with
+arbitrary mixed conjunction/disjunction shapes through it directly would
+compile without bound.  :class:`SearchService` closes the gap between a
+request stream and the engine:
+
+* **Predicate-shape bucketing** — each request's DNF predicate is padded to
+  the next power-of-two term count (``predicate.term_bucket``), so arbitrary
+  widths collapse into a logarithmic number of static shapes.
+* **Micro-batch formation** — per-bucket admission queues; a bucket flushes
+  when it holds ``batch_size`` requests (full flush) or when its oldest
+  request has waited ``max_wait_s`` (deadline flush).  Partial batches are
+  padded to the fixed ``B`` with unsatisfiable-predicate fillers
+  (``predicate.never_true``) whose lanes can never produce a result.
+* **Compiled-executable cache** — one AOT-compiled executable per occupied
+  ``(B, T, A, CompassParams)`` key (``compass_search.lower(...).compile()``);
+  steady-state traffic runs with a bounded, observable number of
+  compilations (``stats()["compiles"]`` == occupied buckets).
+* **Padding stripping** — :class:`ServiceResult` drops filler lanes, pad
+  terms and the ``k``-prefix, so a response is bitwise-identical to calling
+  ``compass_search`` directly on that query with its natural-``T`` predicate
+  and the service's ``CompassParams`` (enforced by
+  tests/test_search_service.py).
+
+Per-request ``k`` must satisfy ``k <= params.k``: the engine's candidate
+flow depends on ``params.k`` (round pacing uses ``k // 2``), so the service
+searches at the fixed ``params.k`` and truncates — the response equals the
+``k``-prefix of the direct call, not a differently-paced search.
+
+The service is single-threaded by design (JAX dispatch is the bottleneck,
+not Python): callers ``submit`` then drive ``step()`` / ``run_until_idle``.
+A ``clock`` injection point makes deadline behaviour testable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from collections import OrderedDict, deque
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import predicate as P
+from repro.core.index import CompassIndex
+from repro.core.search import CompassParams, compass_search
+
+
+@dataclasses.dataclass
+class SearchJob:
+    """One admitted request, routed to the ``t_bucket`` queue."""
+
+    rid: int
+    query: np.ndarray  # (d,) float32
+    pred: P.Predicate  # (T, A) natural (unpadded) shape
+    k: int
+    t_submit: float
+    t_bucket: int
+
+
+@dataclasses.dataclass
+class ServiceResult:
+    """Response with all padding stripped.
+
+    ``ids``/``dists`` are the first ``k`` rows of the engine result for this
+    query's lane; ``ids == index.n_records`` marks empty (unfilled) slots
+    exactly as in a direct ``compass_search`` call.
+    """
+
+    rid: int
+    ids: np.ndarray  # (k,) int32
+    dists: np.ndarray  # (k,) float32
+    bucket: tuple  # (B, T) shape bucket that served the request
+    queue_wait_s: float
+    batch_exec_s: float
+
+
+@dataclasses.dataclass
+class BucketStats:
+    """Per-(B, T) bucket counters, serializable into BENCH JSON."""
+
+    n_requests: int = 0
+    n_batches: int = 0
+    n_full_flush: int = 0
+    n_deadline_flush: int = 0
+    n_fillers: int = 0  # padded lanes dispatched
+    n_compiles: int = 0
+    n_cache_hits: int = 0
+    total_wait_s: float = 0.0
+    total_exec_s: float = 0.0
+
+
+class SearchService:
+    """Continuous-batching filtered-search service over one CompassIndex.
+
+    Parameters
+    ----------
+    index : the (immutable) index to serve.
+    params : engine parameters shared by every request; ``params.k`` is the
+        max per-request ``k``.
+    batch_size : fixed micro-batch width ``B`` every executable is built for.
+    max_wait_s : deadline — a non-empty bucket older than this flushes
+        partially padded rather than waiting for a full batch.
+    max_terms : reject predicates whose DNF exceeds this many terms
+        (bounds the largest compiled shape).
+    result_buffer : how many completed results :meth:`poll` retains
+        (oldest evicted first).  ``step()``/``flush()`` return values are
+        the primary delivery path; the poll buffer exists for callers that
+        track request ids, and is bounded so a caller consuming only the
+        return values cannot leak memory under sustained traffic.
+    clock : monotonic time source (injectable for deterministic tests).
+    """
+
+    def __init__(
+        self,
+        index: CompassIndex,
+        params: CompassParams = CompassParams(),
+        *,
+        batch_size: int = 8,
+        max_wait_s: float = 0.01,
+        max_terms: int = 64,
+        result_buffer: int = 4096,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        self.index = index
+        self.params = params
+        self.batch_size = int(batch_size)
+        self.max_wait_s = float(max_wait_s)
+        self.max_terms = int(max_terms)
+        self.result_buffer = int(result_buffer)
+        self.clock = clock
+        self._rid = itertools.count()
+        self._queues: dict[int, deque[SearchJob]] = {}
+        self._executables: dict[tuple, Callable] = {}
+        self._results: OrderedDict[int, ServiceResult] = OrderedDict()
+        self._stats: dict[tuple, BucketStats] = {}
+
+    # -- admission -----------------------------------------------------------
+
+    def submit(
+        self,
+        query: np.ndarray,
+        pred: "P.Pred | P.Predicate",
+        k: Optional[int] = None,
+    ) -> int:
+        """Admit one ``(query, pred, k)`` job; returns a request id.
+
+        ``pred`` may be a host-side :class:`Pred` tree (lowered here with
+        its natural term count) or an already-lowered ``(T, A)``
+        :class:`Predicate`.
+        """
+        if isinstance(pred, P.Pred):
+            pred = pred.tensor(self.index.n_attrs)
+        if pred.lo.ndim != 2:
+            raise ValueError(f"expected (T, A) predicate, got shape {pred.lo.shape}")
+        if pred.n_attrs != self.index.n_attrs:
+            raise ValueError(
+                f"predicate has {pred.n_attrs} attrs, index has {self.index.n_attrs}"
+            )
+        k = self.params.k if k is None else int(k)
+        if not 0 < k <= self.params.k:
+            raise ValueError(f"k={k} outside (0, params.k={self.params.k}]")
+        if pred.n_terms > self.max_terms:
+            raise ValueError(f"predicate has {pred.n_terms} terms > max_terms={self.max_terms}")
+        query = np.asarray(query, np.float32)
+        if query.shape != (self.index.dim,):
+            raise ValueError(f"query shape {query.shape} != ({self.index.dim},)")
+        rid = next(self._rid)
+        job = SearchJob(
+            rid=rid,
+            query=query,
+            pred=pred,
+            k=k,
+            t_submit=self.clock(),
+            t_bucket=P.term_bucket(pred.n_terms),
+        )
+        self._queues.setdefault(job.t_bucket, deque()).append(job)
+        return rid
+
+    # -- batch formation -----------------------------------------------------
+
+    def step(self) -> list[ServiceResult]:
+        """One scheduling round: flush every full bucket, and every
+        non-empty bucket whose oldest request has exceeded the deadline.
+        Returns the results completed this round (also retrievable via
+        :meth:`poll`)."""
+        done: list[ServiceResult] = []
+        now = self.clock()
+        for t_bucket, q in self._queues.items():
+            while len(q) >= self.batch_size:
+                done.extend(self._dispatch(t_bucket, full=True))
+            if q and now - q[0].t_submit >= self.max_wait_s:
+                done.extend(self._dispatch(t_bucket, full=False))
+        return done
+
+    def flush(self) -> list[ServiceResult]:
+        """Dispatch everything queued regardless of deadlines (drain)."""
+        done: list[ServiceResult] = []
+        for t_bucket, q in self._queues.items():
+            while q:
+                done.extend(self._dispatch(t_bucket, full=len(q) >= self.batch_size))
+        return done
+
+    def run_until_idle(self) -> list[ServiceResult]:
+        """Step until queues empty, then drain the remainder."""
+        done = self.step()
+        done.extend(self.flush())
+        return done
+
+    def poll(self, rid: int) -> Optional[ServiceResult]:
+        """Pop the result for ``rid`` if its batch has run, else None.
+
+        Only the newest ``result_buffer`` unpolled results are retained.
+        """
+        return self._results.pop(rid, None)
+
+    def pending(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    # -- execution -----------------------------------------------------------
+
+    def _executable(self, queries: jax.Array, pred: P.Predicate) -> Callable:
+        B, T, A = pred.lo.shape
+        key = (B, T, A, self.params)
+        st = self._stats.setdefault((B, T), BucketStats())
+        exe = self._executables.get(key)
+        if exe is None:
+            exe = compass_search.lower(self.index, queries, pred, self.params).compile()
+            self._executables[key] = exe
+            st.n_compiles += 1
+        else:
+            st.n_cache_hits += 1
+        return exe
+
+    def _dispatch(self, t_bucket: int, full: bool) -> list[ServiceResult]:
+        q = self._queues[t_bucket]
+        jobs = [q.popleft() for _ in range(min(self.batch_size, len(q)))]
+        B = self.batch_size
+        n_fill = B - len(jobs)
+        queries = np.zeros((B, self.index.dim), np.float32)
+        for i, job in enumerate(jobs):
+            queries[i] = job.query
+        preds = [j.pred for j in jobs] + [P.never_true(self.index.n_attrs)] * n_fill
+        pred = P.stack_predicates(preds, n_terms=t_bucket)
+        qj = jnp.asarray(queries)
+
+        t0 = self.clock()
+        exe = self._executable(qj, pred)
+        res = exe(self.index, qj, pred)
+        res.ids.block_until_ready()
+        exec_s = self.clock() - t0
+
+        st = self._stats[(B, t_bucket)]
+        st.n_requests += len(jobs)
+        st.n_batches += 1
+        st.n_fillers += n_fill
+        st.n_full_flush += int(full)
+        st.n_deadline_flush += int(not full)
+        st.total_exec_s += exec_s
+
+        ids = np.asarray(res.ids)
+        dists = np.asarray(res.dists)
+        out = []
+        for i, job in enumerate(jobs):
+            wait = t0 - job.t_submit
+            st.total_wait_s += wait
+            r = ServiceResult(
+                rid=job.rid,
+                ids=ids[i, : job.k].copy(),
+                dists=dists[i, : job.k].copy(),
+                bucket=(B, t_bucket),
+                queue_wait_s=wait,
+                batch_exec_s=exec_s,
+            )
+            self._results[job.rid] = r
+            out.append(r)
+        while len(self._results) > self.result_buffer:
+            self._results.popitem(last=False)  # evict oldest unpolled
+        return out
+
+    # -- observability -------------------------------------------------------
+
+    @property
+    def compile_count(self) -> int:
+        """Total XLA compilations so far == occupied (B, T, A, pm) keys."""
+        return len(self._executables)
+
+    def stats(self) -> dict:
+        """JSON-ready snapshot: per-bucket counters plus service totals."""
+        buckets = {
+            f"B{b}xT{t}": dataclasses.asdict(s) for (b, t), s in sorted(self._stats.items())
+        }
+        n_req = sum(s.n_requests for s in self._stats.values())
+        wait = sum(s.total_wait_s for s in self._stats.values())
+        return {
+            "batch_size": self.batch_size,
+            "max_wait_s": self.max_wait_s,
+            "compiles": self.compile_count,
+            "occupied_buckets": len(self._stats),
+            "n_requests": n_req,
+            "n_batches": sum(s.n_batches for s in self._stats.values()),
+            "n_fillers": sum(s.n_fillers for s in self._stats.values()),
+            "mean_wait_s": wait / n_req if n_req else 0.0,
+            "buckets": buckets,
+        }

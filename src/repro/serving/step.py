@@ -7,13 +7,10 @@ that alone would exceed HBM at 32k x 256k vocab).
 """
 from __future__ import annotations
 
-from typing import Optional
-
-import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models.model import forward, init_caches
+from repro.models.model import forward
 
 
 def make_prefill_step(cfg: ModelConfig, act_sharding=None, unroll: bool = False, ep=None):

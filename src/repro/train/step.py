@@ -9,9 +9,6 @@ cross-pod gradient reduction (optim.compression).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

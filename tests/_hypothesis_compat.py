@@ -34,3 +34,5 @@ except ImportError:  # fall back to skip-marking just the @given tests
 
     def settings(*_a, **_kw):
         return lambda f: f
+
+__all__ = ["HAS_HYPOTHESIS", "given", "settings", "st"]

@@ -1,8 +1,6 @@
 """End-to-end behaviour of CompassSearch against brute-force ground truth,
 covering the paper's claim surface: conjunctions, disjunctions, selectivity
 extremes, ablations, and baselines."""
-import dataclasses
-
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -15,7 +13,6 @@ from repro.core.baselines import (
     prefilter_search,
     recall,
 )
-from repro.core.index import BuildConfig, build_index
 from repro.core.search import CompassParams, compass_search
 
 

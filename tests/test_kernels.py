@@ -1,6 +1,5 @@
 """Per-kernel validation: shape/dtype sweeps, interpret-mode Pallas vs the
 pure-jnp oracle in ref.py, plus hypothesis property tests."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

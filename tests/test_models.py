@@ -114,8 +114,6 @@ def test_ssm_chunked_matches_recurrent(arch):
 
 def test_param_count_sane():
     # full-size configs should land within ~35% of the nominal sizes
-    import math
-
     expected = {
         "tinyllama-1.1b": 1.1e9,
         "yi-34b": 34e9,

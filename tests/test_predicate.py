@@ -60,6 +60,55 @@ def test_stack_predicates_pads_unsatisfiable():
     assert not bool(out1[0])
 
 
+def test_empty_dnf_is_unsatisfiable():
+    # contradictory conjunction: every DNF term drops -> empty -> tensor()
+    # must lower to an unsatisfiable predicate, not an empty array
+    tree = P.Pred.and_(P.Pred.le(0, 0.2), P.Pred.ge(0, 0.8))
+    assert tree.to_dnf() == []
+    pred = tree.tensor(2)
+    assert pred.lo.shape == (1, 2)
+    attrs = jnp.asarray([[0.0, 0.0], [0.5, 0.5], [1.0, 1.0]])
+    assert not np.asarray(P.evaluate(pred, attrs)).any()
+
+
+def test_never_true_rejects_everything():
+    pred = P.never_true(3, n_terms=2)
+    attrs = jnp.asarray([[0.0, 0.5, 1.0], [P.NEG_INF, 0.0, P.POS_INF]])
+    assert not np.asarray(P.evaluate(pred, attrs)).any()
+
+
+def test_term_bucket_powers_of_two():
+    assert [P.term_bucket(t) for t in (1, 2, 3, 4, 5, 8, 9)] == [1, 2, 4, 4, 8, 8, 16]
+    with pytest.raises(ValueError):
+        P.term_bucket(0)
+
+
+def test_pad_terms_preserves_evaluation():
+    tree = P.Pred.or_(P.Pred.le(0, 0.3), P.Pred.ge(1, 0.7))  # T=2
+    base = tree.tensor(2)
+    rng = np.random.default_rng(3)
+    attrs = jnp.asarray(rng.uniform(size=(64, 2)).astype(np.float32))
+    want = np.asarray(P.evaluate(base, attrs))
+    for T in (2, 4, 8):
+        padded = P.pad_terms(base, T)
+        assert padded.lo.shape == (T, 2)
+        np.testing.assert_array_equal(np.asarray(P.evaluate(padded, attrs)), want)
+    with pytest.raises(ValueError, match="terms"):
+        P.pad_terms(base, 1)
+
+
+def test_stack_predicates_to_requested_bucket():
+    p1 = P.Pred.range(0, 0.0, 1.0).tensor(2)  # T=1
+    p2 = P.Pred.or_(P.Pred.le(0, 0.1), P.Pred.ge(1, 0.9)).tensor(2)  # T=2
+    batched = P.stack_predicates([p1, p2], n_terms=4)
+    assert batched.lo.shape == (2, 4, 2)
+    attrs = jnp.asarray([[0.5, 0.5]])
+    assert bool(P.evaluate(P.Predicate(batched.lo[0], batched.hi[0]), attrs)[0])
+    assert not bool(P.evaluate(P.Predicate(batched.lo[1], batched.hi[1]), attrs)[0])
+    with pytest.raises(ValueError, match="terms"):
+        P.stack_predicates([p1, p2], n_terms=1)
+
+
 @settings(max_examples=30, deadline=None)
 @given(st.lists(st.floats(0, 1), min_size=4, max_size=4), st.data())
 def test_property_dnf_matches_tree_semantics(attr_vals, data):

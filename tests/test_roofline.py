@@ -3,7 +3,6 @@ cost-calibration arithmetic, and an end-to-end check that per-device
 cost_analysis matches a hand-counted matmul."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.roofline.analysis import (

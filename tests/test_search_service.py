@@ -1,0 +1,183 @@
+"""SearchService behaviour: padding/stripping round-trips bitwise against
+direct compass_search, deadline flush, executable-cache accounting, and
+predicate shape-bucket plumbing."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import predicate as P
+from repro.core.search import CompassParams, compass_search
+from repro.serving.search_service import SearchService
+
+PM = CompassParams(k=10, ef=32)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def _trees(n_attrs=4):
+    """Predicate trees straddling the T=1 / T=2 / T=4 bucket boundaries."""
+    return {
+        1: P.Pred.and_(P.Pred.range(0, 0.1, 0.7), P.Pred.le(1, 0.8)),  # T=1
+        2: P.Pred.or_(P.Pred.le(0, 0.4), P.Pred.ge(1, 0.6)),  # T=2
+        3: P.Pred.or_(P.Pred.le(0, 0.3), P.Pred.ge(1, 0.7), P.Pred.eq(2, 0.5)),  # T=3 -> 4
+        4: P.Pred.or_(*[P.Pred.range(a, 0.2, 0.6) for a in range(4)]),  # T=4
+    }
+
+
+def _direct(index, q, tree, pm=PM):
+    """The reference a service response must match bitwise: a direct
+    compass_search on the lone query with its natural-T predicate."""
+    pred = P.stack_predicates([tree.tensor(index.n_attrs)])
+    return compass_search(index, jnp.asarray(q[None]), pred, pm)
+
+
+def test_round_trip_bitwise_across_bucket_boundaries(built_index, corpus):
+    x, attrs, queries = corpus
+    trees = _trees()
+    svc = SearchService(built_index, PM, batch_size=4, max_wait_s=0.0)
+    jobs = [(i, queries[i % len(queries)], trees[1 + i % 4]) for i in range(9)]
+    rids = {svc.submit(q, tree, k=PM.k): (q, tree) for _, q, tree in jobs}
+    results = {r.rid: r for r in svc.run_until_idle()}
+    assert svc.pending() == 0
+    assert set(results) == set(rids)
+    for rid, (q, tree) in rids.items():
+        direct = _direct(built_index, q, tree)
+        r = results[rid]
+        np.testing.assert_array_equal(r.ids, np.asarray(direct.ids)[0])
+        # bitwise: compare float payloads as raw uint32
+        np.testing.assert_array_equal(
+            r.dists.view(np.uint32), np.asarray(direct.dists)[0].view(np.uint32)
+        )
+
+
+def test_per_request_k_truncates_the_direct_result(built_index, corpus):
+    _, _, queries = corpus
+    tree = _trees()[2]
+    svc = SearchService(built_index, PM, batch_size=2, max_wait_s=0.0)
+    rid = svc.submit(queries[0], tree, k=3)
+    results = svc.run_until_idle()
+    (r,) = [rr for rr in results if rr.rid == rid]
+    direct = _direct(built_index, queries[0], tree)
+    assert r.ids.shape == (3,)
+    np.testing.assert_array_equal(r.ids, np.asarray(direct.ids)[0, :3])
+
+
+def test_full_bucket_flushes_without_deadline(built_index, corpus):
+    _, _, queries = corpus
+    clock = FakeClock()
+    svc = SearchService(built_index, PM, batch_size=2, max_wait_s=1e9, clock=clock)
+    svc.submit(queries[0], _trees()[1])
+    assert svc.step() == []  # half-full bucket, deadline far away: waits
+    svc.submit(queries[1], _trees()[1])
+    done = svc.step()  # full bucket flushes immediately
+    assert len(done) == 2
+    st = svc.stats()["buckets"]["B2xT1"]
+    assert st["n_full_flush"] == 1 and st["n_deadline_flush"] == 0
+    assert st["n_fillers"] == 0
+
+
+def test_timeout_flush_pads_partial_batch(built_index, corpus):
+    _, _, queries = corpus
+    clock = FakeClock()
+    svc = SearchService(built_index, PM, batch_size=4, max_wait_s=0.5, clock=clock)
+    rid = svc.submit(queries[0], _trees()[4])
+    assert svc.step() == []  # deadline not reached
+    clock.advance(0.6)
+    done = svc.step()
+    assert [r.rid for r in done] == [rid]
+    st = svc.stats()["buckets"]["B4xT4"]
+    assert st["n_deadline_flush"] == 1
+    assert st["n_fillers"] == 3  # 1 real + 3 unsatisfiable fillers
+    # padded lanes must not leak into the response
+    direct = _direct(built_index, queries[0], _trees()[4])
+    np.testing.assert_array_equal(done[0].ids, np.asarray(direct.ids)[0])
+
+
+def test_executable_cache_hit_accounting(built_index, corpus):
+    _, _, queries = corpus
+    svc = SearchService(built_index, PM, batch_size=2, max_wait_s=0.0)
+    trees = _trees()
+    # 3 batches in bucket T=1, 1 batch in bucket T=4
+    for i in range(6):
+        svc.submit(queries[i % len(queries)], trees[1])
+    for i in range(2):
+        svc.submit(queries[i], trees[4])
+    svc.run_until_idle()
+    stats = svc.stats()
+    assert svc.compile_count == 2  # one executable per occupied bucket
+    assert stats["compiles"] == stats["occupied_buckets"] == 2
+    b1 = stats["buckets"]["B2xT1"]
+    assert b1["n_compiles"] == 1 and b1["n_cache_hits"] == 2
+    b4 = stats["buckets"]["B2xT4"]
+    assert b4["n_compiles"] == 1 and b4["n_cache_hits"] == 0
+    # same shapes again: only cache hits, no new executables
+    for i in range(4):
+        svc.submit(queries[i], trees[3 if i % 2 else 1])  # T=3 pads into T=4 bucket
+    svc.run_until_idle()
+    assert svc.compile_count == 2
+    assert svc.stats()["buckets"]["B2xT4"]["n_cache_hits"] == 1
+
+
+def test_mixed_t_shapes_share_one_bucket_executable(built_index, corpus):
+    """T=3 and T=4 predicates pad to the same bucket and the same compile."""
+    _, _, queries = corpus
+    svc = SearchService(built_index, PM, batch_size=2, max_wait_s=0.0)
+    trees = _trees()
+    r3 = svc.submit(queries[0], trees[3])
+    r4 = svc.submit(queries[1], trees[4])
+    results = {r.rid: r for r in svc.run_until_idle()}
+    assert svc.compile_count == 1
+    assert results[r3].bucket == results[r4].bucket == (2, 4)
+    for rid, tree in ((r3, trees[3]), (r4, trees[4])):
+        direct = _direct(built_index, queries[0 if rid == r3 else 1], tree)
+        np.testing.assert_array_equal(results[rid].ids, np.asarray(direct.ids)[0])
+
+
+def test_poll_pops_once(built_index, corpus):
+    _, _, queries = corpus
+    svc = SearchService(built_index, PM, batch_size=1, max_wait_s=0.0)
+    rid = svc.submit(queries[0], _trees()[1])
+    assert svc.poll(rid) is None  # not dispatched yet
+    svc.run_until_idle()
+    assert svc.poll(rid) is not None
+    assert svc.poll(rid) is None  # popped
+
+
+def test_submit_validation(built_index, corpus):
+    _, _, queries = corpus
+    svc = SearchService(built_index, PM, batch_size=2, max_terms=8)
+    with pytest.raises(ValueError, match="outside"):
+        svc.submit(queries[0], _trees()[1], k=PM.k + 1)
+    with pytest.raises(ValueError, match="query shape"):
+        svc.submit(queries[0][:3], _trees()[1])
+    with pytest.raises(ValueError, match="attrs"):
+        svc.submit(queries[0], P.Pred.le(0, 0.5).tensor(2))
+    with pytest.raises(ValueError, match="max_terms"):
+        svc.submit(queries[0], P.Pred.or_(*[P.Pred.eq(0, i / 16) for i in range(9)]))
+
+
+def test_result_buffer_evicts_oldest_unpolled(built_index, corpus):
+    _, _, queries = corpus
+    svc = SearchService(built_index, PM, batch_size=2, max_wait_s=0.0, result_buffer=3)
+    rids = [svc.submit(queries[i % len(queries)], _trees()[1]) for i in range(6)]
+    svc.run_until_idle()
+    assert [svc.poll(r) is not None for r in rids] == [False] * 3 + [True] * 3
+
+
+def test_unsatisfiable_request_returns_all_padding(built_index, corpus):
+    x, _, queries = corpus
+    svc = SearchService(built_index, PM, batch_size=2, max_wait_s=0.0)
+    rid = svc.submit(queries[0], P.Pred.range(0, 2.0, 3.0))  # attrs are U[0,1]
+    svc.run_until_idle()
+    r = svc.poll(rid)
+    assert np.all(r.ids == x.shape[0])
+    assert np.all(~np.isfinite(r.dists))

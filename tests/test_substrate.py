@@ -1,7 +1,5 @@
 """Substrate tests: optimizer, data pipeline, checkpoint/restart/elastic,
 gradient compression, watchdog."""
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -93,7 +91,6 @@ def test_property_quantize_dequantize_error_bounded(n, seed):
     g = {"w": jnp.asarray(rng.normal(size=n).astype(np.float32))}
     c = quantize(g, block=128)
     deq = dequantize(c, g, block=128)
-    scale = np.abs(np.asarray(g["w"])).reshape(-1)
     err = np.abs(np.asarray(deq["w"]) - np.asarray(g["w"]))
     # error bounded by half a quantization bucket of the block absmax
     assert err.max() <= (np.abs(np.asarray(g["w"])).max() / 127.0) * 0.75 + 1e-7

@@ -88,6 +88,40 @@ def test_continuous_batcher_serves_requests(tiny_cfg):
         assert r.done and len(r.out_tokens) == 4
 
 
+def test_prefill_bucket_shapes():
+    from repro.serving.scheduler import prefill_bucket
+
+    assert [prefill_bucket(p, 64) for p in (1, 5, 8, 9, 33)] == [8, 8, 8, 16, 64]
+    assert prefill_bucket(60, 64) == 64  # capped at max_seq
+    # recurrent configs (SSM/hybrid) must prefill exact-length: pad tokens
+    # would be scanned into the recurrent state
+    assert prefill_bucket(5, 64, recurrent=True) == 5
+    with pytest.raises(ValueError):
+        prefill_bucket(65, 64)
+
+
+def test_batcher_ragged_prompt_lengths_match_padded_prefill(tiny_cfg):
+    """Prompts straddling prefill buckets (3, 8, 13 tokens) decode the same
+    tokens as a prompt-length-identical run — bucketed prefill is
+    output-neutral for attention configs."""
+    from repro.serving.scheduler import ContinuousBatcher, Request
+
+    params = init_params(tiny_cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, 256, n).astype(np.int32) for n in (3, 8, 13)]
+
+    def serve(n_slots):
+        b = ContinuousBatcher(tiny_cfg, params, n_slots=n_slots, max_seq=64)
+        reqs = [Request(rid=i, prompt=p, max_tokens=4) for i, p in enumerate(prompts)]
+        for r in reqs:
+            b.submit(r)
+        b.run_until_done()
+        return [r.out_tokens for r in reqs]
+
+    # single-slot (sequential, each prompt prefilled alone) == 3-slot batch
+    assert serve(1) == serve(3)
+
+
 def test_filtered_rag_respects_predicate(tiny_cfg):
     from repro.core import predicate as P
     from repro.core.index import BuildConfig
@@ -109,3 +143,9 @@ def test_filtered_rag_respects_predicate(tiny_cfg):
                 found_any = True
                 assert doc_attrs[i, 0] <= 0.4 + 1e-6
     assert found_any
+    # the serving-layer path returns the same docs (padding is
+    # result-neutral; same CompassParams via make_service)
+    service = rag.make_service(k=3, ef=16, batch_size=4, max_wait_s=0.0)
+    ids_svc = rag.retrieve(params, tiny_cfg, prompts, pred, k=3, service=service)
+    np.testing.assert_array_equal(ids_svc, ids)
+    assert service.stats()["compiles"] == 1
