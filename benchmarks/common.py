@@ -81,7 +81,12 @@ def get_index(name: str, nlist: int = 128, m: int = 16):
     path = os.path.join(CACHE, f"{name}_n{N}_d{D}_m{m}_nl{nlist}.pkl")
     if os.path.exists(path):
         with open(path, "rb") as f:
-            return pickle.load(f)
+            idx_host, build_s = pickle.load(f)
+        # caches written before the planner existed lack attribute stats;
+        # rebuild so planner benches don't fail on a stale pickle
+        if getattr(idx_host, "astats", None) is not None:
+            return idx_host, build_s
+        os.remove(path)
     x, attrs, _ = get_dataset(name)
     t0 = time.time()
     idx = build_index(x, attrs, BuildConfig(m=m, nlist=nlist))

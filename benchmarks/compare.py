@@ -1,0 +1,133 @@
+"""Diff two directories of BENCH_*.json artifacts and fail on QPS
+regressions — the advisory trajectory gate behind bench-smoke.
+
+  python -m benchmarks.compare BASE_DIR NEW_DIR [--threshold 0.2]
+
+Every ``qps`` figure is extracted from both artifacts by a recursive walk
+(rows are bench-specific shapes: tuples of RunResults, planner sweep
+objects, serving summaries), matched by a deterministic label built from
+the surrounding method / workload / passrate fields, and compared: a label
+whose new QPS falls more than ``threshold`` (default 20%) below the base
+fails the run.  Labels present on only one side are reported but never
+fail — benches come and go across PRs.
+
+Wall-clock QPS on shared CI runners is noisy, which is why the CI step is
+*advisory* (``continue-on-error``): the artifact is the signal, the red ✗
+is the prompt to look, the committed baseline under ``benchmarks/baselines``
+is what "before" means.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+
+def extract_qps(payload: dict) -> dict[str, float]:
+    """All (label, qps) figures in a BENCH payload, deterministically.
+
+    A dict node carrying ``workload``/``passrate`` contributes a breadcrumb
+    (planner-sweep rows); a dict node carrying a numeric ``qps`` emits one
+    figure labeled by breadcrumbs + its ``method``/``ef`` fields.  Repeated
+    labels get a stable occurrence suffix (row order is deterministic).
+    """
+    out: dict[str, float] = {}
+
+    def emit(label: str, qps: float) -> None:
+        base, i = label, 2
+        while label in out:
+            label = f"{base}#{i}"
+            i += 1
+        out[label] = qps
+
+    def visit(node, crumbs: tuple) -> None:
+        if isinstance(node, dict):
+            if "workload" in node and "passrate" in node:
+                crumbs = crumbs + (f"{node['workload']}@{node['passrate']}",)
+            qps = node.get("qps")
+            if isinstance(qps, (int, float)) and not isinstance(qps, bool):
+                parts = list(crumbs)
+                if isinstance(node.get("method"), str):
+                    parts.append(node["method"])
+                if isinstance(node.get("ef"), (int, float)):
+                    parts.append(f"ef{node['ef']}")
+                emit("/".join(parts) or "qps", float(qps))
+            for v in node.values():
+                visit(v, crumbs)
+        elif isinstance(node, list):
+            for v in node:
+                visit(v, crumbs)
+
+    visit(payload.get("rows"), ())
+    return out
+
+
+def compare_file(base_path: str, new_path: str, threshold: float) -> list[str]:
+    """Returns a list of regression messages (empty == ok)."""
+    with open(base_path) as f:
+        base = extract_qps(json.load(f))
+    with open(new_path) as f:
+        new = extract_qps(json.load(f))
+    name = os.path.basename(new_path)
+    regressions = []
+    for label in sorted(base):
+        if label not in new:
+            print(f"note {name}: {label!r} only in baseline")
+            continue
+        b, n = base[label], new[label]
+        if b <= 0.0:
+            continue
+        ratio = n / b
+        flag = "REGRESSION" if ratio < 1.0 - threshold else "ok"
+        print(f"{flag:>10} {name}: {label}: {b:.1f} -> {n:.1f} qps ({ratio:.2f}x)")
+        if ratio < 1.0 - threshold:
+            regressions.append(f"{name}: {label}: {b:.1f} -> {n:.1f} ({ratio:.2f}x)")
+    for label in sorted(set(new) - set(base)):
+        print(f"note {name}: {label!r} new (no baseline)")
+    return regressions
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("base_dir", help="baseline BENCH_*.json directory")
+    ap.add_argument("new_dir", help="candidate BENCH_*.json directory")
+    ap.add_argument(
+        "--threshold", type=float, default=0.2,
+        help="max tolerated fractional QPS drop (default 0.2 == 20%%)",
+    )
+    args = ap.parse_args(argv)
+    base_files = {
+        os.path.basename(p): p
+        for p in glob.glob(os.path.join(args.base_dir, "BENCH_*.json"))
+    }
+    new_files = {
+        os.path.basename(p): p
+        for p in glob.glob(os.path.join(args.new_dir, "BENCH_*.json"))
+    }
+    shared = sorted(set(base_files) & set(new_files))
+    if not shared:
+        print(
+            f"FAIL: no BENCH_*.json in common between {args.base_dir} "
+            f"({sorted(base_files)}) and {args.new_dir} ({sorted(new_files)})"
+        )
+        return 1
+    all_regressions = []
+    for name in shared:
+        all_regressions.extend(
+            compare_file(base_files[name], new_files[name], args.threshold)
+        )
+    for name in sorted(set(new_files) - set(base_files)):
+        print(f"note: {name} has no committed baseline")
+    if all_regressions:
+        print(f"\n{len(all_regressions)} QPS regression(s) > {args.threshold:.0%}:")
+        for r in all_regressions:
+            print(f"  {r}")
+        return 1
+    print(f"\nall {len(shared)} shared artifact(s) within {args.threshold:.0%}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,6 +6,7 @@
   bench_qps_recall    -> Figs. 8-10
   bench_ablation      -> Fig. 11
   bench_serving       -> serving-layer QPS/latency/compile counts (ours)
+  bench_planner       -> planner selectivity sweep: mode/QPS/recall (ours)
 
 ``python -m benchmarks.run [--only name] [--quick] [--json-dir DIR]``
 
@@ -31,6 +32,7 @@ ALL = (
     "bench_qps_recall",
     "bench_ablation",
     "bench_serving",
+    "bench_planner",
 )
 
 

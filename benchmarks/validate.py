@@ -18,6 +18,28 @@ import sys
 REQUIRED = ("bench", "meta", "wall_s", "rows")
 META_REQUIRED = ("engine_version", "backend", "platform", "jax_version", "n")
 
+# Per-bench row schemas: every row of the named bench must be an object
+# carrying these keys (benches whose rows are positional tuples are not
+# listed — their shape is covered by the envelope check alone).
+ROW_REQUIRED = {
+    "bench_planner": ("workload", "passrate", "mode_counts", "planner", "cooperative"),
+}
+
+
+def _validate_rows(bench: str, rows) -> list[str]:
+    required = ROW_REQUIRED.get(bench)
+    if required is None:
+        return []
+    if not isinstance(rows, list) or not rows:
+        return [f"{bench}: rows must be a non-empty list"]
+    errs = []
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict):
+            errs.append(f"{bench}: row {i} is {type(row).__name__}, expected object")
+            continue
+        errs.extend(f"{bench}: row {i} missing {k!r}" for k in required if k not in row)
+    return errs
+
 
 def validate_file(path: str) -> list[str]:
     """Returns a list of problems (empty == valid)."""
@@ -39,6 +61,8 @@ def validate_file(path: str) -> list[str]:
         errs.extend(f"meta missing {k!r}" for k in META_REQUIRED if k not in meta)
     if "wall_s" in payload and not isinstance(payload["wall_s"], (int, float)):
         errs.append("wall_s is not numeric")
+    if "bench" in payload and "rows" in payload:
+        errs.extend(_validate_rows(payload["bench"], payload["rows"]))
     return errs
 
 

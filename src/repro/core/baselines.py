@@ -25,6 +25,7 @@ import numpy as np
 
 from . import predicate as P
 from .index import CompassIndex
+from .planner.plan import POSTFILTER
 from .search import CompassParams, SearchResult, SearchStats, compass_search
 
 
@@ -120,6 +121,7 @@ def postfilter_search(
         jnp.broadcast_to(jnp.float32(P.POS_INF), (bsz, 1, n_attrs)),
     )
     total_dist = jnp.zeros((bsz,), jnp.int32)
+    total_cdist = jnp.zeros((bsz,), jnp.int32)
     total_steps = jnp.zeros((bsz,), jnp.int32)
     out_ids = np.full((bsz, k), n, np.int32)
     out_dists = np.full((bsz, k), np.inf, np.float32)
@@ -130,6 +132,7 @@ def postfilter_search(
         pm = CompassParams(k=ef, ef=ef, use_btree=False, metric=metric, backend=backend)
         res = compass_search(index, queries, true_pred, pm)
         total_dist = total_dist + res.stats.n_dist
+        total_cdist = total_cdist + res.stats.n_cdist
         total_steps = total_steps + res.stats.n_steps
         ok = np.asarray(jax.vmap(lambda lo, hi, at: P.evaluate(P.Predicate(lo, hi), at))(
             pred.lo, pred.hi, index.attrs[res.ids]
@@ -150,9 +153,11 @@ def postfilter_search(
         ef *= 2
     stats = SearchStats(
         n_dist=total_dist,
-        n_cdist=jnp.zeros((bsz,), jnp.int32),
+        n_cdist=total_cdist,
         n_steps=total_steps,
         n_bcalls=jnp.zeros((bsz,), jnp.int32),
+        n_clusters_ranked=jnp.zeros((bsz,), jnp.int32),
+        mode=jnp.full((bsz,), POSTFILTER, jnp.int32),
         efs_final=last.stats.efs_final,
     )
     return SearchResult(jnp.asarray(out_ids), jnp.asarray(out_dists), stats)

@@ -106,3 +106,21 @@ def range_in_cluster(ca: ClusteredAttrs, cluster, attr, lo_val, hi_val):
 def count_in_cluster(ca: ClusteredAttrs, cluster, attr, lo_val, hi_val):
     beg, end = range_in_cluster(ca, cluster, attr, lo_val, hi_val)
     return end - beg
+
+
+def run_bounds_all_clusters(ca: ClusteredAttrs, attr, lo_val, hi_val):
+    """Per-cluster [beg, end) run bounds over ``order[attr]`` for records
+    whose attr value lies in the closed interval [lo_val, hi_val] — every
+    cluster probed at once (vmapped B+-tree descents).
+
+    This is the planner's exact pass-count probe: ``sum(end - beg)`` is the
+    exact number of records matching the single-attribute range, and the
+    bounds themselves are the PREFILTER mode's materialization cursors.
+    Returns (beg, end), each (nlist,) int32 global positions.
+    """
+    vals = ca.sorted_vals[attr]
+    c_beg = ca.offsets[:-1]
+    c_end = ca.offsets[1:]
+    beg = jax.vmap(lambda b, e: searchsorted_slice(vals, b, e, lo_val, "left"))(c_beg, c_end)
+    end = jax.vmap(lambda b, e: searchsorted_slice(vals, b, e, hi_val, "right"))(c_beg, c_end)
+    return beg, end

@@ -31,6 +31,7 @@ from . import predicate as PR
 from .clustered_attrs import ClusteredAttrs
 from .graph_build import GraphIndex
 from .index import BuildConfig, CompassIndex, build_index
+from .planner.stats import AttrStats
 from .search import CompassParams, compass_search
 
 
@@ -47,6 +48,10 @@ class ShardedIndex(NamedTuple):
     sorted_vals: jax.Array  # (S, A, n_loc)
     offsets: jax.Array  # (S, nlist + 1)
     assignments: jax.Array  # (S, n_loc)
+    # planner attribute statistics (per-shard AttrStats leaves)
+    hist_edges: jax.Array  # (S, A, n_bins + 1)
+    hist_cluster_edges: jax.Array  # (S, nlist, A, n_cluster_bins + 1)
+    hist_cluster_counts: jax.Array  # (S, nlist)
 
     @property
     def n_shards(self) -> int:
@@ -68,6 +73,9 @@ def _to_local_index(s: ShardedIndex) -> CompassIndex:
         medoids=sq(s.medoids),
         cattrs=ClusteredAttrs(
             sq(s.order), sq(s.sorted_vals), sq(s.offsets), sq(s.assignments)
+        ),
+        astats=AttrStats(
+            sq(s.hist_edges), sq(s.hist_cluster_edges), sq(s.hist_cluster_counts)
         ),
     )
 
@@ -95,6 +103,9 @@ def build_sharded_index(
         sorted_vals=jnp.stack([p.cattrs.sorted_vals for p in parts]),
         offsets=jnp.stack([p.cattrs.offsets for p in parts]),
         assignments=jnp.stack([p.cattrs.assignments for p in parts]),
+        hist_edges=jnp.stack([p.astats.edges for p in parts]),
+        hist_cluster_edges=jnp.stack([p.astats.cluster_edges for p in parts]),
+        hist_cluster_counts=jnp.stack([p.astats.cluster_counts for p in parts]),
     )
 
 
@@ -107,7 +118,8 @@ def make_distributed_search(mesh, pm: CompassParams):
     shard_spec = ShardedIndex(
         vectors=P(axes), attrs=P(axes), neighbors=P(axes), entry=P(axes),
         centroids=P(axes), medoids=P(axes), order=P(axes), sorted_vals=P(axes),
-        offsets=P(axes), assignments=P(axes),
+        offsets=P(axes), assignments=P(axes), hist_edges=P(axes),
+        hist_cluster_edges=P(axes), hist_cluster_counts=P(axes),
     )
 
     def local_search(s_index: ShardedIndex, queries, lo, hi):
@@ -148,7 +160,14 @@ def make_distributed_search(mesh, pm: CompassParams):
 
 
 def abstract_sharded_index(
-    n_total: int, dim: int, n_attrs: int, n_shards: int, m: int = 32, nlist: int = 4096
+    n_total: int,
+    dim: int,
+    n_attrs: int,
+    n_shards: int,
+    m: int = 32,
+    nlist: int = 4096,
+    hist_bins: int = 64,
+    cluster_hist_bins: int = 8,
 ) -> ShardedIndex:
     n_loc = n_total // n_shards
     f32, i32 = jnp.float32, jnp.int32
@@ -164,6 +183,10 @@ def abstract_sharded_index(
         sorted_vals=sds((n_shards, n_attrs, n_loc), f32),
         offsets=sds((n_shards, nlist + 1), i32),
         assignments=sds((n_shards, n_loc), i32),
+        # planner histograms (defaults mirror BuildConfig's)
+        hist_edges=sds((n_shards, n_attrs, hist_bins + 1), f32),
+        hist_cluster_edges=sds((n_shards, nlist, n_attrs, cluster_hist_bins + 1), f32),
+        hist_cluster_counts=sds((n_shards, nlist), f32),
     )
 
 

@@ -45,8 +45,8 @@ from .. import predicate as P
 
 
 class VisitBackend(Protocol):
-    """Scoring interface consumed by :func:`engine.state.visit` and the
-    driver's OPEN step."""
+    """Scoring interface consumed by :func:`engine.state.visit`, the
+    driver's OPEN step, and the planner's PREFILTER run scan."""
 
     name: str
 
@@ -56,6 +56,14 @@ class VisitBackend(Protocol):
 
     def centroid_scores(self, index, queries, metric):
         """Per-cluster distance scores for a query batch: (B, nlist) f32."""
+        ...
+
+    def scan_scores(self, index, queries, pred, ids, mask, metric):
+        """Batched run-scan scoring for the planner's PREFILTER mode:
+        (B, V) candidate ids against (B, d) queries and (B, T, A) predicate
+        tensors -> (dist (B, V) f32 with +inf where masked, passing (B, V)
+        bool).  Same per-row semantics as visit_scores, hoisted out of the
+        per-query vmap so the pallas path gets one blocked problem."""
         ...
 
 
@@ -81,6 +89,25 @@ class RefBackend:
             cdiff = index.centroids[None, :, :] - queries[:, None, :]
             return jnp.sum(cdiff * cdiff, axis=-1)
         return -(queries @ index.centroids.T)
+
+    def scan_scores(self, index, queries, pred, ids, mask, metric):
+        n = index.n_records
+        safe = jnp.where(mask, jnp.clip(ids, 0, n), n).astype(jnp.int32)
+        # sentinel ids are masked-out slots even under a true mask (same
+        # validity rule as the filter_distance kernels)
+        valid = mask & (safe < n)
+        vecs = index.vectors[safe]  # (B, V, d)
+        if metric == "l2":
+            diff = vecs - queries[:, None, :]
+            dist = jnp.sum(diff * diff, axis=-1)
+        else:
+            dist = -jnp.einsum("bvd,bd->bv", vecs, queries)
+        dist = jnp.where(valid, dist, jnp.inf)
+        attrs = index.attrs[safe]  # (B, V, A)
+        passing = jax.vmap(
+            lambda lo, hi, at: P.evaluate(P.Predicate(lo, hi), at)
+        )(pred.lo, pred.hi, attrs)
+        return dist, passing & valid
 
 
 class PallasBackend:
@@ -112,6 +139,16 @@ class PallasBackend:
         from ...kernels import ops
 
         return ops.ivf_score(queries, index.centroids)
+
+    def scan_scores(self, index, queries, pred, ids, mask, metric):
+        if metric != "l2":
+            return RefBackend().scan_scores(index, queries, pred, ids, mask, metric)
+        from ...kernels import ops
+
+        dist, passing = ops.filter_distance_batch(
+            index.vectors, index.attrs, ids, mask, queries, pred.lo, pred.hi
+        )
+        return dist, passing & mask
 
 
 _BACKENDS = {"ref": RefBackend(), "pallas": PallasBackend()}

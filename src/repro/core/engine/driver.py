@@ -35,16 +35,23 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from typing import TYPE_CHECKING
+
 from .. import predicate as P
-from ..index import CompassIndex
+from ..planner import plan as qplan
 from . import btree_iter, graph_iter
 from . import state as S
 from .backend import VisitBackend, resolve_backend
 from .state import EngineState, FixedQueue, SearchResult, SearchStats
 
+if TYPE_CHECKING:  # runtime import would cycle (index -> planner -> engine)
+    from ..index import CompassIndex
+
 #: Bumped whenever the engine's candidate flow changes in a way that could
 #: move benchmark trajectories (recorded in BENCH_*.json by benchmarks/).
-ENGINE_VERSION = "engine/1"
+#: engine/2: cost-based planner (per-query PREFILTER/COOPERATIVE/POSTFILTER
+#: dispatch) + the centroid scan is skipped when nothing consumes it.
+ENGINE_VERSION = "engine/2"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,16 +79,36 @@ class CompassParams:
     # arithmetic intensity of each visit batch; passrate adaptivity is
     # evaluated over the pooled beam neighborhood instead of per candidate)
     backend: str = "auto"  # "ref" | "pallas" | "auto" (pallas on TPU)
+    planner: bool = False  # cost-based per-query mode selection (DESIGN.md
+    # §Planner; requires index.astats — i.e. an index built by build_index)
+    prefilter_cap: int = 0  # max materialized run rows for PREFILTER;
+    # 0 => 8 * ef (the cost-model crossover, see planner/plan.py)
+    postfilter_min_sel: float = 0.9  # POSTFILTER eligible above this
+    # estimated selectivity ("selectivity ≈ 1": the filter is near-vacuous)
 
     def resolved(self) -> "CompassParams":
         ef_cap = self.ef_cap or 2 * self.ef + 32
         cand_cap = self.cand_cap or ef_cap + 64
         max_steps = self.max_steps or (4 * ef_cap + 8 * self.ef + 64)
-        return dataclasses.replace(self, ef_cap=ef_cap, cand_cap=cand_cap, max_steps=max_steps)
+        prefilter_cap = self.prefilter_cap or 8 * self.ef
+        return dataclasses.replace(
+            self,
+            ef_cap=ef_cap,
+            cand_cap=cand_cap,
+            max_steps=max_steps,
+            prefilter_cap=prefilter_cap,
+        )
 
 
 def _search_one(
-    index: CompassIndex, q, cdists, pred: P.Predicate, pm: CompassParams, backend: VisitBackend
+    index: CompassIndex,
+    q,
+    cdists,
+    pred: P.Predicate,
+    pm: CompassParams,
+    backend: VisitBackend,
+    needs_rank: bool = True,
+    plan: "qplan.PlannedBatch | None" = None,
 ) -> SearchResult:
     n = index.n_records
     nlist = index.nlist
@@ -93,9 +120,18 @@ def _search_one(
     # compass_search (outside the per-query vmap) so the pallas backend's
     # ivf_score kernel sees the full (B, C) blocked problem.
     rank = jnp.argsort(cdists).astype(jnp.int32)
+    mode = jnp.int32(qplan.COOPERATIVE) if plan is None else plan.mode
 
     zero = jnp.int32(0)
-    stats = SearchStats(zero, jnp.int32(nlist), zero, zero, jnp.int32(pm.efs0))
+    stats = SearchStats(
+        n_dist=zero,
+        n_cdist=jnp.int32(nlist if needs_rank else 0),
+        n_steps=zero,
+        n_bcalls=zero,
+        n_clusters_ranked=zero,
+        mode=mode,
+        efs_final=jnp.int32(pm.efs0),
+    )
     st = EngineState(
         cand=FixedQueue.full(pm.cand_cap, n),
         gtop=FixedQueue.full(pm.ef_cap, n),
@@ -106,15 +142,38 @@ def _search_one(
         rank_pos=jnp.int32(0),
         term_beg=jnp.zeros((T,), jnp.int32),
         term_end=jnp.zeros((T,), jnp.int32),
-        b_exhausted=jnp.asarray(not pm.use_btree),
+        # PREFILTER and POSTFILTER never pull B.NEXT: the former already
+        # holds the exact result, the latter is the graph-dominant plan.
+        b_exhausted=jnp.asarray(not pm.use_btree) | (mode != qplan.COOPERATIVE),
         returned=jnp.int32(0),
         stalled=jnp.asarray(False),
         last_sel=jnp.float32(1.0),
         stats=stats,
     )
+
+    if plan is not None:
+        # PREFILTER: the planner materialized + pre-scored every candidate
+        # run row (batched scan, hoisted out of the vmap); adopt the exact
+        # top-ef here and retire the query before the loop starts.
+        def run_prefilter(s: EngineState) -> EngineState:
+            safe = jnp.where(plan.mask, plan.ids, n).astype(jnp.int32)
+            visited = s.visited.at[safe].set(True)
+            res = s.res.merge(jnp.where(plan.passing, plan.dist, S.INF), safe)
+            stats2 = s.stats._replace(n_dist=s.stats.n_dist + jnp.sum(plan.mask))
+            return s._replace(
+                res=res,
+                visited=visited,
+                returned=jnp.int32(pm.ef),
+                stalled=jnp.asarray(True),
+                stats=stats2,
+            )
+
+        st = jax.lax.cond(mode == qplan.PREFILTER, run_prefilter, lambda s: s, st)
+
     if pm.use_graph:
         entries = graph_iter.seed_entries(index, rank, pm)
-        st = S.visit(index, q, pred, st, entries, jnp.ones(entries.shape, bool), pm, backend)
+        seed_mask = jnp.ones(entries.shape, bool) & (mode != qplan.PREFILTER)
+        st = S.visit(index, q, pred, st, entries, seed_mask, pm, backend)
 
     def cond(st: EngineState):
         return (
@@ -148,7 +207,8 @@ def _search_one(
         return st
 
     st = jax.lax.while_loop(cond, body, st)
-    return SearchResult(st.res.i[: pm.k], st.res.d[: pm.k], st.stats)
+    final_stats = st.stats._replace(n_clusters_ranked=st.rank_pos)
+    return SearchResult(st.res.i[: pm.k], st.res.d[: pm.k], final_stats)
 
 
 @functools.partial(jax.jit, static_argnames=("pm",))
@@ -158,8 +218,24 @@ def compass_search(
     """Batched filtered search. queries: (B, d); pred arrays: (B, T, A)."""
     pm = pm.resolved()
     backend = resolve_backend(pm.backend)
-    # One blocked (B, C) centroid scan for the whole batch (B.OPEN / G.OPEN).
-    cdists = backend.centroid_scores(index, queries, pm.metric)
+    # One blocked (B, C) centroid scan for the whole batch (B.OPEN / G.OPEN)
+    # — skipped entirely when nothing consumes the ranking (pure-graph
+    # ablations with non-adaptive entry), so SearchStats.n_cdist is the true
+    # count rather than an unconditional nlist.
+    needs_rank = pm.use_btree or (pm.use_graph and pm.adaptive_entry)
+    if needs_rank:
+        cdists = backend.centroid_scores(index, queries, pm.metric)
+    else:
+        cdists = jnp.zeros((queries.shape[0], index.nlist), jnp.float32)
+    if pm.planner:
+        planned = qplan.plan_batch(index, queries, pred, pm, backend)
+        return jax.vmap(
+            lambda q, cd, lo, hi, pl: _search_one(
+                index, q, cd, P.Predicate(lo, hi), pm, backend, needs_rank, pl
+            )
+        )(queries, cdists, pred.lo, pred.hi, planned)
     return jax.vmap(
-        lambda q, cd, lo, hi: _search_one(index, q, cd, P.Predicate(lo, hi), pm, backend)
+        lambda q, cd, lo, hi: _search_one(
+            index, q, cd, P.Predicate(lo, hi), pm, backend, needs_rank
+        )
     )(queries, cdists, pred.lo, pred.hi)

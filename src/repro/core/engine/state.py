@@ -76,9 +76,14 @@ def dedup_new(ids: jax.Array, mask: jax.Array) -> jax.Array:
 
 class SearchStats(NamedTuple):
     n_dist: jax.Array  # base-vector distance computations (paper #Comp)
-    n_cdist: jax.Array  # centroid distance computations
+    n_cdist: jax.Array  # centroid distance computations; 0 when the exact
+    # centroid ranking has no consumer (use_btree=False and non-adaptive
+    # entry) and the scan is skipped entirely
     n_steps: jax.Array  # loop iterations
     n_bcalls: jax.Array  # relational injections
+    n_clusters_ranked: jax.Array  # clusters actually opened by B.NEXT
+    mode: jax.Array  # planner execution mode (planner.plan.MODE_NAMES index);
+    # COOPERATIVE when the planner is off
     efs_final: jax.Array
 
 

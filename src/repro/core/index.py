@@ -31,6 +31,7 @@ import numpy as np
 from .clustered_attrs import ClusteredAttrs, build_clustered_attrs
 from .graph_build import GraphIndex, build_graph
 from .kmeans import kmeans
+from .planner.stats import AttrStats, build_attr_stats
 
 
 class CompassIndex(NamedTuple):
@@ -40,6 +41,10 @@ class CompassIndex(NamedTuple):
     centroids: jax.Array  # (nlist, d)
     medoids: jax.Array  # (nlist,) int32 — medoid record id per cluster
     cattrs: ClusteredAttrs
+    # per-cluster/per-attribute equi-depth histograms for the cost-based
+    # planner; None on indices built before the planner existed (the
+    # planner then refuses to run — CompassParams(planner=True) raises).
+    astats: AttrStats | None = None
 
     @property
     def n_records(self) -> int:
@@ -67,6 +72,8 @@ class BuildConfig:
     prune_alpha: float = 1.2
     metric: str = "l2"
     seed: int = 0
+    hist_bins: int = 64  # global equi-depth histogram bins per attribute
+    cluster_hist_bins: int = 8  # per-cluster equi-depth bins per attribute
 
 
 def build_index(vectors: np.ndarray, attrs: np.ndarray, cfg: BuildConfig = BuildConfig()) -> CompassIndex:
@@ -96,6 +103,9 @@ def build_index(vectors: np.ndarray, attrs: np.ndarray, cfg: BuildConfig = Build
         dd = x2[members] - 2.0 * xy if cfg.metric == "l2" else -xy
         medoids[c] = members[np.argmin(dd)]
     cattrs = build_clustered_attrs(attrs, assign, cfg.nlist)
+    astats = build_attr_stats(
+        attrs, assign, cfg.nlist, n_bins=cfg.hist_bins, n_cluster_bins=cfg.cluster_hist_bins
+    )
     # Sentinel padding rows. Attr sentinel = +inf fails every closed interval
     # whose hi is finite; predicates with hi = +inf (one-sided) are protected
     # by the validity masks in search, this is defence-in-depth.
@@ -108,4 +118,5 @@ def build_index(vectors: np.ndarray, attrs: np.ndarray, cfg: BuildConfig = Build
         jnp.asarray(centroids),
         jnp.asarray(medoids),
         cattrs,
+        astats,
     )

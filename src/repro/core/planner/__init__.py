@@ -1,0 +1,40 @@
+"""Cost-based query planner: attribute statistics, traceable selectivity
+estimation, and per-query execution-mode selection (DESIGN.md §Planner).
+
+  * :mod:`~repro.core.planner.stats`    — equi-depth histograms built at
+    index time (stored on :class:`~repro.core.index.CompassIndex`) plus
+    exact per-cluster run probes over the clustered sorted runs.
+  * :mod:`~repro.core.planner.estimate` — traceable DNF selectivity
+    estimation (independence-composed range masses).
+  * :mod:`~repro.core.planner.plan`     — the calibrated cost model and the
+    PREFILTER / COOPERATIVE / POSTFILTER decision + materialization that
+    the engine driver dispatches on.
+"""
+from .estimate import estimate_matches, estimate_selectivity_global
+from .plan import (
+    COOPERATIVE,
+    MODE_NAMES,
+    POSTFILTER,
+    PREFILTER,
+    PlannedBatch,
+    QueryPlan,
+    plan_batch,
+    plan_query,
+)
+from .stats import AttrStats, build_attr_stats, term_run_bounds
+
+__all__ = [
+    "COOPERATIVE",
+    "MODE_NAMES",
+    "POSTFILTER",
+    "PREFILTER",
+    "AttrStats",
+    "PlannedBatch",
+    "QueryPlan",
+    "build_attr_stats",
+    "estimate_matches",
+    "estimate_selectivity_global",
+    "plan_batch",
+    "plan_query",
+    "term_run_bounds",
+]

@@ -1,0 +1,79 @@
+"""Traceable DNF selectivity estimation over equi-depth histograms.
+
+Every function here is pure jnp over :class:`~repro.core.planner.stats.
+AttrStats` arrays — no host round-trip — so estimation composes into the
+jitted search (the planner runs per query *inside* ``compass_search``).
+
+Composition rules (classic System-R style, independence-bounded):
+
+* range mass per attribute: ``F(hi) - F(lo)`` where ``F`` is the
+  piecewise-linear CDF through the equi-depth edges;
+* conjunction (one DNF term): product over constrained attributes
+  (attribute independence);
+* disjunction (across terms): ``1 - prod_t (1 - sel_t)`` (term
+  independence) — exact for disjoint terms, an overestimate-bounded
+  approximation otherwise, never below ``max_t sel_t``.
+
+Both rules are monotone in every interval bound, so widening any range can
+only increase the estimate (property-tested in tests/test_planner.py).
+Unconstrained attributes carry ``[-FLT_MAX, FLT_MAX]`` bounds which clamp
+to mass 1.0, and the unsatisfiable pad terms the serving layer appends
+(``lo > hi``) clamp to mass 0.0 — padding never changes an estimate.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .stats import AttrStats
+
+
+def cdf(edges: jax.Array, x) -> jax.Array:
+    """P(attr <= x) from one attribute's equi-depth edges (traceable).
+
+    Piecewise-linear through the ``n_bins + 1`` quantile edges; clamps to
+    0 / 1 outside the observed range.
+    """
+    nb = edges.shape[-1] - 1
+    return jnp.interp(x, edges, jnp.linspace(0.0, 1.0, nb + 1))
+
+
+def interval_mass(edges: jax.Array, lo, hi) -> jax.Array:
+    """Estimated fraction of values in the closed interval [lo, hi]."""
+    return jnp.clip(cdf(edges, hi) - cdf(edges, lo), 0.0, 1.0)
+
+
+def term_selectivity(edges_set: jax.Array, lo_row: jax.Array, hi_row: jax.Array):
+    """One conjunctive term over one edge set (A, nb+1): prod of masses."""
+    per_attr = jax.vmap(interval_mass)(edges_set, lo_row, hi_row)  # (A,)
+    return jnp.prod(per_attr)
+
+
+def dnf_selectivity(edges_set: jax.Array, pred_lo: jax.Array, pred_hi: jax.Array):
+    """Full (T, A) DNF predicate over one edge set: independence union."""
+    sel_t = jax.vmap(lambda lo, hi: term_selectivity(edges_set, lo, hi))(
+        pred_lo, pred_hi
+    )  # (T,)
+    return 1.0 - jnp.prod(1.0 - sel_t)
+
+
+def estimate_matches(astats: AttrStats, pred_lo: jax.Array, pred_hi: jax.Array):
+    """Cluster-refined estimate of (match count, selectivity) for one query.
+
+    Evaluates the DNF against each cluster's local histograms and sums
+    ``n_c * sel_c`` — sharper than the global histogram whenever attribute
+    distributions differ across clusters (e.g. mode-correlated attrs).
+    Returns (est_matches () f32, est_sel () f32).
+    """
+    per_cluster = jax.vmap(lambda ce: dnf_selectivity(ce, pred_lo, pred_hi))(
+        astats.cluster_edges
+    )  # (nlist,)
+    total = jnp.sum(astats.cluster_counts)
+    est = jnp.sum(astats.cluster_counts * per_cluster)
+    return est, est / jnp.maximum(total, 1.0)
+
+
+def estimate_selectivity_global(astats: AttrStats, pred_lo, pred_hi):
+    """Selectivity from the global per-attribute histograms only (cheaper,
+    no per-cluster refinement) — used by tests and offline calibration."""
+    return dnf_selectivity(astats.edges, pred_lo, pred_hi)

@@ -1,0 +1,100 @@
+"""Attribute statistics for the cost-based query planner (DESIGN.md §Planner).
+
+Two complementary sources feed the planner, both derived from the same
+clustered layout the relational iterator already uses:
+
+* **Equi-depth histograms** — built host-side at index time and stored on
+  :class:`~repro.core.index.CompassIndex` as :class:`AttrStats`.  Per
+  attribute we keep quantile *edges*, globally (``edges``) and per cluster
+  (``cluster_edges``).  Equi-depth rather than equi-width because the
+  selectivity of a range predicate is then a CDF difference read off a
+  piecewise-linear interpolation with bounded error (≤ ~1/n_bins per
+  lookup) *regardless of value skew* — the classic DB-optimizer choice.
+  Histograms are tiny (``(nlist, A, n_cluster_bins+1)`` f32) and live on
+  device, so estimation is fully traceable inside the jitted search.
+
+* **Exact run probes** — :func:`term_run_bounds` runs vmapped fixed-depth
+  binary searches over the existing ``ClusteredAttrs`` sorted runs, giving
+  the *exact* per-cluster count of records matching each DNF term's chosen
+  attribute range.  ``sum(end - beg)`` upper-bounds (single-attribute
+  terms: equals) the true pass count, and the bounds double as the
+  PREFILTER mode's materialization cursors, so the probe cost is never
+  wasted.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..clustered_attrs import ClusteredAttrs, run_bounds_all_clusters
+
+
+class AttrStats(NamedTuple):
+    """Per-attribute equi-depth histogram edges, global and per-cluster.
+
+    Empty clusters get all-zero edges; their ``cluster_counts`` entry is 0
+    so they contribute nothing to any estimate.
+    """
+
+    edges: jax.Array  # (A, n_bins + 1) f32, ascending
+    cluster_edges: jax.Array  # (nlist, A, n_cluster_bins + 1) f32
+    cluster_counts: jax.Array  # (nlist,) f32 records per cluster
+
+    @property
+    def n_attrs(self) -> int:
+        return self.edges.shape[0]
+
+    @property
+    def n_clusters(self) -> int:
+        return self.cluster_edges.shape[0]
+
+
+def build_attr_stats(
+    attrs: np.ndarray,
+    assignments: np.ndarray,
+    nlist: int,
+    *,
+    n_bins: int = 64,
+    n_cluster_bins: int = 8,
+) -> AttrStats:
+    """Host-side build (index time): quantile edges per attr, per cluster."""
+    attrs = np.asarray(attrs, np.float32)
+    assignments = np.asarray(assignments, np.int64)
+    n, n_attrs = attrs.shape
+    qs_g = np.linspace(0.0, 1.0, n_bins + 1)
+    qs_c = np.linspace(0.0, 1.0, n_cluster_bins + 1)
+    edges = np.stack([np.quantile(attrs[:, a], qs_g) for a in range(n_attrs)]).astype(
+        np.float32
+    )
+    cluster_edges = np.zeros((nlist, n_attrs, n_cluster_bins + 1), np.float32)
+    counts = np.bincount(assignments, minlength=nlist).astype(np.float32)
+    for c in range(nlist):
+        members = attrs[assignments == c]
+        if members.shape[0] == 0:
+            continue
+        for a in range(n_attrs):
+            cluster_edges[c, a] = np.quantile(members[:, a], qs_c)
+    return AttrStats(
+        jnp.asarray(edges), jnp.asarray(cluster_edges), jnp.asarray(counts)
+    )
+
+
+def term_run_bounds(ca: ClusteredAttrs, pred_lo, pred_hi, chosen):
+    """Exact chosen-attr run bounds for every (term, cluster) pair.
+
+    pred_lo / pred_hi: (T, A) interval tensors; chosen: (T,) driving attr
+    per term (``predicate.chosen_attrs``).  Returns (beg, end), each
+    (T, nlist) int32 — the planner's exact probes and the PREFILTER
+    materialization cursors.  All inputs may be traced.
+    """
+    T = pred_lo.shape[0]
+
+    def one_term(t):
+        a = chosen[t]
+        return run_bounds_all_clusters(ca, a, pred_lo[t, a], pred_hi[t, a])
+
+    beg, end = jax.vmap(one_term)(jnp.arange(T))
+    return beg, end

@@ -97,3 +97,85 @@ def _filter_distance(vectors, attrs, idx, mask, q, lo, hi, *, interpret: bool):
         interpret=interpret,
     )(safe_idx, vectors, attrs, q[None, :], lo, hi)
     return dists, passed.astype(bool)
+
+
+# ---------------------------------------------------------------------------
+# Batched run-scan entry point — the planner's PREFILTER hot spot.
+# ---------------------------------------------------------------------------
+
+
+def _kernel_batch(idx_ref, vec_ref, attr_ref, q_ref, lo_ref, hi_ref, dist_ref, pass_ref, *, n):
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+    valid = idx_ref[b, i] < n  # sentinel row == masked-out slot
+    vec = vec_ref[0, :]  # (d,) gathered row (index-mapped via idx_ref)
+    q = q_ref[0, :]  # (d,) this lane's query
+    diff = (vec - q).astype(jnp.float32)
+    dist = jnp.sum(diff * diff)
+    attrs = attr_ref[0, :]  # (A,)
+    lo = lo_ref[0]  # (T, A) this lane's DNF bounds
+    hi = hi_ref[0]
+    term_ok = jnp.all((attrs[None, :] >= lo) & (attrs[None, :] <= hi), axis=1)
+    passed = jnp.any(term_ok)
+    dist_ref[0, 0] = jnp.where(valid, dist, jnp.inf)
+    pass_ref[0, 0] = jnp.where(valid, passed, False).astype(jnp.int32)
+
+
+def filter_distance_batch(
+    vectors: jax.Array,  # (N + 1, d) padded corpus (row N = sentinel)
+    attrs: jax.Array,  # (N + 1, A)
+    idx: jax.Array,  # (B, V) int32 candidate ids (may repeat / sentinel)
+    mask: jax.Array,  # (B, V) bool valid-slot mask
+    queries: jax.Array,  # (B, d) per-lane queries
+    lo: jax.Array,  # (B, T, A) per-lane DNF bounds
+    hi: jax.Array,  # (B, T, A)
+    *,
+    interpret: bool | None = None,
+):
+    """Batched variant of :func:`filter_distance` for the planner's
+    PREFILTER run scan: one blocked ``pallas_call`` over grid (B, V) for the
+    whole micro-batch instead of a vmapped per-query call.  The inner grid
+    dimension keeps the scalar-prefetched per-step row gather; the per-lane
+    query / bounds blocks only re-DMA when the outer (lane) index advances.
+
+    Returns (dists (B, V) f32, +inf where masked; passed (B, V) bool).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    return _filter_distance_batch(
+        vectors, attrs, idx, mask, queries, lo, hi, interpret=interpret
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _filter_distance_batch(vectors, attrs, idx, mask, queries, lo, hi, *, interpret: bool):
+    b, v = idx.shape
+    n = vectors.shape[0] - 1
+    d = vectors.shape[1]
+    a = attrs.shape[1]
+    t = lo.shape[1]
+    safe_idx = jnp.where(mask, jnp.clip(idx, 0, n), n).astype(jnp.int32)
+    dists, passed = pl.pallas_call(
+        functools.partial(_kernel_batch, n=n),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, v),
+            in_specs=[
+                pl.BlockSpec((1, d), lambda bi, i, idx_ref: (idx_ref[bi, i], 0)),
+                pl.BlockSpec((1, a), lambda bi, i, idx_ref: (idx_ref[bi, i], 0)),
+                pl.BlockSpec((1, d), lambda bi, i, idx_ref: (bi, 0)),
+                pl.BlockSpec((1, t, a), lambda bi, i, idx_ref: (bi, 0, 0)),
+                pl.BlockSpec((1, t, a), lambda bi, i, idx_ref: (bi, 0, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, 1), lambda bi, i, idx_ref: (bi, i)),
+                pl.BlockSpec((1, 1), lambda bi, i, idx_ref: (bi, i)),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((b, v), jnp.float32),
+            jax.ShapeDtypeStruct((b, v), jnp.int32),
+        ],
+        interpret=interpret,
+    )(safe_idx, vectors, attrs, queries, lo, hi)
+    return dists, passed.astype(bool)

@@ -14,6 +14,7 @@ from __future__ import annotations
 
 from . import ref
 from .filter_distance import filter_distance as _filter_distance_kernel
+from .filter_distance import filter_distance_batch as _filter_distance_batch_kernel
 from .flash_attention import flash_attention as _flash_kernel
 from .ivf_score import ivf_score as _ivf_kernel
 
@@ -22,6 +23,14 @@ def filter_distance(vectors, attrs, idx, mask, q, lo, hi, *, use_pallas: bool = 
     if not use_pallas:
         return ref.filter_distance_ref(vectors, attrs, idx, mask, q, lo, hi)
     return _filter_distance_kernel(vectors, attrs, idx, mask, q, lo, hi)
+
+
+def filter_distance_batch(
+    vectors, attrs, idx, mask, queries, lo, hi, *, use_pallas: bool = True
+):
+    if not use_pallas:
+        return ref.filter_distance_batch_ref(vectors, attrs, idx, mask, queries, lo, hi)
+    return _filter_distance_batch_kernel(vectors, attrs, idx, mask, queries, lo, hi)
 
 
 def ivf_score(queries, centroids, *, use_pallas: bool = True, **kw):

@@ -10,13 +10,23 @@ import jax.numpy as jnp
 def filter_distance_ref(vectors, attrs, idx, mask, q, lo, hi):
     n = vectors.shape[0] - 1
     safe = jnp.where(mask, jnp.clip(idx, 0, n), n)
+    # ids pointing at the sentinel row are masked-out visits even under a
+    # true mask — identical to the kernel's `idx < n` validity check
+    valid = mask & (safe < n)
     vec = vectors[safe]
     diff = (vec - q[None, :]).astype(jnp.float32)
     dist = jnp.sum(diff * diff, axis=-1)
     a = attrs[safe]
     term_ok = jnp.all((a[:, None, :] >= lo[None]) & (a[:, None, :] <= hi[None]), axis=-1)
-    passed = jnp.any(term_ok, axis=-1) & mask
-    return jnp.where(mask, dist, jnp.inf), passed
+    passed = jnp.any(term_ok, axis=-1) & valid
+    return jnp.where(valid, dist, jnp.inf), passed
+
+
+def filter_distance_batch_ref(vectors, attrs, idx, mask, queries, lo, hi):
+    """Batched (B, V) oracle: per-lane query/bounds, same row semantics."""
+    return jax.vmap(
+        lambda i, m, q, l, h: filter_distance_ref(vectors, attrs, i, m, q, l, h)
+    )(idx, mask, queries, lo, hi)
 
 
 def ivf_score_ref(queries, centroids):

@@ -48,6 +48,7 @@ import numpy as np
 
 from repro.core import predicate as P
 from repro.core.index import CompassIndex
+from repro.core.planner import plan as plan_mod
 from repro.core.search import CompassParams, compass_search
 
 
@@ -93,6 +94,11 @@ class BucketStats:
     n_cache_hits: int = 0
     total_wait_s: float = 0.0
     total_exec_s: float = 0.0
+    # planner execution modes chosen for real (non-filler) lanes; all
+    # cooperative when the planner is off (CompassParams.planner=False)
+    n_mode_prefilter: int = 0
+    n_mode_cooperative: int = 0
+    n_mode_postfilter: int = 0
 
 
 class SearchService:
@@ -262,6 +268,12 @@ class SearchService:
         st.n_full_flush += int(full)
         st.n_deadline_flush += int(not full)
         st.total_exec_s += exec_s
+        # planner-chosen execution mode per real lane (filler lanes are the
+        # service's padding, not traffic — excluded from the counters)
+        modes = np.asarray(res.stats.mode)[: len(jobs)]
+        st.n_mode_prefilter += int(np.sum(modes == plan_mod.PREFILTER))
+        st.n_mode_cooperative += int(np.sum(modes == plan_mod.COOPERATIVE))
+        st.n_mode_postfilter += int(np.sum(modes == plan_mod.POSTFILTER))
 
         ids = np.asarray(res.ids)
         dists = np.asarray(res.dists)
@@ -306,5 +318,11 @@ class SearchService:
             "n_batches": sum(s.n_batches for s in self._stats.values()),
             "n_fillers": sum(s.n_fillers for s in self._stats.values()),
             "mean_wait_s": wait / n_req if n_req else 0.0,
+            "planner": self.params.planner,
+            "modes": {
+                "prefilter": sum(s.n_mode_prefilter for s in self._stats.values()),
+                "cooperative": sum(s.n_mode_cooperative for s in self._stats.values()),
+                "postfilter": sum(s.n_mode_postfilter for s in self._stats.values()),
+            },
             "buckets": buckets,
         }

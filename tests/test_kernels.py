@@ -34,6 +34,28 @@ def test_filter_distance_matches_ref(n, d, a, t, v):
     np.testing.assert_array_equal(np.asarray(p_k), np.asarray(p_r))
 
 
+@pytest.mark.parametrize("b,n,d,a,t,v", [
+    (1, 50, 8, 2, 1, 16),
+    (4, 200, 32, 4, 4, 33),   # non-multiple V
+    (3, 100, 17, 3, 2, 8),    # odd dim
+])
+def test_filter_distance_batch_matches_ref(b, n, d, a, t, v):
+    """The planner's batched run-scan entry point: per-lane queries and
+    bounds, grid (B, V) — against the vmapped single-query oracle."""
+    rng = np.random.default_rng(1)
+    vectors, attrs = _mk_corpus(rng, n, d, a)
+    idx = jnp.asarray(rng.integers(0, n + 1, (b, v)).astype(np.int32))
+    mask = jnp.asarray(rng.uniform(size=(b, v)) > 0.3)
+    q = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    lo = jnp.asarray(rng.uniform(0, 0.5, (b, t, a)).astype(np.float32))
+    hi = jnp.asarray(rng.uniform(0.5, 1.0, (b, t, a)).astype(np.float32))
+    d_k, p_k = ops.filter_distance_batch(vectors, attrs, idx, mask, q, lo, hi)
+    d_r, p_r = ref.filter_distance_batch_ref(vectors, attrs, idx, mask, q, lo, hi)
+    assert d_k.shape == (b, v) and p_k.shape == (b, v)
+    np.testing.assert_allclose(np.asarray(d_k), np.asarray(d_r), rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(p_k), np.asarray(p_r))
+
+
 @pytest.mark.parametrize("b,c,d,dtype", [
     (4, 100, 32, jnp.float32),
     (3, 257, 48, jnp.float32),   # non-multiples of block

@@ -181,3 +181,32 @@ def test_unsatisfiable_request_returns_all_padding(built_index, corpus):
     r = svc.poll(rid)
     assert np.all(r.ids == x.shape[0])
     assert np.all(~np.isfinite(r.dists))
+
+
+def test_planner_modes_surface_in_bucket_stats(built_index, corpus):
+    """A planner-enabled service reports the execution mode the cost model
+    chose per real lane (fillers excluded), and responses still round-trip
+    bitwise against direct planner-enabled compass_search."""
+    _, _, queries = corpus
+    pm = CompassParams(k=10, ef=32, planner=True)
+    svc = SearchService(built_index, pm, batch_size=4, max_wait_s=0.0)
+    narrow = P.Pred.range(0, 0.40, 0.41)  # ~1% pass -> PREFILTER
+    vacuous = P.Pred.range(0, -10.0, 10.0)  # pass-all -> POSTFILTER
+    moderate = P.Pred.and_(P.Pred.range(0, 0.1, 0.5), P.Pred.range(1, 0.2, 0.7))
+    jobs = {
+        svc.submit(queries[i], tree): tree
+        for i, tree in enumerate([narrow, vacuous, moderate, narrow, vacuous])
+    }
+    results = {r.rid: r for r in svc.run_until_idle()}
+    stats = svc.stats()
+    assert stats["planner"] is True
+    assert stats["modes"]["prefilter"] >= 2
+    assert stats["modes"]["postfilter"] >= 2
+    assert sum(stats["modes"].values()) == len(jobs)  # fillers not counted
+    for rid, tree in jobs.items():
+        direct = _direct(built_index, queries[rid], tree, pm)
+        np.testing.assert_array_equal(results[rid].ids, np.asarray(direct.ids)[0])
+        np.testing.assert_array_equal(
+            results[rid].dists.view(np.uint32),
+            np.asarray(direct.dists)[0].view(np.uint32),
+        )
