@@ -1,0 +1,197 @@
+"""Sustained mixed upsert/delete/search workload over the mutable index.
+
+The serving question behind core/mutable: what does absorbing writes cost,
+and what does it buy over the build-once alternative?  The bench interleaves
+write bursts (60% new upserts / 20% re-upserts / 20% deletes) with timed
+search batches across ``ROUNDS`` rounds, sized so the delta segment
+overflows and triggers online compaction mid-run, then reports
+
+  * steady-state search QPS during churn (per workload: a moderate
+    conjunction and a ≤1% "narrow" predicate, planner on),
+  * final recall vs exact brute force over the materialized table, next to
+    a fresh ``build_index`` over the same table searched identically
+    (recall-vs-fresh-rebuild: the delta/tombstone machinery should cost
+    nothing),
+  * sustained write throughput (compaction pauses *included*) and the
+    compaction pause profile,
+  * the rebuild-per-write strawman: a build-once index absorbs a write
+    only by rebuilding, so its write "QPS" is 1/build_time — the
+    ``speedup_vs_rebuild_per_write`` figure is the point of the subsystem.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.baselines import brute_force, recall
+from repro.core.index import BuildConfig, build_index
+from repro.core.mutable import MutableIndex
+from repro.core.search import CompassParams, compass_search
+
+from . import common as C
+
+ROUNDS = int(os.environ.get("REPRO_BENCH_UPDATE_ROUNDS", 6))
+DELTA_CAP = int(os.environ.get("REPRO_BENCH_DELTA_CAP", 192))
+REPS = 3  # timed search repetitions per round per workload
+EF = 64
+
+# per-workload (n_terms, per-attr passrate, overall passrate, disjunction)
+WORKLOADS = {
+    "conj": (2, 0.45, 0.2, False),
+    "narrow": (1, 0.01, 0.01, False),
+    "disj": (4, 0.05, 0.19, True),
+}
+
+
+def _recall_gids(res_ids, truth, table_gids, n_table) -> float:
+    """Recall of gid-valued results against positional brute-force truth."""
+    tids = np.asarray(truth.ids)
+    tg = np.where(
+        np.isfinite(np.asarray(truth.dists)) & (tids < n_table),
+        table_gids[np.clip(tids, 0, n_table - 1)],
+        -1,
+    )
+    big = int(max(table_gids.max(), np.asarray(res_ids).max()) + 1)
+    return recall(np.asarray(res_ids), np.where(tg >= 0, tg, big), np.asarray(truth.dists), big)
+
+
+def run(dataset: str = "SYN-EASY", out=print):
+    x, attrs, queries = C.get_dataset(dataset)
+    qj = jnp.asarray(queries)
+    rng = np.random.default_rng(0)
+    cfg = BuildConfig(m=16, nlist=128)
+    t0 = time.time()
+    mi = MutableIndex.build(x, attrs, cfg, delta_cap=DELTA_CAP)
+    build_s = time.time() - t0
+    pm = CompassParams(k=C.K, ef=EF, planner=True, backend=C.BACKEND)
+    preds = {
+        name: C.make_workload(rng, C.N_QUERIES, per_attr, n_terms, disj)
+        for name, (n_terms, per_attr, _, disj) in WORKLOADS.items()
+    }
+    out(
+        f"# updates bench dataset={dataset} n={C.N} delta_cap={DELTA_CAP} "
+        f"rounds={ROUNDS} writes/round={DELTA_CAP // 2} build={build_s:.1f}s"
+    )
+
+    live = list(range(C.N))
+    next_gid = C.N
+    write_wall = 0.0
+    n_writes = 0
+    search_wall = {w: 0.0 for w in WORKLOADS}
+    search_q = {w: 0 for w in WORKLOADS}
+    for _ in range(ROUNDS):
+        t0 = time.time()
+        for _ in range(DELTA_CAP // 2):
+            u = rng.random()
+            if u < 0.6 or not live:
+                gid = next_gid
+                next_gid += 1
+                live.append(gid)
+                mi.upsert(gid, rng.normal(size=C.D).astype(np.float32),
+                          rng.uniform(size=C.N_ATTRS).astype(np.float32))
+            elif u < 0.8:
+                gid = live[rng.integers(len(live))]
+                mi.upsert(gid, rng.normal(size=C.D).astype(np.float32),
+                          rng.uniform(size=C.N_ATTRS).astype(np.float32))
+            else:
+                gid = live.pop(int(rng.integers(len(live))))
+                mi.delete(gid)
+            n_writes += 1
+        write_wall += time.time() - t0
+        for name, pred in preds.items():
+            mi.search(qj, pred, pm).ids.block_until_ready()  # warmup/compile
+            t0 = time.time()
+            for _ in range(REPS):
+                res = mi.search(qj, pred, pm)
+                res.ids.block_until_ready()
+            search_wall[name] += time.time() - t0
+            search_q[name] += REPS * C.N_QUERIES
+
+    # final-state evaluation: exact truth over the materialized table, and a
+    # fresh rebuild over the very same table as the recall reference point
+    vec, att, gids = mi.materialize()
+    n_table = vec.shape[0]
+    t0 = time.time()
+    fresh = build_index(vec, att, cfg)
+    rebuild_s = time.time() - t0
+    rows = []
+    out("workload,passrate,mutable_qps,mutable_recall,rebuild_recall")
+    for name, (_, _, passrate, _) in WORKLOADS.items():
+        pred = preds[name]
+        truth = brute_force(jnp.asarray(vec), jnp.asarray(att), qj, pred, C.K)
+        res_m = mi.search(qj, pred, pm)
+        r_mut = _recall_gids(res_m.ids, truth, gids, n_table)
+        compass_search(fresh, qj, pred, pm).ids.block_until_ready()  # warmup
+        t0 = time.time()
+        res_f = compass_search(fresh, qj, pred, pm)
+        res_f.ids.block_until_ready()
+        fresh_wall = time.time() - t0
+        r_fresh = _recall_gids(
+            np.where(np.asarray(res_f.ids) < n_table,
+                     gids[np.clip(np.asarray(res_f.ids), 0, n_table - 1)], -1),
+            truth, gids, n_table,
+        )
+        qps_mut = search_q[name] / search_wall[name] if search_wall[name] else 0.0
+        rows.append(
+            {
+                "phase": "search_churn",
+                "workload": name,
+                "passrate": passrate,
+                "method": "mutable",
+                "ef": EF,
+                "qps": qps_mut,
+                "recall": r_mut,
+                "recall_fresh_rebuild": r_fresh,
+                "n_dist": float(np.asarray(res_m.stats.n_dist).mean()),
+            }
+        )
+        rows.append(
+            {
+                "phase": "search_fresh",
+                "workload": name,
+                "passrate": passrate,
+                "method": "rebuild",
+                "ef": EF,
+                "qps": C.N_QUERIES / fresh_wall if fresh_wall else 0.0,
+                "recall": r_fresh,
+            }
+        )
+        out(f"{name},{passrate},{qps_mut:.1f},{r_mut:.4f},{r_fresh:.4f}")
+
+    pauses = mi.compaction_log
+    write_qps = n_writes / write_wall if write_wall else 0.0
+    rebuild_per_write_qps = 1.0 / rebuild_s if rebuild_s else 0.0
+    speedup = write_qps / rebuild_per_write_qps if rebuild_per_write_qps else 0.0
+    rows.append(
+        {
+            "phase": "writes",
+            "method": "mutable_write",
+            "qps": write_qps,
+            "n_writes": n_writes,
+            "compaction_count": len(pauses),
+            "compaction_mean_s": float(np.mean(pauses)) if pauses else 0.0,
+            "compaction_max_s": float(np.max(pauses)) if pauses else 0.0,
+            "rebuild_s": rebuild_s,
+            "rebuild_per_write_qps": rebuild_per_write_qps,
+            "speedup_vs_rebuild_per_write": speedup,
+            "final_epoch": mi.epoch,
+            "n_live": mi.n_live,
+        }
+    )
+    out(
+        f"writes: {write_qps:.0f}/s sustained ({len(pauses)} compactions, "
+        f"max pause {max(pauses) if pauses else 0:.2f}s) vs rebuild-per-write "
+        f"{rebuild_per_write_qps:.3f}/s -> {speedup:.0f}x"
+    )
+    return rows
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

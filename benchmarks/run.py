@@ -7,6 +7,7 @@
   bench_ablation      -> Fig. 11
   bench_serving       -> serving-layer QPS/latency/compile counts (ours)
   bench_planner       -> planner selectivity sweep: mode/QPS/recall (ours)
+  bench_updates       -> mutable-index churn: QPS/recall/compaction (ours)
 
 ``python -m benchmarks.run [--only name] [--quick] [--json-dir DIR]``
 
@@ -33,6 +34,7 @@ ALL = (
     "bench_ablation",
     "bench_serving",
     "bench_planner",
+    "bench_updates",
 )
 
 

@@ -23,6 +23,9 @@ META_REQUIRED = ("engine_version", "backend", "platform", "jax_version", "n")
 # listed — their shape is covered by the envelope check alone).
 ROW_REQUIRED = {
     "bench_planner": ("workload", "passrate", "mode_counts", "planner", "cooperative"),
+    # every updates row carries a phase + a qps figure; search rows add
+    # workload/recall, the writes row adds the compaction profile
+    "bench_updates": ("phase", "qps"),
 }
 
 

@@ -1,5 +1,6 @@
 """Quickstart: build a Compass index, run general filtered queries, compare
-against exact brute force.
+against exact brute force — then mutate it: upsert/delete/search round-trip
+through the mutable-index subsystem (core/mutable).
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,6 +12,7 @@ import numpy as np
 from repro.core import predicate as P
 from repro.core.baselines import brute_force, recall
 from repro.core.index import BuildConfig, build_index
+from repro.core.mutable import MutableIndex
 from repro.core.search import CompassParams, compass_search
 from repro.data.synthetic import make_vector_corpus
 
@@ -44,6 +46,23 @@ def main():
           f"({100*nd/n:.2f}% of corpus)  wall={dt:.2f}s (incl. compile)")
     print("top-1 ids:", np.asarray(res.ids)[:8, 0].tolist())
     assert r > 0.85
+
+    # -- writes: wrap the same index in the mutable subsystem ---------------
+    # (delta segment + tombstones; search fans out over base+delta and
+    # results are global ids, stable across compactions)
+    mut = MutableIndex(index, delta_cap=128)
+    pm = CompassParams(k=10, ef=96)
+    q0 = queries[:1]
+    hit_id = 10_000_000  # fresh id, vector right at the query, passing attrs
+    mut.upsert(hit_id, q0[0], np.float32([0.3, 0.9, 0.95, 0.5]))
+    res2 = mut.search(jnp.asarray(q0), P.stack_predicates([tree.tensor(a)]), pm)
+    ids2 = np.asarray(res2.ids)[0]
+    print(f"after upsert: top-1 id={ids2[0]} (expected {hit_id}, epoch {mut.epoch})")
+    assert ids2[0] == hit_id
+    mut.delete(hit_id)
+    res3 = mut.search(jnp.asarray(q0), P.stack_predicates([tree.tensor(a)]), pm)
+    assert hit_id not in np.asarray(res3.ids)[0]
+    print("after delete: id gone; upsert -> search -> delete round-trip OK")
 
 
 if __name__ == "__main__":

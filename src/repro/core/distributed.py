@@ -20,6 +20,7 @@ and by examples) and the abstract 512-way dry-run used by launch/dryrun.py.
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple
 
 import jax
@@ -152,6 +153,132 @@ def make_distributed_search(mesh, pm: CompassParams):
         return fn(s_index, queries, pred.lo, pred.hi)
 
     return search
+
+
+# ---------------------------------------------------------------------------
+# Mutable sharded index: per-shard deltas + independent compaction
+# ---------------------------------------------------------------------------
+
+
+class DistributedMutableIndex:
+    """Sharded mutable index: every shard owns a full write path.
+
+    Each shard is a :class:`~repro.core.mutable.MutableIndex` — its own
+    immutable base, tombstone bitmap and delta segment — so writes stay
+    local to the owning shard and compaction runs *independently per
+    shard*: one shard folding its delta never pauses the others (the
+    epoch-swap argument of DESIGN.md §Mutability, shard-wise).  Routing:
+    a record's owner is wherever it already lives (tracked host-side);
+    brand-new ids land on ``gid % n_shards``.
+
+    Search fans out the same query batch to every shard's base+delta
+    merged search and takes a global top-k over the per-shard results —
+    the same scatter-gather as ``make_distributed_search``, but over
+    *global ids*, which are location-independent, so no shard-arithmetic
+    id translation is needed.  Per-shard results are (B, k) arrays, so the
+    merge term stays negligible exactly as in the immutable path.
+    """
+
+    def __init__(self, shards: list):
+        if not shards:
+            raise ValueError("need at least one shard")
+        self.shards = list(shards)
+        self._owner: dict[int, int] = {}
+        for s, sh in enumerate(self.shards):
+            for g in sh.gids:
+                self._owner[int(g)] = s
+
+    @classmethod
+    def build(
+        cls,
+        vectors: np.ndarray,
+        attrs: np.ndarray,
+        n_shards: int,
+        cfg: BuildConfig = BuildConfig(),
+        *,
+        delta_cap: int = 256,
+        auto_compact: bool = True,
+    ) -> "DistributedMutableIndex":
+        """Contiguous split (like build_sharded_index) with global-position
+        gids, one independently-built mutable shard per split."""
+        from .mutable import MutableIndex
+
+        n = vectors.shape[0]
+        per = n // n_shards
+        shards = []
+        for s in range(n_shards):
+            sl = slice(s * per, (s + 1) * per if s < n_shards - 1 else n)
+            shards.append(
+                MutableIndex.build(
+                    vectors[sl],
+                    attrs[sl],
+                    cfg,
+                    delta_cap=delta_cap,
+                    auto_compact=auto_compact,
+                    gids=np.arange(sl.start, sl.stop, dtype=np.int64),
+                )
+            )
+        return cls(shards)
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def epochs(self) -> tuple[int, ...]:
+        return tuple(sh.epoch for sh in self.shards)
+
+    @property
+    def n_live(self) -> int:
+        return sum(sh.n_live for sh in self.shards)
+
+    def _route(self, gid: int) -> int:
+        return self._owner.get(gid, gid % self.n_shards)
+
+    def upsert(self, gids, vectors, attrs) -> None:
+        gids = np.atleast_1d(np.asarray(gids, np.int64))
+        vectors = np.asarray(vectors, np.float32).reshape(len(gids), -1)
+        attrs = np.asarray(attrs, np.float32).reshape(len(gids), -1)
+        for g, v, a in zip(gids, vectors, attrs):
+            s = self._route(int(g))
+            self.shards[s].upsert(g, v, a)
+            self._owner[int(g)] = s
+
+    def delete(self, gids) -> None:
+        for g in np.atleast_1d(np.asarray(gids, np.int64)):
+            g = int(g)
+            s = self._owner.get(g)
+            if s is None:
+                raise KeyError(f"unknown id {g}")
+            self.shards[s].delete(g)
+            del self._owner[g]
+
+    def compact(self) -> None:
+        for sh in self.shards:
+            sh.compact()
+
+    def search(self, queries, pred: PR.Predicate, pm: CompassParams):
+        """Scatter-gather over all shards; global top-k merge on gids.
+
+        Work counters in the returned stats are summed across shards;
+        ``n_steps`` is the max (shards run concurrently in a real
+        deployment) and ``mode``/``efs_final`` are per-shard quantities
+        reported from shard 0.
+        """
+        parts = [sh.search(queries, pred, pm) for sh in self.shards]
+        all_d = jnp.concatenate([p.dists for p in parts], axis=1)
+        all_g = jnp.concatenate([p.ids for p in parts], axis=1)
+        neg, sel = jax.lax.top_k(-all_d, pm.k)
+        stats = parts[0].stats._replace(
+            n_dist=sum(p.stats.n_dist for p in parts),
+            n_cdist=sum(p.stats.n_cdist for p in parts),
+            n_bcalls=sum(p.stats.n_bcalls for p in parts),
+            n_clusters_ranked=sum(p.stats.n_clusters_ranked for p in parts),
+            n_steps=functools.reduce(jnp.maximum, [p.stats.n_steps for p in parts]),
+        )
+        from .engine.state import SearchResult
+
+        return SearchResult(jnp.take_along_axis(all_g, sel, axis=1), -neg, stats)
 
 
 # ---------------------------------------------------------------------------

@@ -51,7 +51,10 @@ if TYPE_CHECKING:  # runtime import would cycle (index -> planner -> engine)
 #: move benchmark trajectories (recorded in BENCH_*.json by benchmarks/).
 #: engine/2: cost-based planner (per-query PREFILTER/COOPERATIVE/POSTFILTER
 #: dispatch) + the centroid scan is skipped when nothing consumes it.
-ENGINE_VERSION = "engine/2"
+#: engine/3: mutable-index tombstone masking — dead records keep routing in
+#: the visit loop but are ANDed out of the result queue and the PREFILTER
+#: adoption (no-op for immutable indices: index.live is None).
+ENGINE_VERSION = "engine/3"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -158,7 +161,10 @@ def _search_one(
         def run_prefilter(s: EngineState) -> EngineState:
             safe = jnp.where(plan.mask, plan.ids, n).astype(jnp.int32)
             visited = s.visited.at[safe].set(True)
-            res = s.res.merge(jnp.where(plan.passing, plan.dist, S.INF), safe)
+            passing = plan.passing
+            if index.live is not None:  # tombstoned rows stay out of results
+                passing = passing & index.live[safe]
+            res = s.res.merge(jnp.where(passing, plan.dist, S.INF), safe)
             stats2 = s.stats._replace(n_dist=s.stats.n_dist + jnp.sum(plan.mask))
             return s._replace(
                 res=res,

@@ -130,6 +130,12 @@ def visit(index, q, pred, st: EngineState, ids, mask, pm, backend) -> EngineStat
     visited = st.visited.at[safe].set(True)  # sentinel slot absorbs masked
     cand = st.cand.merge(dist, safe)
     gtop = st.gtop.merge(dist, safe)
+    # Tombstones (mutable index): a dead record keeps routing — it stays in
+    # cand/gtop so traversal flows through it — but never surfaces as a
+    # result.  `index.live is None` is a trace-time branch (pytree treedef),
+    # so the immutable path compiles without the gather.
+    if index.live is not None:
+        passing = passing & index.live[safe]
     res = st.res.merge(jnp.where(passing, dist, INF), safe)
     n_dist = st.stats.n_dist + jnp.sum(mask)
     return st._replace(

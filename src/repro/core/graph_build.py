@@ -280,6 +280,131 @@ def _repair_connectivity(neighbors: np.ndarray, x: np.ndarray, entry: int, metri
     return out
 
 
+# ---------------------------------------------------------------------------
+# Local maintenance (mutable-index compaction, core/mutable/compact.py):
+# batch node removal + batch local insertion.  HNSW gets incremental
+# maintenance from insertion-time search; a batch-built flat graph gets it
+# from these two host-side primitives plus the same connectivity repair the
+# initial build runs.
+# ---------------------------------------------------------------------------
+
+
+def remove_nodes(neighbors: np.ndarray, keep: np.ndarray) -> np.ndarray:
+    """Drop the nodes where ``keep`` is False and reindex the survivors.
+
+    neighbors: (N, M) int32 with sentinel == N.  Returns (N_keep, M) with
+    sentinel == N_keep; edges into removed nodes are dropped and each row's
+    surviving edges are compacted to the left (the iterators treat the
+    first sentinel as end-of-row only implicitly, but compaction keeps the
+    rows dense for the insertion step's reverse-edge scan).
+    """
+    n, m = neighbors.shape
+    keep = np.asarray(keep, bool)
+    kept_pos = np.where(keep)[0]
+    n_keep = kept_pos.size
+    new_id = np.full((n + 1,), n_keep, np.int64)  # removed & sentinel -> sentinel
+    new_id[kept_pos] = np.arange(n_keep)
+    nb = neighbors[kept_pos].astype(np.int64)
+    mapped = new_id[np.clip(nb, 0, n)]
+    out = np.full((n_keep, m), n_keep, np.int32)
+    rows, cols = np.nonzero(mapped < n_keep)
+    if rows.size:
+        first = np.r_[True, rows[1:] != rows[:-1]]
+        idx = np.arange(rows.size)
+        start = np.maximum.accumulate(np.where(first, idx, 0))
+        out[rows, idx - start] = mapped[rows, cols]
+    return out
+
+
+def _occlusion_prune_host(d_node: np.ndarray, cand: np.ndarray, x: np.ndarray, m: int, alpha: float, metric: str) -> np.ndarray:
+    """Greedy occlusion prune of one candidate list (ascending by d_node);
+    host-side counterpart of `_robust_prune` for small insertion batches."""
+    order = np.argsort(d_node, kind="stable")
+    kept: list[int] = []
+    for j in order:
+        if len(kept) >= m or not np.isfinite(d_node[j]):
+            break
+        c = x[cand[j]]
+        if kept:
+            kx = x[cand[kept]]
+            if metric == "l2":
+                d_ck = ((kx - c) ** 2).sum(1)
+            else:
+                d_ck = -(kx @ c)
+            if np.any(alpha * d_ck < d_node[j]):
+                continue
+        kept.append(int(j))
+    return cand[kept]
+
+
+def insert_nodes(
+    neighbors: np.ndarray,
+    x: np.ndarray,
+    n_old: int,
+    assign: np.ndarray,
+    centroids: np.ndarray,
+    m: int,
+    *,
+    alpha: float = 1.2,
+    link: int = 4,
+    metric: str = "l2",
+) -> np.ndarray:
+    """Insert nodes ``n_old..n-1`` of ``x`` into an existing graph.
+
+    neighbors: (n_old, M) with sentinel == n_old.  Returns (n, M) with
+    sentinel == n.  Mirrors HNSW insertion locally: each new node draws its
+    candidate pool from the ``link`` clusters nearest its own (by centroid
+    distance), keeps an occlusion-pruned top-``m``, and pushes reverse
+    edges, evicting the farthest edge of a full row.  Connectivity repair
+    (and entry choice) is the caller's job — compaction runs
+    ``_repair_connectivity`` once over the folded graph.
+    """
+    x = np.asarray(x, np.float32)
+    n = x.shape[0]
+    new_ids = np.arange(n_old, n)
+    out = np.full((n, m), n, np.int32)
+    old = neighbors.astype(np.int64)
+    out[:n_old] = np.where(old >= n_old, n, old).astype(np.int32)
+    if new_ids.size == 0:
+        return out
+    kc = centroids.shape[0]
+    link = min(link, kc)
+    cdist = np.asarray(pairwise(jnp.asarray(centroids), jnp.asarray(centroids), metric))
+    near_clusters = np.argsort(cdist, axis=1)[:, :link]  # (kc, link)
+    members = [np.where(assign == c)[0] for c in range(kc)]
+    x2 = (x * x).sum(1)
+    deg = (out < n).sum(1)
+    for i in new_ids:
+        pool = np.concatenate([members[cc] for cc in near_clusters[assign[i]]])
+        pool = pool[pool != i]
+        if pool.size == 0:  # degenerate corpus: leave isolated, repair bridges
+            continue
+        xy = x[pool] @ x[i]
+        d = x2[pool] - 2.0 * xy + x2[i] if metric == "l2" else -xy
+        chosen = _occlusion_prune_host(d, pool, x, m, alpha, metric)
+        out[i, : chosen.size] = chosen
+        deg[i] = chosen.size
+        # reverse edges: append while the row has room, else evict the
+        # farthest edge if the new one is closer (plain distance eviction;
+        # occlusion re-pruning on every reverse edge is not worth the host
+        # cost at delta scale)
+        for j in chosen:
+            if deg[j] < m:
+                out[j, deg[j]] = i
+                deg[j] += 1
+                continue
+            row = out[j]
+            rv = x[row] - x[j]
+            d_row = (rv * rv).sum(1) if metric == "l2" else -(x[row] @ x[j])
+            w = int(np.argmax(d_row))
+            d_new = (
+                float(((x[i] - x[j]) ** 2).sum()) if metric == "l2" else float(-(x[i] @ x[j]))
+            )
+            if d_new < d_row[w]:
+                out[j, w] = i
+    return out
+
+
 def build_graph(
     vectors: np.ndarray,
     m: int = 16,

@@ -45,6 +45,13 @@ class CompassIndex(NamedTuple):
     # planner; None on indices built before the planner existed (the
     # planner then refuses to run — CompassParams(planner=True) raises).
     astats: AttrStats | None = None
+    # tombstone mask for the mutable-index subsystem (core/mutable): (N + 1,)
+    # bool, False == deleted/superseded.  A dead record stays in the graph
+    # and the sorted runs as a routing node — traversal still flows through
+    # it — but the engine never admits it to the filtered result queue
+    # (state.visit / the PREFILTER adoption both AND with this mask).  None
+    # on a plain immutable index: zero cost until mutability is in play.
+    live: jax.Array | None = None
 
     @property
     def n_records(self) -> int:
@@ -76,6 +83,39 @@ class BuildConfig:
     cluster_hist_bins: int = 8  # per-cluster equi-depth bins per attribute
 
 
+def cluster_medoids(
+    vectors: np.ndarray,
+    assign: np.ndarray,
+    centroids: np.ndarray,
+    fallback: int,
+    metric: str = "l2",
+) -> np.ndarray:
+    """Per-cluster medoid (member closest to its centroid), computed as one
+    segmented argmin instead of an O(nlist) host loop: every record scores
+    against its *own* centroid (one gather + row-wise reduction), then a
+    single ``lexsort`` by (cluster, distance) makes each cluster's first row
+    its medoid.  Compaction re-derives medoids on every delta fold, so this
+    is on the write path, not just index build.
+
+    Empty clusters get ``fallback`` (the graph entry point).
+    """
+    vectors = np.asarray(vectors, np.float32)
+    assign = np.asarray(assign, np.int64)
+    nlist = centroids.shape[0]
+    own = centroids[assign]  # (n, d) each record's centroid
+    xy = np.einsum("nd,nd->n", vectors, own)
+    if metric == "l2":
+        d = np.einsum("nd,nd->n", vectors, vectors) - 2.0 * xy
+    else:
+        d = -xy
+    perm = np.lexsort((d, assign))  # primary: cluster, secondary: distance
+    a_sorted = assign[perm]
+    first = np.r_[True, a_sorted[1:] != a_sorted[:-1]]
+    medoids = np.full((nlist,), fallback, np.int32)
+    medoids[a_sorted[first]] = perm[first]
+    return medoids
+
+
 def build_index(vectors: np.ndarray, attrs: np.ndarray, cfg: BuildConfig = BuildConfig()) -> CompassIndex:
     vectors = np.asarray(vectors, np.float32)
     attrs = np.asarray(attrs, np.float32)
@@ -91,17 +131,7 @@ def build_index(vectors: np.ndarray, attrs: np.ndarray, cfg: BuildConfig = Build
     km = kmeans(jnp.asarray(vectors), cfg.nlist, iters=cfg.kmeans_iters, seed=cfg.seed, metric=cfg.metric)
     centroids = np.asarray(km.centroids)
     assign = np.asarray(km.assignments)
-    # per-cluster medoid: member closest to the centroid
-    medoids = np.zeros((cfg.nlist,), np.int32)
-    x2 = (vectors * vectors).sum(1)
-    for c in range(cfg.nlist):
-        members = np.where(assign == c)[0]
-        if members.size == 0:
-            medoids[c] = graph.entry
-            continue
-        xy = vectors[members] @ centroids[c]
-        dd = x2[members] - 2.0 * xy if cfg.metric == "l2" else -xy
-        medoids[c] = members[np.argmin(dd)]
+    medoids = cluster_medoids(vectors, assign, centroids, int(graph.entry), cfg.metric)
     cattrs = build_clustered_attrs(attrs, assign, cfg.nlist)
     astats = build_attr_stats(
         attrs, assign, cfg.nlist, n_bins=cfg.hist_bins, n_cluster_bins=cfg.cluster_hist_bins

@@ -1,0 +1,20 @@
+"""Mutable index subsystem: delta segments, tombstones, online compaction.
+
+Public surface:
+
+  * :class:`MutableIndex` — upsert / delete / search / compact over a base
+    :class:`~repro.core.index.CompassIndex`.
+  * :func:`mutable_search` — the jitted base+delta fan-out search.
+  * :class:`Snapshot` / :class:`DeltaView` — the epoch-swapped read state.
+"""
+from .delta import DeltaView, delta_topk
+from .mutable_index import GID_SENTINEL, MutableIndex, Snapshot, mutable_search
+
+__all__ = [
+    "DeltaView",
+    "GID_SENTINEL",
+    "MutableIndex",
+    "Snapshot",
+    "delta_topk",
+    "mutable_search",
+]

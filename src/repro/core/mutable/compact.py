@@ -1,0 +1,113 @@
+"""Compaction: fold the delta segment into a fresh immutable base.
+
+This is the LSM merge step, built from *local* maintenance of each index
+component rather than a from-scratch ``build_index``:
+
+  * **rows** — tombstoned base rows drop out, delta rows append; the
+    canonical row order (surviving base order, then delta slot order) keeps
+    folds deterministic.
+  * **clusters** — centroids are kept fixed across folds (recomputing
+    k-means would invalidate every cached cluster-locality property at
+    once); new rows take nearest-centroid assignments, and the medoids are
+    re-derived with the segmented-argmin ``cluster_medoids`` since cluster
+    membership changed.  Centroid drift under heavy churn is bounded by the
+    delta size per fold; the trigger policy is documented in DESIGN.md
+    §Mutability.
+  * **clustered B+-trees** — per-cluster re-sorts: ``build_clustered_attrs``
+    over the folded table (the maintenance operation clustered_attrs.py
+    always advertised).
+  * **graph** — ``remove_nodes`` drops tombstoned routing nodes and
+    reindexes, ``insert_nodes`` runs HNSW-style local insertion for the
+    delta rows (candidates from the nearest clusters, occlusion-pruned,
+    reverse edges), and ``_repair_connectivity`` re-establishes directed
+    reachability from the recomputed entry, exactly as the initial build
+    does.
+  * **planner stats** — ``build_attr_stats`` refresh, so PREFILTER /
+    POSTFILTER selection keeps seeing the true value distribution.
+
+The fold is pure: it returns a brand-new :class:`CompassIndex` (live mask
+``None`` — nothing is tombstoned in a fresh base) plus the row->cluster
+assignments; the caller (``MutableIndex.compact``) swaps it in under a new
+epoch.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from ..clustered_attrs import build_clustered_attrs
+from ..graph_build import GraphIndex, _repair_connectivity, insert_nodes, remove_nodes
+from ..index import BuildConfig, CompassIndex, cluster_medoids
+from ..planner.stats import build_attr_stats
+
+
+def assign_to_centroids(vectors: np.ndarray, centroids: np.ndarray, metric: str = "l2") -> np.ndarray:
+    """Nearest-centroid cluster assignment for a batch of new rows."""
+    xy = vectors @ centroids.T  # (n, nlist)
+    if metric == "l2":
+        d = (centroids * centroids).sum(1)[None, :] - 2.0 * xy
+    else:
+        d = -xy
+    return np.argmin(d, axis=1).astype(np.int32)
+
+
+def fold_index(
+    vectors: np.ndarray,  # (n_new, d) folded table: kept base rows + delta rows
+    attrs: np.ndarray,  # (n_new, A)
+    n_kept: int,  # how many leading rows come from the old base
+    old_neighbors: np.ndarray,  # (n_old, M) old graph, sentinel n_old
+    keep_mask: np.ndarray,  # (n_old,) bool — False = tombstoned
+    old_assign: np.ndarray,  # (n_old,) old cluster assignments
+    centroids: np.ndarray,  # (nlist, d) — carried over unchanged
+    cfg: BuildConfig,
+) -> tuple[CompassIndex, np.ndarray]:
+    """Fold a (keep_mask, delta rows) pair into a fresh CompassIndex."""
+    vectors = np.asarray(vectors, np.float32)
+    attrs = np.asarray(attrs, np.float32)
+    n_new, d = vectors.shape
+    nlist = centroids.shape[0]
+    assert n_kept == int(np.asarray(keep_mask).sum())
+
+    # graph: drop tombstones, locally insert the delta rows, repair
+    kept_graph = remove_nodes(old_neighbors, keep_mask)
+    assign = np.concatenate(
+        [
+            np.asarray(old_assign)[np.asarray(keep_mask, bool)].astype(np.int32),
+            assign_to_centroids(vectors[n_kept:], centroids, cfg.metric),
+        ]
+    )
+    neighbors = insert_nodes(
+        kept_graph,
+        vectors,
+        n_kept,
+        assign,
+        centroids,
+        cfg.m,
+        alpha=cfg.prune_alpha,
+        metric=cfg.metric,
+    )
+    mean = vectors.mean(0)
+    if cfg.metric == "l2":
+        entry = int(np.argmin(((vectors - mean) ** 2).sum(1)))
+    else:
+        entry = int(np.argmax(vectors @ mean))
+    neighbors = _repair_connectivity(neighbors, vectors, entry, cfg.metric)
+    graph = GraphIndex(jnp.asarray(neighbors), jnp.asarray(np.int32(entry)))
+
+    medoids = cluster_medoids(vectors, assign, centroids, entry, cfg.metric)
+    cattrs = build_clustered_attrs(attrs, assign, nlist)
+    astats = build_attr_stats(
+        attrs, assign, nlist, n_bins=cfg.hist_bins, n_cluster_bins=cfg.cluster_hist_bins
+    )
+    vpad = np.concatenate([vectors, np.zeros((1, d), np.float32)], 0)
+    apad = np.concatenate([attrs, np.full((1, attrs.shape[1]), np.inf, np.float32)], 0)
+    index = CompassIndex(
+        jnp.asarray(vpad),
+        jnp.asarray(apad),
+        graph,
+        jnp.asarray(np.asarray(centroids, np.float32)),
+        jnp.asarray(medoids),
+        cattrs,
+        astats,
+    )
+    return index, assign

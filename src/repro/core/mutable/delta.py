@@ -1,0 +1,63 @@
+"""Delta segment: the mutable tier of the LSM-style index (core/mutable).
+
+Recent upserts live in a fixed-capacity segment with their own vectors and
+attribute rows, padded to a static shape (``cap`` slots + one sentinel row)
+so the search path stays fully jitted whatever the fill level.  Search over
+the delta is a brute-force predicate-filtered scan — at delta scale
+(hundreds to a few thousand rows) one fused gather+distance+predicate pass
+is cheaper than maintaining any structure, and it is *exact*, so the delta
+never costs recall.  The scan reuses the engine's batched
+``VisitBackend.scan_scores`` surface (``kernels/filter_distance``'s (B, V)
+grid on the pallas path), exactly like the planner's PREFILTER mode.
+
+Slots are append-only between compactions: a re-upsert of a delta-resident
+id invalidates the old slot rather than rewriting it, so a snapshot taken
+earlier stays internally consistent (epoch swap, see mutable_index.py).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class DeltaView(NamedTuple):
+    """Device-side snapshot of the delta segment (a JAX pytree).
+
+    Mirrors just enough of :class:`~repro.core.index.CompassIndex`'s row
+    layout (sentinel-padded ``vectors``/``attrs``, ``n_records``) that the
+    engine's ``VisitBackend.scan_scores`` accepts it unchanged.
+    """
+
+    vectors: jax.Array  # (cap + 1, d) — sentinel row cap is zeros
+    attrs: jax.Array  # (cap + 1, A) — sentinel row is +inf (fails ranges)
+    gids: jax.Array  # (cap,) int32 global record ids; -1 on empty slots
+    valid: jax.Array  # (cap,) bool — occupied and not superseded/deleted
+
+    @property
+    def n_records(self) -> int:
+        return self.vectors.shape[0] - 1
+
+    @property
+    def cap(self) -> int:
+        return self.gids.shape[0]
+
+
+def delta_topk(delta: DeltaView, queries, pred, k: int, metric: str, backend):
+    """Exact top-k over the delta segment for a query batch.
+
+    Returns (gids (B, k') int32 with -1 padding, dists (B, k') f32 with
+    +inf padding, n_scanned () int32) where k' = min(k, cap).
+    """
+    b = queries.shape[0]
+    cap = delta.cap
+    ids = jnp.broadcast_to(jnp.arange(cap, dtype=jnp.int32), (b, cap))
+    mask = jnp.broadcast_to(delta.valid, (b, cap))
+    dist, passing = backend.scan_scores(delta, queries, pred, ids, mask, metric)
+    dist = jnp.where(passing, dist, jnp.inf)
+    kk = min(k, cap)
+    neg, sel = jax.lax.top_k(-dist, kk)
+    top_d = -neg
+    top_g = jnp.where(jnp.isfinite(top_d), jnp.take(delta.gids, sel), jnp.int32(-1))
+    return top_g, top_d, jnp.sum(delta.valid).astype(jnp.int32)

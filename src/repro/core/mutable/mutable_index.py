@@ -1,0 +1,332 @@
+"""MutableIndex — the LSM-style write path over the immutable CompassIndex.
+
+Layout (DESIGN.md §Mutability):
+
+  * **base** — an ordinary :class:`CompassIndex` (graph + IVF + clustered
+    runs + planner stats), immutable between compactions.
+  * **tombstones** — a host bitmap over base rows; deleted or superseded
+    rows keep *routing* (graph traversal and B+-tree runs still flow
+    through them) but the engine masks them out of the result queue and
+    the PREFILTER adoption (``CompassIndex.live``).
+  * **delta segment** — a fixed-capacity append-only buffer of recent
+    upserts with its own vectors/attrs, searched by an exact brute scan
+    (delta.py).  Overflow triggers compaction (compact.py).
+
+Search fans out over {base (tombstone-masked), delta (predicate-filtered
+scan)} and merges top-k by distance; both tiers are searched under the same
+``CompassParams``, so planner modes, backends and metrics all apply.
+
+**Epoch-swapped snapshots, not locks**: every mutation invalidates a cached
+:class:`Snapshot`; readers grab the current snapshot object (a plain Python
+reference — atomic under the GIL) and run entirely against it.  Compaction
+builds the *next* base off to the side and publishes it by swapping the
+snapshot reference and bumping ``epoch``; an in-flight search keeps its
+old-epoch arrays alive for free (JAX buffers are immutable), which is the
+whole point of choosing epochs over a reader–writer lock: zero reader
+coordination on the hot path, and a serving batch can pin one epoch for its
+entire lifetime (serving/search_service.py).
+
+Ids: callers address records by *global id* (``gid``), stable across
+compactions; search results report gids (-1 for empty slots), unlike the
+positional ids of raw ``compass_search``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import predicate as P
+from ..engine.backend import resolve_backend
+from ..engine.state import SearchResult
+from ..index import BuildConfig, CompassIndex, build_index
+from .compact import fold_index
+from .delta import DeltaView, delta_topk
+
+GID_SENTINEL = -1  # empty result slot / empty delta slot
+
+
+@dataclasses.dataclass(frozen=True)
+class Snapshot:
+    """One immutable epoch of the mutable index (what a search runs on)."""
+
+    index: CompassIndex  # base with .live tombstone mask attached
+    base_gids: jax.Array  # (N + 1,) int32; sentinel row -> -1
+    delta: DeltaView
+    epoch: int
+
+
+@functools.partial(jax.jit, static_argnames=("pm",))
+def mutable_search(
+    index: CompassIndex, base_gids, delta: DeltaView, queries, pred: P.Predicate, pm
+) -> SearchResult:
+    """Fan-out search: base (tombstone-masked) + delta (brute scan), merged.
+
+    Returns a :class:`SearchResult` whose ids are *global ids* (-1 padding).
+    Stats are the base engine stats with the delta's scanned rows folded
+    into ``n_dist``.
+    """
+    from ..search import compass_search  # local: engine -> mutable would cycle
+
+    pmr = pm.resolved()
+    backend = resolve_backend(pmr.backend)
+    base = compass_search(index, queries, pred, pm)
+    bg = jnp.take(base_gids, jnp.clip(base.ids, 0, index.n_records), axis=0)
+    bg = jnp.where(jnp.isfinite(base.dists), bg, jnp.int32(GID_SENTINEL))
+    dg, dd, n_scanned = delta_topk(delta, queries, pred, pmr.k, pmr.metric, backend)
+    all_d = jnp.concatenate([base.dists, dd], axis=1)
+    all_g = jnp.concatenate([bg, dg], axis=1)
+    neg, sel = jax.lax.top_k(-all_d, pmr.k)
+    stats = base.stats._replace(n_dist=base.stats.n_dist + n_scanned)
+    return SearchResult(jnp.take_along_axis(all_g, sel, axis=1), -neg, stats)
+
+
+class MutableIndex:
+    """Mutable filtered-search index: upsert / delete / search / compact.
+
+    Host-side writes are cheap dictionary-and-array mutations; the device
+    snapshot is rebuilt lazily on the next search (write bursts amortize to
+    one transfer).  All reads go through :meth:`snapshot`.
+    """
+
+    def __init__(
+        self,
+        base: CompassIndex,
+        *,
+        delta_cap: int = 256,
+        auto_compact: bool = True,
+        cfg: BuildConfig | None = None,
+        metric: str = "l2",
+        gids: np.ndarray | None = None,
+    ):
+        if base.astats is None:
+            raise ValueError("MutableIndex requires an index built by build_index (astats)")
+        # CompassIndex does not record its build metric, so a non-l2 index
+        # wrapped without an explicit ``cfg`` must pass ``metric`` here or
+        # compaction would fold with l2 geometry.
+        self._cfg = cfg or BuildConfig(
+            m=base.graph.degree,
+            nlist=base.nlist,
+            metric=metric,
+            hist_bins=base.astats.edges.shape[1] - 1,
+            cluster_hist_bins=base.astats.cluster_edges.shape[2] - 1,
+        )
+        self.delta_cap = int(delta_cap)
+        self.auto_compact = bool(auto_compact)
+        self.compaction_log: list[float] = []  # fold wall-clock seconds
+        self._epoch = 0
+        self._snap: Snapshot | None = None
+        self._install_base(base, gids)
+        self._reset_delta()
+
+    # -- wiring ------------------------------------------------------------
+
+    def _install_base(self, base: CompassIndex, gids: np.ndarray | None) -> None:
+        n = base.n_records
+        if gids is None:
+            gids = np.arange(n, dtype=np.int64)
+        gids = np.asarray(gids, np.int64)
+        if gids.shape != (n,):
+            raise ValueError(f"gids shape {gids.shape} != ({n},)")
+        self._base = base._replace(live=None)
+        self._base_gids_dev = None  # per-epoch device cache (see snapshot)
+        # host mirrors consumed by compaction
+        self._vectors = np.asarray(base.vectors)[:n]
+        self._attrs = np.asarray(base.attrs)[:n]
+        self._assign = np.asarray(base.cattrs.assignments)
+        self._centroids = np.asarray(base.centroids)
+        self._gids = gids
+        self._gid2base = {int(g): p for p, g in enumerate(gids)}
+        self._live = np.ones((n + 1,), bool)
+
+    def _reset_delta(self) -> None:
+        cap = self.delta_cap
+        self._dvec = np.zeros((cap, self.dim), np.float32)
+        self._dattr = np.full((cap, self.n_attrs), np.inf, np.float32)
+        self._dgid = np.full((cap,), GID_SENTINEL, np.int64)
+        self._dvalid = np.zeros((cap,), bool)
+        self._dcount = 0
+        self._gid2slot: dict[int, int] = {}
+
+    @classmethod
+    def build(
+        cls,
+        vectors: np.ndarray,
+        attrs: np.ndarray,
+        cfg: BuildConfig = BuildConfig(),
+        *,
+        delta_cap: int = 256,
+        auto_compact: bool = True,
+        gids: np.ndarray | None = None,
+    ) -> "MutableIndex":
+        return cls(
+            build_index(vectors, attrs, cfg),
+            delta_cap=delta_cap,
+            auto_compact=auto_compact,
+            cfg=cfg,
+            gids=gids,
+        )
+
+    # -- introspection -----------------------------------------------------
+
+    @property
+    def base(self) -> CompassIndex:
+        return self._base
+
+    @property
+    def dim(self) -> int:
+        return self._base.dim
+
+    @property
+    def n_attrs(self) -> int:
+        return self._base.n_attrs
+
+    @property
+    def epoch(self) -> int:
+        return self._epoch
+
+    @property
+    def gids(self) -> np.ndarray:
+        """Global ids of the current base rows (positional order)."""
+        return self._gids
+
+    @property
+    def delta_fill(self) -> int:
+        return self._dcount
+
+    @property
+    def n_live(self) -> int:
+        """Live record count across both tiers."""
+        return int(self._live[:-1].sum()) + int(self._dvalid.sum())
+
+    def __contains__(self, gid: int) -> bool:
+        gid = int(gid)
+        if gid in self._gid2slot:
+            return True
+        pos = self._gid2base.get(gid)
+        return pos is not None and bool(self._live[pos])
+
+    # -- writes ------------------------------------------------------------
+
+    def upsert(self, gids, vectors, attrs) -> None:
+        """Insert or replace records by global id (scalar or batched)."""
+        gids = np.atleast_1d(np.asarray(gids, np.int64))
+        vectors = np.asarray(vectors, np.float32).reshape(len(gids), self.dim)
+        attrs = np.asarray(attrs, np.float32).reshape(len(gids), self.n_attrs)
+        if gids.size and (gids.min() < 0 or gids.max() >= np.iinfo(np.int32).max):
+            raise ValueError("gids must fit in non-negative int32")
+        for g, v, a in zip(gids, vectors, attrs):
+            g = int(g)
+            if self._dcount >= self.delta_cap:
+                if not self.auto_compact:
+                    raise RuntimeError(
+                        f"delta segment full ({self.delta_cap}); call compact()"
+                    )
+                self.compact()
+            old_slot = self._gid2slot.pop(g, None)
+            if old_slot is not None:  # superseded within the delta
+                self._dvalid[old_slot] = False
+            pos = self._gid2base.get(g)
+            if pos is not None:  # superseded base version becomes a tombstone
+                self._live[pos] = False
+            slot = self._dcount
+            self._dvec[slot] = v
+            self._dattr[slot] = a
+            self._dgid[slot] = g
+            self._dvalid[slot] = True
+            self._gid2slot[g] = slot
+            self._dcount += 1
+        self._snap = None
+
+    def delete(self, gids) -> None:
+        """Delete records by global id; KeyError on unknown/already-deleted."""
+        for g in np.atleast_1d(np.asarray(gids, np.int64)):
+            g = int(g)
+            slot = self._gid2slot.pop(g, None)
+            if slot is not None:
+                self._dvalid[slot] = False
+                continue
+            pos = self._gid2base.get(g)
+            if pos is None or not self._live[pos]:
+                raise KeyError(f"unknown or already-deleted id {g}")
+            self._live[pos] = False
+        self._snap = None
+
+    # -- reads -------------------------------------------------------------
+
+    def snapshot(self) -> Snapshot:
+        """Current epoch's immutable device snapshot (cached until dirty)."""
+        if self._snap is None:
+            index = self._base._replace(live=jnp.asarray(self._live))
+            if self._base_gids_dev is None:  # constant within an epoch
+                self._base_gids_dev = jnp.asarray(
+                    np.concatenate([self._gids, [GID_SENTINEL]]).astype(np.int32)
+                )
+            base_gids = self._base_gids_dev
+            delta = DeltaView(
+                jnp.asarray(
+                    np.concatenate([self._dvec, np.zeros((1, self.dim), np.float32)], 0)
+                ),
+                jnp.asarray(
+                    np.concatenate(
+                        [self._dattr, np.full((1, self.n_attrs), np.inf, np.float32)], 0
+                    )
+                ),
+                jnp.asarray(self._dgid.astype(np.int32)),
+                jnp.asarray(self._dvalid),
+            )
+            self._snap = Snapshot(index, base_gids, delta, self._epoch)
+        return self._snap
+
+    def search(self, queries, pred: P.Predicate, pm) -> SearchResult:
+        """Batched filtered search over base+delta; ids are global ids."""
+        snap = self.snapshot()
+        return mutable_search(
+            snap.index, snap.base_gids, snap.delta, jnp.asarray(queries), pred, pm
+        )
+
+    def materialize(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """The equivalent immutable table: (vectors, attrs, gids) in
+        canonical order — surviving base rows first, delta rows after."""
+        keep = self._live[:-1]
+        dsel = self._dvalid
+        vec = np.concatenate([self._vectors[keep], self._dvec[dsel]], 0)
+        attr = np.concatenate([self._attrs[keep], self._dattr[dsel]], 0)
+        gids = np.concatenate([self._gids[keep], self._dgid[dsel]], 0)
+        return vec, attr, gids
+
+    # -- maintenance -------------------------------------------------------
+
+    def compact(self) -> None:
+        """Fold the delta into a fresh base and swap epochs.
+
+        Local maintenance, not a rebuild: tombstoned rows leave the graph
+        (``remove_nodes``), delta rows are locally inserted
+        (``insert_nodes``), clustered runs are re-sorted, medoids and
+        planner stats refreshed (compact.py).  The swap is the last step,
+        so concurrent readers keep their old snapshot untouched.
+        """
+        t0 = time.perf_counter()
+        keep = self._live[:-1]
+        vec, attr, gids = self.materialize()
+        index, assign = fold_index(
+            vec,
+            attr,
+            int(keep.sum()),
+            np.asarray(self._base.graph.neighbors),
+            keep,
+            self._assign,
+            self._centroids,
+            self._cfg,
+        )
+        # publish: install the new epoch, then reset the write tiers
+        self._install_base(index, gids)
+        self._assign = assign
+        self._reset_delta()
+        self._epoch += 1
+        self._snap = None
+        self.compaction_log.append(time.perf_counter() - t0)

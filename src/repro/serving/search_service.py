@@ -48,6 +48,7 @@ import numpy as np
 
 from repro.core import predicate as P
 from repro.core.index import CompassIndex
+from repro.core.mutable import MutableIndex, mutable_search
 from repro.core.planner import plan as plan_mod
 from repro.core.search import CompassParams, compass_search
 
@@ -65,6 +66,22 @@ class SearchJob:
 
 
 @dataclasses.dataclass
+class WriteJob:
+    """One admitted mutation (mutable-index services only).
+
+    Writes are applied in admission order at scheduling-round boundaries
+    (:meth:`SearchService.apply_writes`), never between the formation and
+    execution of a search micro-batch — that is what keeps every batch
+    pinned to a single index epoch.
+    """
+
+    kind: str  # "upsert" | "delete"
+    gid: int
+    vector: Optional[np.ndarray] = None  # (d,) for upserts
+    attrs: Optional[np.ndarray] = None  # (A,) for upserts
+
+
+@dataclasses.dataclass
 class ServiceResult:
     """Response with all padding stripped.
 
@@ -79,6 +96,10 @@ class ServiceResult:
     bucket: tuple  # (B, T) shape bucket that served the request
     queue_wait_s: float
     batch_exec_s: float
+    # index epoch the whole micro-batch ran against (mutable-index services;
+    # None when serving an immutable CompassIndex).  Every result of one
+    # batch carries the same epoch — a batch never straddles a compaction.
+    epoch: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -124,7 +145,7 @@ class SearchService:
 
     def __init__(
         self,
-        index: CompassIndex,
+        index: "CompassIndex | MutableIndex",
         params: CompassParams = CompassParams(),
         *,
         batch_size: int = 8,
@@ -133,18 +154,31 @@ class SearchService:
         result_buffer: int = 4096,
         clock: Callable[[], float] = time.monotonic,
     ):
-        self.index = index
+        # A MutableIndex enables the write path (submit_upsert/submit_delete)
+        # and epoch-pinned dispatch; searches then report global ids.
+        self.mutable = index if isinstance(index, MutableIndex) else None
         self.params = params
         self.batch_size = int(batch_size)
         self.max_wait_s = float(max_wait_s)
         self.max_terms = int(max_terms)
         self.result_buffer = int(result_buffer)
         self.clock = clock
+        self._index = index if self.mutable is None else None
         self._rid = itertools.count()
         self._queues: dict[int, deque[SearchJob]] = {}
+        self._writes: deque[WriteJob] = deque()
         self._executables: dict[tuple, Callable] = {}
+        self._mutable_shapes: set[tuple] = set()  # compile accounting (jit path)
         self._results: OrderedDict[int, ServiceResult] = OrderedDict()
         self._stats: dict[tuple, BucketStats] = {}
+        self.n_upserts = 0
+        self.n_deletes = 0
+        self.n_write_errors = 0
+
+    @property
+    def index(self) -> CompassIndex:
+        """The index being served (the current base for mutable services)."""
+        return self._index if self.mutable is None else self.mutable.base
 
     # -- admission -----------------------------------------------------------
 
@@ -188,13 +222,74 @@ class SearchService:
         self._queues.setdefault(job.t_bucket, deque()).append(job)
         return rid
 
+    # -- write admission (mutable services) ----------------------------------
+
+    def _require_mutable(self) -> MutableIndex:
+        if self.mutable is None:
+            raise ValueError("writes require a SearchService over a MutableIndex")
+        return self.mutable
+
+    def submit_upsert(self, gid: int, vector: np.ndarray, attrs: np.ndarray) -> None:
+        """Admit an upsert; applied at the next scheduling-round boundary."""
+        self._require_mutable()
+        vector = np.asarray(vector, np.float32)
+        attrs = np.asarray(attrs, np.float32)
+        if vector.shape != (self.index.dim,):
+            raise ValueError(f"vector shape {vector.shape} != ({self.index.dim},)")
+        if attrs.shape != (self.index.n_attrs,):
+            raise ValueError(f"attrs shape {attrs.shape} != ({self.index.n_attrs},)")
+        self._writes.append(WriteJob("upsert", int(gid), vector, attrs))
+
+    def submit_delete(self, gid: int) -> None:
+        """Admit a delete; applied at the next scheduling-round boundary.
+
+        Admission checks the id against the *current* index state — a gid
+        queued for upsert in the same round is not yet visible.  The drain
+        re-checks (the authoritative ordering is application order), so a
+        delete raced by an earlier queued delete degrades to a counted
+        no-op rather than poisoning the scheduling round.
+        """
+        mut = self._require_mutable()
+        gid = int(gid)
+        if gid not in mut and not any(
+            w.kind == "upsert" and w.gid == gid for w in self._writes
+        ):
+            raise KeyError(f"unknown id {gid}")
+        self._writes.append(WriteJob("delete", gid))
+
+    def apply_writes(self) -> int:
+        """Drain the write queue into the mutable index (may compact).
+
+        Runs at the top of :meth:`step` / :meth:`flush`, i.e. strictly
+        between micro-batches: a batch formed afterwards sees every applied
+        write, and a batch already dispatched saw none of them — each batch
+        is pinned to exactly one epoch.  Returns the number of writes
+        applied.
+        """
+        applied = 0
+        while self._writes:
+            w = self._writes.popleft()
+            if w.kind == "upsert":
+                self.mutable.upsert(w.gid, w.vector, w.attrs)
+                self.n_upserts += 1
+            else:
+                try:
+                    self.mutable.delete(w.gid)
+                    self.n_deletes += 1
+                except KeyError:  # raced by a queued delete of the same gid
+                    self.n_write_errors += 1
+            applied += 1
+        return applied
+
     # -- batch formation -----------------------------------------------------
 
     def step(self) -> list[ServiceResult]:
-        """One scheduling round: flush every full bucket, and every
-        non-empty bucket whose oldest request has exceeded the deadline.
-        Returns the results completed this round (also retrievable via
-        :meth:`poll`)."""
+        """One scheduling round: apply queued writes, then flush every full
+        bucket and every non-empty bucket whose oldest request has exceeded
+        the deadline.  Returns the results completed this round (also
+        retrievable via :meth:`poll`)."""
+        if self.mutable is not None:
+            self.apply_writes()
         done: list[ServiceResult] = []
         now = self.clock()
         for t_bucket, q in self._queues.items():
@@ -206,6 +301,8 @@ class SearchService:
 
     def flush(self) -> list[ServiceResult]:
         """Dispatch everything queued regardless of deadlines (drain)."""
+        if self.mutable is not None:
+            self.apply_writes()
         done: list[ServiceResult] = []
         for t_bucket, q in self._queues.items():
             while q:
@@ -256,8 +353,29 @@ class SearchService:
         qj = jnp.asarray(queries)
 
         t0 = self.clock()
-        exe = self._executable(qj, pred)
-        res = exe(self.index, qj, pred)
+        epoch = None
+        st = self._stats.setdefault((B, t_bucket), BucketStats())
+        if self.mutable is not None:
+            # Pin the epoch: take one snapshot and run the whole batch
+            # against it.  Writes only apply at round boundaries
+            # (apply_writes), so nothing can swap the base mid-batch — the
+            # snapshot makes that guarantee explicit and keeps the result's
+            # provenance (epoch) reportable.
+            snap = self.mutable.snapshot()
+            epoch = snap.epoch
+            key = (B, t_bucket, pred.lo.shape[-1], self.params,
+                   snap.index.n_records, snap.delta.cap)
+            if key in self._mutable_shapes:
+                st.n_cache_hits += 1
+            else:
+                self._mutable_shapes.add(key)
+                st.n_compiles += 1
+            res = mutable_search(
+                snap.index, snap.base_gids, snap.delta, qj, pred, self.params
+            )
+        else:
+            exe = self._executable(qj, pred)
+            res = exe(self.index, qj, pred)
         res.ids.block_until_ready()
         exec_s = self.clock() - t0
 
@@ -288,6 +406,7 @@ class SearchService:
                 bucket=(B, t_bucket),
                 queue_wait_s=wait,
                 batch_exec_s=exec_s,
+                epoch=epoch,
             )
             self._results[job.rid] = r
             out.append(r)
@@ -297,10 +416,14 @@ class SearchService:
 
     # -- observability -------------------------------------------------------
 
+    def pending_writes(self) -> int:
+        return len(self._writes)
+
     @property
     def compile_count(self) -> int:
-        """Total XLA compilations so far == occupied (B, T, A, pm) keys."""
-        return len(self._executables)
+        """Total XLA compilations so far == occupied (B, T, A, pm) keys
+        (plus, for mutable services, occupied snapshot shapes)."""
+        return len(self._executables) + len(self._mutable_shapes)
 
     def stats(self) -> dict:
         """JSON-ready snapshot: per-bucket counters plus service totals."""
@@ -319,6 +442,14 @@ class SearchService:
             "n_fillers": sum(s.n_fillers for s in self._stats.values()),
             "mean_wait_s": wait / n_req if n_req else 0.0,
             "planner": self.params.planner,
+            "mutable": self.mutable is not None,
+            "epoch": None if self.mutable is None else self.mutable.epoch,
+            "n_upserts": self.n_upserts,
+            "n_deletes": self.n_deletes,
+            "n_write_errors": self.n_write_errors,
+            "n_compactions": (
+                0 if self.mutable is None else len(self.mutable.compaction_log)
+            ),
             "modes": {
                 "prefilter": sum(s.n_mode_prefilter for s in self._stats.values()),
                 "cooperative": sum(s.n_mode_cooperative for s in self._stats.values()),

@@ -1,0 +1,442 @@
+"""Mutable-index subsystem (core/mutable): delta segments, tombstones,
+online compaction, epoch-pinned serving, per-shard distributed deltas."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import predicate as P
+from repro.core.baselines import brute_force, recall
+from repro.core.distributed import DistributedMutableIndex
+from repro.core.graph_build import insert_nodes, remove_nodes
+from repro.core.index import BuildConfig, build_index, cluster_medoids
+from repro.core.mutable import MutableIndex
+from repro.core.planner.plan import COOPERATIVE, POSTFILTER, PREFILTER
+from repro.core.search import CompassParams, compass_search
+from repro.serving.search_service import SearchService
+
+A = 4
+
+
+@pytest.fixture(scope="module")
+def mcorpus():
+    rng = np.random.default_rng(11)
+    n, d = 2500, 16
+    centers = rng.normal(size=(24, d)).astype(np.float32) * 3
+    x = (centers[rng.integers(0, 24, n)] + rng.normal(size=(n, d))).astype(np.float32)
+    attrs = rng.uniform(size=(n, A)).astype(np.float32)
+    queries = (centers[rng.integers(0, 24, 8)] + rng.normal(size=(8, d))).astype(np.float32)
+    return x, attrs, queries
+
+
+MCFG = BuildConfig(m=12, nlist=16)
+
+
+@pytest.fixture(scope="module")
+def mbase(mcorpus):
+    x, attrs, _ = mcorpus
+    return build_index(x, attrs, MCFG)
+
+
+def wrap(mbase, **kw) -> MutableIndex:
+    kw.setdefault("cfg", MCFG)
+    return MutableIndex(mbase, **kw)
+
+
+def stacked(tree, b):
+    return P.stack_predicates([tree.tensor(A)] * b)
+
+
+# ---------------------------------------------------------------------------
+# writes + delta search
+# ---------------------------------------------------------------------------
+
+
+def test_upsert_is_searchable_before_compaction(mbase, mcorpus):
+    _, _, queries = mcorpus
+    mi = wrap(mbase, delta_cap=32)
+    pred = stacked(P.Pred.range(0, 0.2, 0.8), 8)
+    pm = CompassParams(k=10, ef=64)
+    mi.upsert([7_000_000, 7_000_001],
+              np.stack([queries[0], queries[0] + 0.01]),
+              np.tile(np.float32([0.5] * A), (2, 1)))
+    res = mi.search(queries, pred, pm)
+    ids0 = np.asarray(res.ids)[0]
+    assert ids0[0] == 7_000_000 and 7_000_001 in ids0
+    assert mi.epoch == 0 and mi.delta_fill == 2
+    # delta rows still honor the predicate
+    mi.upsert(7_000_002, queries[0], np.float32([0.95] * A))  # attr0 outside range
+    ids2 = np.asarray(mi.search(queries, pred, pm).ids)[0]
+    assert 7_000_002 not in ids2
+
+
+def test_superseded_base_version_never_surfaces(mbase, mcorpus):
+    _, _, queries = mcorpus
+    mi = wrap(mbase, delta_cap=32)
+    pred = stacked(P.Pred.range(0, 0.0, 1.0), 8)
+    pm = CompassParams(k=5, ef=64)
+    victim = int(np.asarray(mi.search(queries, pred, pm).ids)[0, 0])
+    # move the record far away: its old (near) base version must not be used
+    mi.upsert(victim, np.full((mi.dim,), 50.0, np.float32), np.float32([0.5] * A))
+    ids = np.asarray(mi.search(queries, pred, pm).ids)[0]
+    assert victim not in ids
+
+
+def test_delete_unknown_or_twice_raises(mbase):
+    mi = wrap(mbase, delta_cap=8)
+    with pytest.raises(KeyError):
+        mi.delete(10**9)
+    mi.delete(0)
+    with pytest.raises(KeyError):
+        mi.delete(0)
+    assert 0 not in mi and 1 in mi
+    # deleting a delta-resident id invalidates the slot
+    mi.upsert(10**6, np.zeros((mi.dim,), np.float32), np.float32([0.5] * A))
+    assert 10**6 in mi
+    mi.delete(10**6)
+    assert 10**6 not in mi
+
+
+# ---------------------------------------------------------------------------
+# tombstones never surface — all three planner modes
+# ---------------------------------------------------------------------------
+
+
+def _mode_pred(mcorpus, mode):
+    x, attrs, _ = mcorpus
+    if mode == PREFILTER:  # <=1% selectivity -> run materialization
+        lo = float(np.quantile(attrs[:, 0], 0.50))
+        hi = float(np.quantile(attrs[:, 0], 0.508))
+        return P.Pred.range(0, lo, hi)
+    if mode == POSTFILTER:  # vacuous filter
+        return P.Pred.range(0, -10.0, 10.0)
+    return P.Pred.and_(P.Pred.range(0, 0.2, 0.7), P.Pred.range(1, 0.1, 0.9))
+
+
+@pytest.mark.parametrize("mode", [PREFILTER, COOPERATIVE, POSTFILTER])
+def test_tombstoned_ids_never_surface(mbase, mcorpus, mode):
+    _, _, queries = mcorpus
+    mi = wrap(mbase, delta_cap=32)
+    pred = stacked(_mode_pred(mcorpus, mode), 8)
+    pm = CompassParams(k=5, ef=32, planner=True)
+    res = mi.search(queries, pred, pm)
+    assert np.all(np.asarray(res.stats.mode) == mode)
+    victims = {int(i) for i in np.asarray(res.ids)[:, 0] if i >= 0}
+    for v in victims:
+        mi.delete(v)
+    res2 = mi.search(queries, pred, pm)
+    assert not victims & {int(i) for i in np.asarray(res2.ids).ravel()}
+    # planner off (plain cooperative loop) must agree
+    res3 = mi.search(queries, pred, CompassParams(k=5, ef=32))
+    assert not victims & {int(i) for i in np.asarray(res3.ids).ravel()}
+
+
+# ---------------------------------------------------------------------------
+# compaction
+# ---------------------------------------------------------------------------
+
+
+def test_delta_overflow_triggers_compaction(mbase, mcorpus):
+    _, _, queries = mcorpus
+    mi = wrap(mbase, delta_cap=8)
+    rng = np.random.default_rng(0)
+    for i in range(9):  # 9th upsert overflows the 8-slot delta
+        mi.upsert(5_000_000 + i, rng.normal(size=mi.dim).astype(np.float32),
+                  rng.uniform(size=A).astype(np.float32))
+    assert mi.epoch == 1 and mi.delta_fill == 1
+    assert len(mi.compaction_log) == 1
+    # every upsert survives the fold, now in the base tier
+    assert all(5_000_000 + i in mi for i in range(9))
+    pm = CompassParams(k=10, ef=64)
+    pred = stacked(P.Pred.range(0, 0.0, 1.0), 8)
+    ids = set(np.asarray(mi.search(queries, pred, pm).ids).ravel().tolist())
+    assert ids  # searchable post-compaction
+
+
+def test_overflow_without_auto_compact_raises(mbase):
+    mi = wrap(mbase, delta_cap=4, auto_compact=False)
+    rng = np.random.default_rng(0)
+    for i in range(4):
+        mi.upsert(i + 10**6, rng.normal(size=mi.dim).astype(np.float32),
+                  rng.uniform(size=A).astype(np.float32))
+    with pytest.raises(RuntimeError, match="delta segment full"):
+        mi.upsert(10**7, rng.normal(size=mi.dim).astype(np.float32),
+                  rng.uniform(size=A).astype(np.float32))
+    mi.compact()
+    assert mi.epoch == 1 and mi.delta_fill == 0
+
+
+def _groups(gids, dists):
+    out = {}
+    for g, d in zip(gids, dists):
+        if np.isfinite(d):
+            out.setdefault(float(np.float32(d)), set()).add(int(g))
+    return out
+
+
+def assert_same_topk(gids_a, d_a, gids_b, d_b):
+    """Same top-k up to ties: identical distance multisets, identical id
+    sets within each exact-distance group (the truncated last group is
+    compared as sets of distances only)."""
+    gids_a, d_a = np.asarray(gids_a), np.asarray(d_a)
+    gids_b, d_b = np.asarray(gids_b), np.asarray(d_b)
+    np.testing.assert_allclose(d_a, d_b, rtol=1e-6, atol=1e-6)
+    for b in range(gids_a.shape[0]):
+        ga, gb = _groups(gids_a[b], d_a[b]), _groups(gids_b[b], d_b[b])
+        last = max(ga) if ga else None
+        for key in ga:
+            if key == last:  # k-boundary may truncate a tie group
+                assert len(ga[key]) == len(gb.get(key, set()))
+            else:
+                assert ga[key] == gb.get(key), (b, key)
+
+
+def test_mixed_history_matches_fresh_rebuild(mcorpus):
+    """Acceptance: planner on, delta at 50% capacity after a mixed
+    upsert/delete history (including one mid-history compaction), the
+    mutable search equals a fresh build_index over the materialized table
+    across conjunction / disjunction / <=1%-selectivity predicates."""
+    x, attrs, queries = mcorpus
+    cap = 32
+    mi = MutableIndex.build(x, attrs, MCFG, delta_cap=cap)
+    rng = np.random.default_rng(5)
+    live = list(range(len(x)))
+    next_gid = len(x)
+    for i in range(3 * cap // 2):  # 48 upserts -> one compaction, fill 16/32
+        if i % 3 == 2:  # update an existing record
+            gid = live[int(rng.integers(len(live)))]
+        else:
+            gid = next_gid
+            next_gid += 1
+            live.append(gid)
+        mi.upsert(gid, (x[rng.integers(len(x))] + rng.normal(size=mi.dim) * 0.1).astype(np.float32),
+                  rng.uniform(size=A).astype(np.float32))
+    for _ in range(20):
+        gid = live.pop(int(rng.integers(len(live))))
+        if gid in mi:
+            mi.delete(gid)
+    assert mi.epoch == 1 and mi.delta_fill == cap // 2  # 50% full delta
+
+    vec, att, gids = mi.materialize()
+    fresh = build_index(vec, att, MCFG)
+    n_table = vec.shape[0]
+    pm = CompassParams(k=10, ef=256, planner=True)
+    narrow_lo = float(np.quantile(att[:, 1], 0.7))
+    narrow_hi = float(np.quantile(att[:, 1], 0.708))  # <=1% selectivity
+    cases = [
+        P.Pred.and_(P.Pred.range(0, 0.2, 0.7), P.Pred.range(1, 0.1, 0.9)),
+        P.Pred.or_(P.Pred.range(0, 0.0, 0.15), P.Pred.range(2, 0.85, 1.0)),
+        P.Pred.range(1, narrow_lo, narrow_hi),
+    ]
+    for tree in cases:
+        pred = stacked(tree, len(queries))
+        res_m = mi.search(queries, pred, pm)
+        res_f = compass_search(fresh, jnp.asarray(queries), pred, pm)
+        fids = np.asarray(res_f.ids)
+        fg = np.where(fids < n_table, gids[np.clip(fids, 0, n_table - 1)], -1)
+        assert_same_topk(np.asarray(res_m.ids), np.asarray(res_m.dists),
+                         fg, np.asarray(res_f.dists))
+
+
+def test_compaction_refreshes_planner_stats(mbase, mcorpus):
+    _, _, queries = mcorpus
+    mi = wrap(mbase, delta_cap=64)
+    rng = np.random.default_rng(3)
+    # new rows with attr0 in [2, 3] — far outside the base U[0,1] range
+    new_attrs = np.column_stack([
+        rng.uniform(2.0, 3.0, 40),
+        *[rng.uniform(size=40) for _ in range(A - 1)],
+    ]).astype(np.float32)
+    for i in range(40):
+        mi.upsert(8_000_000 + i, rng.normal(size=mi.dim).astype(np.float32), new_attrs[i])
+    mi.compact()
+    ast = mi.base.astats
+    assert float(ast.edges[0, -1]) >= 2.0  # histogram edges cover new range
+    assert int(ast.cluster_counts.sum()) == mi.n_live
+    # the planner sees the new rows: narrow range over them -> PREFILTER,
+    # exact materialization returns precisely those rows
+    pred = stacked(P.Pred.range(0, 2.0, 3.0), 8)
+    res = mi.search(queries, pred, CompassParams(k=10, ef=32, planner=True))
+    assert np.all(np.asarray(res.stats.mode) == PREFILTER)
+    ids = np.asarray(res.ids)
+    assert np.all((ids >= 8_000_000) | (ids == -1))
+
+
+def test_vectorized_medoids_match_reference_loop():
+    rng = np.random.default_rng(7)
+    n, d, nlist = 500, 8, 12
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    cent = rng.normal(size=(nlist, d)).astype(np.float32)
+    assign = rng.integers(0, nlist - 2, n)  # clusters nlist-2, nlist-1 empty
+    got = cluster_medoids(x, assign, cent, fallback=42)
+    x2 = (x * x).sum(1)
+    for c in range(nlist):
+        members = np.where(assign == c)[0]
+        if members.size == 0:
+            assert got[c] == 42
+            continue
+        dd = x2[members] - 2.0 * (x[members] @ cent[c])
+        assert got[c] == members[np.argmin(dd)]
+
+
+# ---------------------------------------------------------------------------
+# graph maintenance primitives
+# ---------------------------------------------------------------------------
+
+
+def test_remove_nodes_reindexes_and_drops_dead_edges():
+    nb = np.array([[1, 2, 4], [0, 4, 4], [3, 0, 4], [2, 4, 4]], np.int32)  # n=4, sent=4
+    keep = np.array([True, False, True, True])
+    out = remove_nodes(nb, keep)
+    # new ids: 0->0, 2->1, 3->2; sentinel 3
+    assert out.shape == (3, 3)
+    assert out[0].tolist() == [1, 3, 3]  # edge to removed node 1 dropped, compacted
+    assert out[1].tolist() == [2, 0, 3]
+    assert out[2].tolist() == [1, 3, 3]
+
+
+def test_insert_nodes_connects_new_rows_bidirectionally():
+    rng = np.random.default_rng(0)
+    n_old, n_new, d, m = 60, 5, 8, 6
+    x = rng.normal(size=(n_old + n_new, d)).astype(np.float32)
+    cent = x[:4].copy()  # 4 crude clusters
+    from repro.core.mutable.compact import assign_to_centroids
+    assign = assign_to_centroids(x, cent)
+    base = build_index(x[:n_old], rng.uniform(size=(n_old, A)).astype(np.float32),
+                       BuildConfig(m=m, nlist=4))
+    nb = np.asarray(base.graph.neighbors)
+    out = insert_nodes(nb, x, n_old, assign, cent, m)
+    assert out.shape == (n_old + n_new, m)
+    n_total = n_old + n_new
+    for i in range(n_old, n_total):
+        fwd = out[i][out[i] < n_total]
+        assert fwd.size > 0  # new node has out-edges
+        # and at least one survivor points back (reverse edge)
+        assert any(i in out[j] for j in fwd)
+
+
+# ---------------------------------------------------------------------------
+# backends
+# ---------------------------------------------------------------------------
+
+
+def test_mutable_backend_parity_ref_vs_pallas(mbase, mcorpus):
+    _, _, queries = mcorpus
+    queries = queries[:4]
+    mi = wrap(mbase, delta_cap=16)
+    rng = np.random.default_rng(9)
+    for i in range(8):
+        mi.upsert(6_000_000 + i, (queries[i % 4] + rng.normal(size=mi.dim) * 0.05).astype(np.float32),
+                  rng.uniform(size=A).astype(np.float32))
+    mi.delete(0)
+    pred = stacked(P.Pred.range(0, 0.1, 0.9), 4)
+    res_r = mi.search(queries, pred, CompassParams(k=5, ef=32, backend="ref"))
+    res_p = mi.search(queries, pred, CompassParams(k=5, ef=32, backend="pallas"))
+    np.testing.assert_array_equal(np.asarray(res_r.ids), np.asarray(res_p.ids))
+    np.testing.assert_array_equal(np.asarray(res_r.dists), np.asarray(res_p.dists))
+
+
+# ---------------------------------------------------------------------------
+# serving: write jobs + epoch pinning
+# ---------------------------------------------------------------------------
+
+
+def test_service_writes_and_epoch_pinning(mbase, mcorpus):
+    _, _, queries = mcorpus
+    mi = wrap(mbase, delta_cap=8)
+    svc = SearchService(mi, CompassParams(k=5, ef=32), batch_size=4, max_wait_s=0.0)
+    tree = P.Pred.range(0, 0.1, 0.9)
+    for i in range(4):
+        svc.submit(queries[i], tree)
+    first = svc.run_until_idle()
+    assert {r.epoch for r in first} == {0}
+    victim = int(first[0].ids[0])
+    # queue writes that overflow the delta (9 > 8 -> compaction), plus a
+    # delete; they apply at the next round boundary, before batch formation
+    for i in range(9):
+        svc.submit_upsert(9_000_000 + i, queries[0], np.float32([0.5] * A))
+    svc.submit_delete(victim)
+    assert svc.pending_writes() == 10
+    for i in range(4):
+        svc.submit(queries[i], tree)
+    second = svc.run_until_idle()
+    assert svc.pending_writes() == 0
+    # one batch, one epoch — formed strictly after the compaction
+    assert {r.epoch for r in second} == {1}
+    assert victim not in second[0].ids
+    assert any(9_000_000 + i in second[0].ids for i in range(9))
+    st = svc.stats()
+    assert st["mutable"] and st["epoch"] == 1
+    assert st["n_upserts"] == 9 and st["n_deletes"] == 1 and st["n_compactions"] == 1
+
+
+def test_service_result_matches_direct_mutable_search(mbase, mcorpus):
+    _, _, queries = mcorpus
+    mi = wrap(mbase, delta_cap=8)
+    mi.upsert(9_500_000, queries[0], np.float32([0.5] * A))
+    pm = CompassParams(k=5, ef=32)
+    svc = SearchService(mi, pm, batch_size=2, max_wait_s=0.0)
+    tree = P.Pred.range(0, 0.1, 0.9)
+    rids = [svc.submit(queries[i], tree) for i in range(2)]
+    svc.run_until_idle()
+    direct = mi.search(queries[:2], P.stack_predicates([tree.tensor(A)] * 2), pm)
+    for i, rid in enumerate(rids):
+        got = svc.poll(rid)
+        np.testing.assert_array_equal(got.ids, np.asarray(direct.ids)[i])
+        np.testing.assert_array_equal(got.dists, np.asarray(direct.dists)[i])
+
+
+def test_immutable_service_rejects_writes(mbase, mcorpus):
+    svc = SearchService(mbase, CompassParams(k=5, ef=32))
+    with pytest.raises(ValueError, match="MutableIndex"):
+        svc.submit_upsert(1, np.zeros((mbase.dim,), np.float32), np.zeros((A,), np.float32))
+    with pytest.raises(ValueError, match="MutableIndex"):
+        svc.submit_delete(1)
+
+
+def test_service_delete_validation(mbase):
+    mi = wrap(mbase, delta_cap=8)
+    svc = SearchService(mi, CompassParams(k=5, ef=32))
+    with pytest.raises(KeyError):  # unknown id rejected at admission
+        svc.submit_delete(10**9)
+    # deleting an id that only exists as a queued upsert is admissible;
+    # application order resolves it
+    svc.submit_upsert(10**6, np.zeros((mi.dim,), np.float32), np.float32([0.5] * A))
+    svc.submit_delete(10**6)
+    # a duplicate queued delete degrades to a counted no-op at drain time
+    svc.submit_delete(3)
+    svc.submit_delete(3)
+    assert svc.apply_writes() == 4
+    assert svc.n_deletes == 2 and svc.n_write_errors == 1
+    assert 10**6 not in mi and 3 not in mi
+
+
+# ---------------------------------------------------------------------------
+# distributed: per-shard deltas, independent compaction
+# ---------------------------------------------------------------------------
+
+
+def test_distributed_mutable_per_shard_deltas(mcorpus):
+    x, attrs, queries = mcorpus
+    dmi = DistributedMutableIndex.build(x, attrs, 2, MCFG, delta_cap=8)
+    pred = stacked(P.Pred.range(0, 0.1, 0.9), len(queries))
+    pm = CompassParams(k=5, ef=64)
+    res = dmi.search(queries, pred, pm)
+    truth = brute_force(jnp.asarray(x), jnp.asarray(attrs), jnp.asarray(queries), pred, 5)
+    r = recall(np.asarray(res.ids), np.asarray(truth.ids), np.asarray(truth.dists), len(x))
+    assert r >= 0.9
+    victim = int(np.asarray(res.ids)[0, 0])
+    dmi.delete(victim)
+    dmi.upsert(4_000_000, queries[0][None], np.float32([[0.5] * A]))
+    res2 = dmi.search(queries, pred, pm)
+    ids2 = np.asarray(res2.ids)[0]
+    assert victim not in ids2 and 4_000_000 in ids2
+    # overflow only the even-id shard: its epoch advances, the other stays
+    rng = np.random.default_rng(1)
+    for i in range(10):
+        dmi.upsert(4_100_000 + 2 * i, rng.normal(size=x.shape[1]).astype(np.float32),
+                   rng.uniform(size=A).astype(np.float32))
+    assert dmi.epochs[0] >= 1 and dmi.epochs[1] == 0
+    assert 4_000_000 in np.asarray(dmi.search(queries, pred, pm).ids)[0]
