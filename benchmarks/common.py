@@ -55,6 +55,10 @@ def bench_metadata() -> dict:
         "platform": jax.default_backend(),
         "n": N,
         "d": D,
+        # full-precision per-row footprint; the quantized tier's figures
+        # (codes + amortized codebooks) are in bench_quant's rows — tracked
+        # here so the memory trajectory across PRs has a fixed anchor
+        "bytes_per_vector_full": 4 * D,
         "n_attrs": N_ATTRS,
         "n_queries": N_QUERIES,
         "k": K,

@@ -8,6 +8,7 @@
   bench_serving       -> serving-layer QPS/latency/compile counts (ours)
   bench_planner       -> planner selectivity sweep: mode/QPS/recall (ours)
   bench_updates       -> mutable-index churn: QPS/recall/compaction (ours)
+  bench_quant         -> PQ tier: recall/QPS/bytes-per-vector sweep (ours)
 
 ``python -m benchmarks.run [--only name] [--quick] [--json-dir DIR]``
 
@@ -35,6 +36,7 @@ ALL = (
     "bench_serving",
     "bench_planner",
     "bench_updates",
+    "bench_quant",
 )
 
 

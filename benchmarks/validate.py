@@ -26,6 +26,9 @@ ROW_REQUIRED = {
     # every updates row carries a phase + a qps figure; search rows add
     # workload/recall, the writes row adds the compaction profile
     "bench_updates": ("phase", "qps"),
+    # sweep rows add recall_vs_exact + quant/exact RunResults; scan rows
+    # (workload == "scan") add adc_scan/exact_scan QPS instead
+    "bench_quant": ("workload", "m", "refine_factor", "bytes_per_vector"),
 }
 
 

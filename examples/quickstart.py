@@ -1,6 +1,7 @@
 """Quickstart: build a Compass index, run general filtered queries, compare
-against exact brute force — then mutate it: upsert/delete/search round-trip
-through the mutable-index subsystem (core/mutable).
+against exact brute force — then quantize it (PQ codes + two-stage
+ADC-then-rerank search, core/quant) and mutate it: upsert/search/compact
+round-trip through the mutable-index subsystem (core/mutable).
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,6 +14,7 @@ from repro.core import predicate as P
 from repro.core.baselines import brute_force, recall
 from repro.core.index import BuildConfig, build_index
 from repro.core.mutable import MutableIndex
+from repro.core.quant import QuantConfig, QuantParams, quantize_index
 from repro.core.search import CompassParams, compass_search
 from repro.data.synthetic import make_vector_corpus
 
@@ -47,22 +49,51 @@ def main():
     print("top-1 ids:", np.asarray(res.ids)[:8, 0].tolist())
     assert r > 0.85
 
-    # -- writes: wrap the same index in the mutable subsystem ---------------
-    # (delta segment + tombstones; search fans out over base+delta and
-    # results are global ids, stable across compactions)
-    mut = MutableIndex(index, delta_cap=128)
+    # -- quantize: attach a PQ tier, search through ADC + exact rerank ------
+    # (8 uint8 codes per row instead of d float32s; stage one scores
+    # candidates from per-query lookup tables at ef*refine_factor, stage
+    # two reranks the survivors against the float32 rows)
+    qindex = quantize_index(index, QuantConfig(m=8), "l2")
+    bpv = qindex.qvecs.bytes_per_vector
+    print(f"quantized: {bpv:.1f} bytes/vector vs {4 * d} full precision "
+          f"({4 * d / bpv:.1f}x compression)")
+    pmq = CompassParams(k=10, ef=96, quant=QuantParams(refine_factor=4))
+    resq = compass_search(qindex, qj, pred, pmq)
+    rq = recall(np.asarray(resq.ids), np.asarray(truth.ids), np.asarray(truth.dists), n)
+    r_vs_exact = recall(
+        np.asarray(resq.ids), np.asarray(res.ids), np.asarray(res.dists), n
+    )
+    na = float(np.asarray(resq.stats.n_adc).mean())
+    nr = float(np.asarray(resq.stats.n_rerank).mean())
+    print(f"quantized search: recall@10={rq:.3f} (vs exact index: {r_vs_exact:.3f})  "
+          f"#ADC={na:.0f} #rerank={nr:.0f}/query")
+    assert r_vs_exact >= 0.95, "rerank contract: quantized top-k ~ exact top-k"
+
+    # -- writes: wrap the quantized index in the mutable subsystem ----------
+    # (delta segment + tombstones; delta rows are encoded against the
+    # frozen codebooks so base+delta share one ADC scan, search fans out
+    # over both tiers and results are global ids, stable across
+    # compactions)
+    mut = MutableIndex(qindex, delta_cap=128)
     pm = CompassParams(k=10, ef=96)
     q0 = queries[:1]
     hit_id = 10_000_000  # fresh id, vector right at the query, passing attrs
     mut.upsert(hit_id, q0[0], np.float32([0.3, 0.9, 0.95, 0.5]))
-    res2 = mut.search(jnp.asarray(q0), P.stack_predicates([tree.tensor(a)]), pm)
+    res2 = mut.search(jnp.asarray(q0), P.stack_predicates([tree.tensor(a)]), pmq)
     ids2 = np.asarray(res2.ids)[0]
     print(f"after upsert: top-1 id={ids2[0]} (expected {hit_id}, epoch {mut.epoch})")
     assert ids2[0] == hit_id
+    mut.compact()  # folds the delta; re-encodes it against the frozen codebooks
+    assert mut.base.qvecs is not None
+    print(f"after compact: epoch {mut.epoch}, decode-MSE drift "
+          f"{mut.quant_drift_log[-1]:.4f} (train {float(mut.base.qvecs.train_mse):.4f})")
+    res2b = mut.search(jnp.asarray(q0), P.stack_predicates([tree.tensor(a)]), pmq)
+    assert np.asarray(res2b.ids)[0][0] == hit_id
     mut.delete(hit_id)
     res3 = mut.search(jnp.asarray(q0), P.stack_predicates([tree.tensor(a)]), pm)
     assert hit_id not in np.asarray(res3.ids)[0]
-    print("after delete: id gone; upsert -> search -> delete round-trip OK")
+    print("after delete: id gone; quantize -> upsert -> search -> compact "
+          "-> delete round-trip OK")
 
 
 if __name__ == "__main__":

@@ -157,6 +157,8 @@ def postfilter_search(
         n_steps=total_steps,
         n_bcalls=jnp.zeros((bsz,), jnp.int32),
         n_clusters_ranked=jnp.zeros((bsz,), jnp.int32),
+        n_adc=jnp.zeros((bsz,), jnp.int32),
+        n_rerank=jnp.zeros((bsz,), jnp.int32),
         mode=jnp.full((bsz,), POSTFILTER, jnp.int32),
         efs_final=last.stats.efs_final,
     )

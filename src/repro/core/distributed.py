@@ -21,7 +21,7 @@ and by examples) and the abstract 512-way dry-run used by launch/dryrun.py.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +33,8 @@ from .clustered_attrs import ClusteredAttrs
 from .graph_build import GraphIndex
 from .index import BuildConfig, CompassIndex, build_index
 from .planner.stats import AttrStats
+from .quant.encode import QuantizedVectors, quantize_index
+from .quant.params import QuantConfig
 from .search import CompassParams, compass_search
 
 
@@ -53,6 +55,16 @@ class ShardedIndex(NamedTuple):
     hist_edges: jax.Array  # (S, A, n_bins + 1)
     hist_cluster_edges: jax.Array  # (S, nlist, A, n_cluster_bins + 1)
     hist_cluster_counts: jax.Array  # (S, nlist)
+    # quantized tier (core/quant), sharded exactly like the row arrays:
+    # every shard owns the codes of its own records plus its own codebooks
+    # (built per shard, so no cross-shard codebook broadcast), and the
+    # two-stage ADC-then-rerank runs *inside* the shard — only the final
+    # (B, k) exact-reranked candidates enter the global merge.  None on an
+    # unquantized index (pytree-structural, like CompassIndex.qvecs).
+    pq_codes: Optional[jax.Array] = None  # (S, n_loc + 1, m) uint8
+    pq_codebooks: Optional[jax.Array] = None  # (S, m, ks, dsub)
+    pq_mean: Optional[jax.Array] = None  # (S, d)
+    pq_train_mse: Optional[jax.Array] = None  # (S,)
 
     @property
     def n_shards(self) -> int:
@@ -62,10 +74,19 @@ class ShardedIndex(NamedTuple):
     def n_local(self) -> int:
         return self.vectors.shape[1] - 1
 
+    @property
+    def quantized(self) -> bool:
+        return self.pq_codes is not None
+
 
 def _to_local_index(s: ShardedIndex) -> CompassIndex:
     """Inside shard_map: strip the (1,) shard axis into a CompassIndex."""
     sq = lambda a: a[0]
+    qvecs = None
+    if s.pq_codes is not None:
+        qvecs = QuantizedVectors(
+            sq(s.pq_codes), sq(s.pq_codebooks), sq(s.pq_mean), sq(s.pq_train_mse)
+        )
     return CompassIndex(
         vectors=sq(s.vectors),
         attrs=sq(s.attrs),
@@ -78,20 +99,32 @@ def _to_local_index(s: ShardedIndex) -> CompassIndex:
         astats=AttrStats(
             sq(s.hist_edges), sq(s.hist_cluster_edges), sq(s.hist_cluster_counts)
         ),
+        qvecs=qvecs,
     )
 
 
 def build_sharded_index(
-    vectors: np.ndarray, attrs: np.ndarray, n_shards: int, cfg: BuildConfig = BuildConfig()
+    vectors: np.ndarray,
+    attrs: np.ndarray,
+    n_shards: int,
+    cfg: BuildConfig = BuildConfig(),
+    quant: QuantConfig | None = None,
 ) -> ShardedIndex:
     """Host-side build: split the corpus round-robin, build per-shard
-    indices independently (as each host would), stack the leaves."""
+    indices independently (as each host would), stack the leaves.
+
+    With ``quant``, each shard trains its *own* codebooks on its own rows
+    (embarrassingly parallel, like the rest of the build) and the stacked
+    ``pq_*`` leaves carry the quantized tier.
+    """
     n = vectors.shape[0]
     per = n // n_shards
     parts = []
     for s in range(n_shards):
         sl = slice(s * per, (s + 1) * per)
         idx = build_index(vectors[sl], attrs[sl], cfg)
+        if quant is not None:
+            idx = quantize_index(idx, quant, cfg.metric)
         parts.append(idx)
     return ShardedIndex(
         vectors=jnp.stack([p.vectors for p in parts]),
@@ -107,6 +140,16 @@ def build_sharded_index(
         hist_edges=jnp.stack([p.astats.edges for p in parts]),
         hist_cluster_edges=jnp.stack([p.astats.cluster_edges for p in parts]),
         hist_cluster_counts=jnp.stack([p.astats.cluster_counts for p in parts]),
+        pq_codes=(
+            None if quant is None else jnp.stack([p.qvecs.codes for p in parts])
+        ),
+        pq_codebooks=(
+            None if quant is None else jnp.stack([p.qvecs.codebooks for p in parts])
+        ),
+        pq_mean=(None if quant is None else jnp.stack([p.qvecs.mean for p in parts])),
+        pq_train_mse=(
+            None if quant is None else jnp.stack([p.qvecs.train_mse for p in parts])
+        ),
     )
 
 
@@ -114,14 +157,30 @@ def make_distributed_search(mesh, pm: CompassParams):
     """Returns jitted fn(sharded_index, queries, pred) -> (ids, dists).
 
     ids are global record ids (shard * n_local + local).
+
+    With ``pm.quant`` set (and a quantized sharded index), every shard runs
+    the full two-stage quantized search locally — ADC candidate generation
+    *and* exact rerank against its own float32 rows — so the all-gathered
+    (B, k) candidates are already exact distances and the global top-k
+    merge is unchanged: per-shard rerank before the merge, never after.
     """
     axes = tuple(mesh.axis_names)
-    shard_spec = ShardedIndex(
-        vectors=P(axes), attrs=P(axes), neighbors=P(axes), entry=P(axes),
-        centroids=P(axes), medoids=P(axes), order=P(axes), sorted_vals=P(axes),
-        offsets=P(axes), assignments=P(axes), hist_edges=P(axes),
-        hist_cluster_edges=P(axes), hist_cluster_counts=P(axes),
-    )
+
+    def _shard_spec(quantized: bool) -> ShardedIndex:
+        # the pq_* spec leaves must mirror the *index's* pytree structure
+        # (None = empty subtree), not pm.quant: an exact search over an
+        # index that happens to carry codes is the documented default, and
+        # pm.quant over a codeless index must die with the engine's
+        # "requires a quantized index" error, not a tree mismatch
+        pq = P(axes) if quantized else None
+        return ShardedIndex(
+            vectors=P(axes), attrs=P(axes), neighbors=P(axes), entry=P(axes),
+            centroids=P(axes), medoids=P(axes), order=P(axes),
+            sorted_vals=P(axes), offsets=P(axes), assignments=P(axes),
+            hist_edges=P(axes), hist_cluster_edges=P(axes),
+            hist_cluster_counts=P(axes),
+            pq_codes=pq, pq_codebooks=pq, pq_mean=pq, pq_train_mse=pq,
+        )
 
     def local_search(s_index: ShardedIndex, queries, lo, hi):
         index = _to_local_index(s_index)
@@ -140,17 +199,20 @@ def make_distributed_search(mesh, pm: CompassParams):
         neg, sel = jax.lax.top_k(-flat_d, pm.k)
         return jnp.take_along_axis(flat_i, sel, axis=1), -neg
 
-    fn = jax.shard_map(
-        local_search,
-        mesh=mesh,
-        in_specs=(shard_spec, P(), P(), P()),
-        out_specs=(P(), P()),
-        check_vma=False,
-    )
+    def _fn(quantized: bool):
+        return jax.shard_map(
+            local_search,
+            mesh=mesh,
+            in_specs=(_shard_spec(quantized), P(), P(), P()),
+            out_specs=(P(), P()),
+            check_vma=False,
+        )
 
     @jax.jit
     def search(s_index: ShardedIndex, queries, pred: PR.Predicate):
-        return fn(s_index, queries, pred.lo, pred.hi)
+        # trace-time branch on the index's own structure (like the engine's
+        # qvecs handling) — each variant compiles its own executable
+        return _fn(s_index.pq_codes is not None)(s_index, queries, pred.lo, pred.hi)
 
     return search
 
@@ -274,6 +336,8 @@ class DistributedMutableIndex:
             n_cdist=sum(p.stats.n_cdist for p in parts),
             n_bcalls=sum(p.stats.n_bcalls for p in parts),
             n_clusters_ranked=sum(p.stats.n_clusters_ranked for p in parts),
+            n_adc=sum(p.stats.n_adc for p in parts),
+            n_rerank=sum(p.stats.n_rerank for p in parts),
             n_steps=functools.reduce(jnp.maximum, [p.stats.n_steps for p in parts]),
         )
         from .engine.state import SearchResult

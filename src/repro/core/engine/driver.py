@@ -39,9 +39,12 @@ from typing import TYPE_CHECKING
 
 from .. import predicate as P
 from ..planner import plan as qplan
+from ..quant import encode as Q
+from ..quant.params import QuantParams
+from ..quant.rerank import rerank_batch
 from . import btree_iter, graph_iter
 from . import state as S
-from .backend import VisitBackend, resolve_backend
+from .backend import QuantAdapter, VisitBackend, resolve_backend
 from .state import EngineState, FixedQueue, SearchResult, SearchStats
 
 if TYPE_CHECKING:  # runtime import would cycle (index -> planner -> engine)
@@ -54,7 +57,11 @@ if TYPE_CHECKING:  # runtime import would cycle (index -> planner -> engine)
 #: engine/3: mutable-index tombstone masking — dead records keep routing in
 #: the visit loop but are ANDed out of the result queue and the PREFILTER
 #: adoption (no-op for immutable indices: index.live is None).
-ENGINE_VERSION = "engine/3"
+#: engine/4: quantized tier — with CompassParams.quant set, stage one runs
+#: the loop at ef*refine_factor with ADC scoring (kernels/pq_score) and
+#: stage two reranks the survivors exactly; quant=None paths are bitwise
+#: unchanged (trace-time branch on index.qvecs / pm.quant).
+ENGINE_VERSION = "engine/4"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,6 +95,9 @@ class CompassParams:
     # 0 => 8 * ef (the cost-model crossover, see planner/plan.py)
     postfilter_min_sel: float = 0.9  # POSTFILTER eligible above this
     # estimated selectivity ("selectivity ≈ 1": the filter is near-vacuous)
+    quant: QuantParams | None = None  # quantized-tier search (DESIGN.md
+    # §Quantization; requires index.qvecs — i.e. quantize_index).  None
+    # (the default) keeps every program bitwise identical to exact search.
 
     def resolved(self) -> "CompassParams":
         ef_cap = self.ef_cap or 2 * self.ef + 32
@@ -112,11 +122,17 @@ def _search_one(
     backend: VisitBackend,
     needs_rank: bool = True,
     plan: "qplan.PlannedBatch | None" = None,
+    lut=None,
+    q_resid=None,
 ) -> SearchResult:
     n = index.n_records
     nlist = index.nlist
     T = pred.lo.shape[0]
     chosen = P.chosen_attrs(pred)
+    if lut is not None:
+        # quantized tier: route VISIT scoring through this query's ADC
+        # table; candidate generation (iterators, queues) is untouched
+        backend = QuantAdapter(backend, lut, q_resid)
 
     # B.OPEN / G.OPEN: exact centroid ranking shared by the relational
     # iterator and the adaptive entry.  `cdists` is computed batched in
@@ -132,6 +148,8 @@ def _search_one(
         n_steps=zero,
         n_bcalls=zero,
         n_clusters_ranked=zero,
+        n_adc=zero,
+        n_rerank=zero,
         mode=mode,
         efs_final=jnp.int32(pm.efs0),
     )
@@ -165,7 +183,10 @@ def _search_one(
             if index.live is not None:  # tombstoned rows stay out of results
                 passing = passing & index.live[safe]
             res = s.res.merge(jnp.where(passing, plan.dist, S.INF), safe)
-            stats2 = s.stats._replace(n_dist=s.stats.n_dist + jnp.sum(plan.mask))
+            if lut is not None:  # the planner scan scored through ADC tables
+                stats2 = s.stats._replace(n_adc=s.stats.n_adc + jnp.sum(plan.mask))
+            else:
+                stats2 = s.stats._replace(n_dist=s.stats.n_dist + jnp.sum(plan.mask))
             return s._replace(
                 res=res,
                 visited=visited,
@@ -219,29 +240,72 @@ def _search_one(
 
 @functools.partial(jax.jit, static_argnames=("pm",))
 def compass_search(
-    index: CompassIndex, queries: jax.Array, pred: P.Predicate, pm: CompassParams
+    index: CompassIndex,
+    queries: jax.Array,
+    pred: P.Predicate,
+    pm: CompassParams,
+    luts: jax.Array | None = None,
+    q_resids: jax.Array | None = None,
 ) -> SearchResult:
-    """Batched filtered search. queries: (B, d); pred arrays: (B, T, A)."""
+    """Batched filtered search. queries: (B, d); pred arrays: (B, T, A).
+
+    With ``pm.quant`` set (and a quantized index), this is the two-stage
+    quantized search: stage one runs the ordinary loop at
+    ``ef * refine_factor`` with ADC scoring, stage two reranks the
+    survivors exactly and returns the top ``pm.k`` (quant/rerank.py).
+    ``luts``/``q_resids`` optionally supply the per-query ADC tables and
+    centered residuals (built here when omitted) — the mutable fan-out
+    passes its own so base and delta share one table build per query.
+    """
+    quant = pm.quant is not None
+    if quant and index.qvecs is None:
+        raise ValueError(
+            "CompassParams.quant requires a quantized index "
+            "(attach codes with core.quant.quantize_index first)"
+        )
+    k_out = pm.k
+    if quant:
+        # stage one: widen the result queue so the approximate ADC ordering
+        # still captures the true top-k for stage two to recover
+        rf = pm.quant.refine_factor
+        pm = dataclasses.replace(pm, ef=pm.ef * rf, k=pm.ef * rf)
     pm = pm.resolved()
     backend = resolve_backend(pm.backend)
     # One blocked (B, C) centroid scan for the whole batch (B.OPEN / G.OPEN)
     # — skipped entirely when nothing consumes the ranking (pure-graph
     # ablations with non-adaptive entry), so SearchStats.n_cdist is the true
-    # count rather than an unconditional nlist.
+    # count rather than an unconditional nlist.  The coarse layer stays
+    # full-precision under quantization (standard IVF-PQ).
     needs_rank = pm.use_btree or (pm.use_graph and pm.adaptive_entry)
     if needs_rank:
         cdists = backend.centroid_scores(index, queries, pm.metric)
     else:
         cdists = jnp.zeros((queries.shape[0], index.nlist), jnp.float32)
-    if pm.planner:
-        planned = qplan.plan_batch(index, queries, pred, pm, backend)
-        return jax.vmap(
-            lambda q, cd, lo, hi, pl: _search_one(
-                index, q, cd, P.Predicate(lo, hi), pm, backend, needs_rank, pl
-            )
-        )(queries, cdists, pred.lo, pred.hi, planned)
-    return jax.vmap(
-        lambda q, cd, lo, hi: _search_one(
-            index, q, cd, P.Predicate(lo, hi), pm, backend, needs_rank
+    if quant:
+        # per-query ADC tables, built batched outside the vmap; derived
+        # independently so a caller supplying one of the pair still works
+        if luts is None:
+            luts = Q.build_luts(index.qvecs, queries, pm.metric)  # (B, m, ks)
+        if q_resids is None:
+            q_resids = Q.residual_queries(index.qvecs, queries)  # (B, d_pad)
+    else:
+        luts = q_resids = None
+    planned = (
+        qplan.plan_batch(index, queries, pred, pm, backend, luts=luts, q_resids=q_resids)
+        if pm.planner
+        else None
+    )
+    # one vmap for all planner x quant combinations: None is a leafless
+    # pytree, so an absent plan / lut / residual passes through the batch
+    # axes untouched and _search_one's trace-time `is None` branches see
+    # exactly what a narrower call signature would have passed
+    res = jax.vmap(
+        lambda q, cd, lo, hi, pl, lut, qr: _search_one(
+            index, q, cd, P.Predicate(lo, hi), pm, backend, needs_rank, pl, lut, qr
         )
-    )(queries, cdists, pred.lo, pred.hi)
+    )(queries, cdists, pred.lo, pred.hi, planned, luts, q_resids)
+    if quant:
+        res = rerank_batch(
+            index, queries, pred, res, k_out, pm.metric, backend, pm.quant.rerank
+        )
+    return res

@@ -75,13 +75,18 @@ def dedup_new(ids: jax.Array, mask: jax.Array) -> jax.Array:
 
 
 class SearchStats(NamedTuple):
-    n_dist: jax.Array  # base-vector distance computations (paper #Comp)
+    n_dist: jax.Array  # full-precision distance computations (paper #Comp;
+    # includes the quantized tier's stage-two rerank rows when those read
+    # the float32 table — rerank="full")
     n_cdist: jax.Array  # centroid distance computations; 0 when the exact
     # centroid ranking has no consumer (use_btree=False and non-adaptive
     # entry) and the scan is skipped entirely
     n_steps: jax.Array  # loop iterations
     n_bcalls: jax.Array  # relational injections
     n_clusters_ranked: jax.Array  # clusters actually opened by B.NEXT
+    n_adc: jax.Array  # quantized (ADC table-lookup) scores — stage one of
+    # the quantized tier; 0 whenever CompassParams.quant is off
+    n_rerank: jax.Array  # stage-two exact distances of the quantized tier
     mode: jax.Array  # planner execution mode (planner.plan.MODE_NAMES index);
     # COOPERATIVE when the planner is off
     efs_final: jax.Array
@@ -137,13 +142,19 @@ def visit(index, q, pred, st: EngineState, ids, mask, pm, backend) -> EngineStat
     if index.live is not None:
         passing = passing & index.live[safe]
     res = st.res.merge(jnp.where(passing, dist, INF), safe)
-    n_dist = st.stats.n_dist + jnp.sum(mask)
+    # A quant-adapted backend (backend.QuantAdapter) scores visits through
+    # the ADC tables, so the work lands in n_adc, not the full-precision
+    # #Comp counter.  Trace-time branch: counts_as is a plain attribute.
+    if getattr(backend, "counts_as", "dist") == "adc":
+        stats = st.stats._replace(n_adc=st.stats.n_adc + jnp.sum(mask))
+    else:
+        stats = st.stats._replace(n_dist=st.stats.n_dist + jnp.sum(mask))
     return st._replace(
         cand=cand,
         gtop=gtop,
         res=res,
         visited=visited,
-        stats=st.stats._replace(n_dist=n_dist),
+        stats=stats,
     )
 
 

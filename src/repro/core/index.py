@@ -32,6 +32,7 @@ from .clustered_attrs import ClusteredAttrs, build_clustered_attrs
 from .graph_build import GraphIndex, build_graph
 from .kmeans import kmeans
 from .planner.stats import AttrStats, build_attr_stats
+from .quant.encode import QuantizedVectors
 
 
 class CompassIndex(NamedTuple):
@@ -52,6 +53,12 @@ class CompassIndex(NamedTuple):
     # (state.visit / the PREFILTER adoption both AND with this mask).  None
     # on a plain immutable index: zero cost until mutability is in play.
     live: jax.Array | None = None
+    # product-quantized tier (core/quant): uint8 codes + frozen per-subspace
+    # codebooks, attached by ``quantize_index``.  Scored through the ADC
+    # tables when ``CompassParams.quant`` is set; ``None`` (the default)
+    # keeps every exact-search program bitwise identical to pre-quant code
+    # (trace-time branch on the pytree treedef, like ``live``).
+    qvecs: QuantizedVectors | None = None
 
     @property
     def n_records(self) -> int:

@@ -7,7 +7,7 @@ Public surface:
   * :func:`mutable_search` — the jitted base+delta fan-out search.
   * :class:`Snapshot` / :class:`DeltaView` — the epoch-swapped read state.
 """
-from .delta import DeltaView, delta_topk
+from .delta import DeltaView, delta_topk, delta_topk_quantized
 from .mutable_index import GID_SENTINEL, MutableIndex, Snapshot, mutable_search
 
 __all__ = [
@@ -16,5 +16,6 @@ __all__ = [
     "MutableIndex",
     "Snapshot",
     "delta_topk",
+    "delta_topk_quantized",
     "mutable_search",
 ]

@@ -39,6 +39,7 @@ from ..clustered_attrs import build_clustered_attrs
 from ..graph_build import GraphIndex, _repair_connectivity, insert_nodes, remove_nodes
 from ..index import BuildConfig, CompassIndex, cluster_medoids
 from ..planner.stats import build_attr_stats
+from ..quant.encode import QuantizedVectors, encode_rows
 
 
 def assign_to_centroids(vectors: np.ndarray, centroids: np.ndarray, metric: str = "l2") -> np.ndarray:
@@ -60,8 +61,17 @@ def fold_index(
     old_assign: np.ndarray,  # (n_old,) old cluster assignments
     centroids: np.ndarray,  # (nlist, d) — carried over unchanged
     cfg: BuildConfig,
+    qvecs: QuantizedVectors | None = None,  # old quantized tier, if any
 ) -> tuple[CompassIndex, np.ndarray]:
-    """Fold a (keep_mask, delta rows) pair into a fresh CompassIndex."""
+    """Fold a (keep_mask, delta rows) pair into a fresh CompassIndex.
+
+    With ``qvecs``, the quantized tier folds too: surviving rows carry
+    their uint8 codes over (codes are per-row, independent of graph or
+    cluster structure), and the appended delta rows are encoded against
+    the *frozen* codebooks — retraining is the caller's explicit decision
+    (``MutableIndex.compact(retrain_codebooks=True)``), because new
+    codebooks invalidate every cached ADC executable at once.
+    """
     vectors = np.asarray(vectors, np.float32)
     attrs = np.asarray(attrs, np.float32)
     n_new, d = vectors.shape
@@ -101,6 +111,20 @@ def fold_index(
     )
     vpad = np.concatenate([vectors, np.zeros((1, d), np.float32)], 0)
     apad = np.concatenate([attrs, np.full((1, attrs.shape[1]), np.inf, np.float32)], 0)
+    new_qvecs = None
+    if qvecs is not None:
+        kept_codes = np.asarray(qvecs.codes)[:-1][np.asarray(keep_mask, bool)]
+        new_rows = vectors[n_kept:]
+        if new_rows.shape[0]:
+            delta_codes = np.asarray(encode_rows(qvecs.codebooks, qvecs.mean, new_rows))
+        else:
+            delta_codes = np.zeros((0, qvecs.m), np.uint8)
+        codes = np.concatenate(
+            [kept_codes, delta_codes, np.zeros((1, qvecs.m), np.uint8)], axis=0
+        )
+        new_qvecs = QuantizedVectors(
+            jnp.asarray(codes), qvecs.codebooks, qvecs.mean, qvecs.train_mse
+        )
     index = CompassIndex(
         jnp.asarray(vpad),
         jnp.asarray(apad),
@@ -109,5 +133,6 @@ def fold_index(
         jnp.asarray(medoids),
         cattrs,
         astats,
+        qvecs=new_qvecs,
     )
     return index, assign

@@ -16,24 +16,31 @@ earlier stays internally consistent (epoch swap, see mutable_index.py).
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+
+from ..quant.encode import QuantizedVectors
 
 
 class DeltaView(NamedTuple):
     """Device-side snapshot of the delta segment (a JAX pytree).
 
     Mirrors just enough of :class:`~repro.core.index.CompassIndex`'s row
-    layout (sentinel-padded ``vectors``/``attrs``, ``n_records``) that the
-    engine's ``VisitBackend.scan_scores`` accepts it unchanged.
+    layout (sentinel-padded ``vectors``/``attrs``, ``n_records``, optional
+    ``qvecs``) that the engine's ``VisitBackend.scan_scores`` /
+    ``scan_scores_quantized`` accept it unchanged.
     """
 
     vectors: jax.Array  # (cap + 1, d) — sentinel row cap is zeros
     attrs: jax.Array  # (cap + 1, A) — sentinel row is +inf (fails ranges)
     gids: jax.Array  # (cap,) int32 global record ids; -1 on empty slots
     valid: jax.Array  # (cap,) bool — occupied and not superseded/deleted
+    # delta rows encoded against the *base's frozen codebooks* (attached by
+    # MutableIndex.snapshot when the base carries a quantized tier), so the
+    # quantized scan is one ADC pass over base+delta with shared tables
+    qvecs: Optional[QuantizedVectors] = None
 
     @property
     def n_records(self) -> int:
@@ -61,3 +68,52 @@ def delta_topk(delta: DeltaView, queries, pred, k: int, metric: str, backend):
     top_d = -neg
     top_g = jnp.where(jnp.isfinite(top_d), jnp.take(delta.gids, sel), jnp.int32(-1))
     return top_g, top_d, jnp.sum(delta.valid).astype(jnp.int32)
+
+
+def delta_topk_quantized(
+    delta: DeltaView, queries, pred, k: int, metric: str, backend, quant,
+    luts=None, q_resids=None,
+):
+    """Quantized two-stage top-k over the delta segment.
+
+    Stage one is the same brute scan as :func:`delta_topk` but over the PQ
+    codes (``VisitBackend.scan_scores_quantized`` — the pq_score kernel's
+    (B, cap) grid on the pallas path, exactly like the planner's PREFILTER
+    materialization), widened to ``k * refine_factor`` survivors; stage two
+    re-scores those exactly per ``quant.rerank`` ("full": the float32 delta
+    rows, "decode": decoded codes, "none": trust the ADC order).
+
+    ``luts``/``q_resids`` optionally supply the per-query ADC tables —
+    the delta's codebooks are the base's frozen codebooks (see
+    DeltaView.qvecs), so ``mutable_search`` builds the tables once and
+    shares them with the base search; built here when omitted.
+
+    Returns (gids (B, k') int32 with -1 padding, dists (B, k') f32 with
+    +inf padding, n_adc (B,) int32 stage-one table scores, n_rerank (B,)
+    int32 stage-two exact distances) with k' = min(k, cap).
+    """
+    from ..quant import encode as Q
+    from ..quant.rerank import rerank_candidates
+
+    b = queries.shape[0]
+    cap = delta.cap
+    ids = jnp.broadcast_to(jnp.arange(cap, dtype=jnp.int32), (b, cap))
+    mask = jnp.broadcast_to(delta.valid, (b, cap))
+    if luts is None:
+        luts = Q.build_luts(delta.qvecs, queries, metric)
+        q_resids = Q.residual_queries(delta.qvecs, queries)
+    dist, passing = backend.scan_scores_quantized(
+        delta, q_resids, luts, pred, ids, mask, metric
+    )
+    dist = jnp.where(passing, dist, jnp.inf)
+    n_adc = jnp.sum(mask, axis=1).astype(jnp.int32)
+    k1 = min(k * quant.refine_factor, cap)
+    neg1, sel1 = jax.lax.top_k(-dist, k1)  # stage-one ADC survivors
+    cand_mask = jnp.isfinite(-neg1)
+    # stage two is the same rerank step the base tier runs (quant/rerank.py)
+    sel2, top_d, n_rerank = rerank_candidates(
+        delta, queries, pred, sel1, -neg1, cand_mask, k, metric, backend, quant.rerank
+    )
+    slots = jnp.take_along_axis(sel1, sel2, axis=1)
+    top_g = jnp.where(jnp.isfinite(top_d), jnp.take(delta.gids, slots), jnp.int32(-1))
+    return top_g, top_d, n_adc, n_rerank

@@ -44,8 +44,17 @@ from .. import predicate as P
 from ..engine.backend import resolve_backend
 from ..engine.state import SearchResult
 from ..index import BuildConfig, CompassIndex, build_index
+from ..quant.encode import (
+    QuantizedVectors,
+    build_luts,
+    encode_rows,
+    quant_mse,
+    quantize_vectors,
+    residual_queries,
+)
+from ..quant.params import QuantConfig
 from .compact import fold_index
-from .delta import DeltaView, delta_topk
+from .delta import DeltaView, delta_topk, delta_topk_quantized
 
 GID_SENTINEL = -1  # empty result slot / empty delta slot
 
@@ -68,20 +77,43 @@ def mutable_search(
 
     Returns a :class:`SearchResult` whose ids are *global ids* (-1 padding).
     Stats are the base engine stats with the delta's scanned rows folded
-    into ``n_dist``.
+    into ``n_dist`` — or, when ``pm.quant`` is active and the snapshot
+    carries delta codes, into ``n_adc``/``n_rerank``: the delta then runs
+    the same two-stage ADC-scan-then-exact-rerank as the base
+    (delta.delta_topk_quantized), so both tiers obey one scoring contract.
     """
     from ..search import compass_search  # local: engine -> mutable would cycle
 
     pmr = pm.resolved()
     backend = resolve_backend(pmr.backend)
-    base = compass_search(index, queries, pred, pm)
+    quant_delta = pm.quant is not None and delta.qvecs is not None
+    if quant_delta:
+        # one ADC table build per query for the whole fan-out: the delta's
+        # codebooks ARE the base's frozen codebooks (snapshot), so the same
+        # (B, m, ks) tables score both tiers
+        luts = build_luts(delta.qvecs, queries, pmr.metric)
+        q_resids = residual_queries(delta.qvecs, queries)
+    else:
+        luts = q_resids = None
+    base = compass_search(index, queries, pred, pm, luts, q_resids)
     bg = jnp.take(base_gids, jnp.clip(base.ids, 0, index.n_records), axis=0)
     bg = jnp.where(jnp.isfinite(base.dists), bg, jnp.int32(GID_SENTINEL))
-    dg, dd, n_scanned = delta_topk(delta, queries, pred, pmr.k, pmr.metric, backend)
+    if quant_delta:
+        dg, dd, n_adc, n_rr = delta_topk_quantized(
+            delta, queries, pred, pmr.k, pmr.metric, backend, pm.quant,
+            luts, q_resids,
+        )
+        stats = base.stats._replace(
+            n_adc=base.stats.n_adc + n_adc, n_rerank=base.stats.n_rerank + n_rr
+        )
+        if pm.quant.rerank == "full":  # stage two read float32 delta rows
+            stats = stats._replace(n_dist=stats.n_dist + n_rr)
+    else:
+        dg, dd, n_scanned = delta_topk(delta, queries, pred, pmr.k, pmr.metric, backend)
+        stats = base.stats._replace(n_dist=base.stats.n_dist + n_scanned)
     all_d = jnp.concatenate([base.dists, dd], axis=1)
     all_g = jnp.concatenate([bg, dg], axis=1)
     neg, sel = jax.lax.top_k(-all_d, pmr.k)
-    stats = base.stats._replace(n_dist=base.stats.n_dist + n_scanned)
     return SearchResult(jnp.take_along_axis(all_g, sel, axis=1), -neg, stats)
 
 
@@ -102,6 +134,7 @@ class MutableIndex:
         cfg: BuildConfig | None = None,
         metric: str = "l2",
         gids: np.ndarray | None = None,
+        quant_cfg: QuantConfig | None = None,
     ):
         if base.astats is None:
             raise ValueError("MutableIndex requires an index built by build_index (astats)")
@@ -115,9 +148,20 @@ class MutableIndex:
             hist_bins=base.astats.edges.shape[1] - 1,
             cluster_hist_bins=base.astats.cluster_edges.shape[2] - 1,
         )
+        # the quantized tier's *training* config, used only by
+        # compact(retrain_codebooks=True): QuantizedVectors carries no
+        # training hyperparameters (it is a pure-array pytree), so without
+        # this the retrain would fall back to shape inference and silently
+        # drop a non-default iters/seed choice
+        self._quant_cfg = quant_cfg
         self.delta_cap = int(delta_cap)
         self.auto_compact = bool(auto_compact)
         self.compaction_log: list[float] = []  # fold wall-clock seconds
+        # quantized-tier drift: decode MSE of the folded table against the
+        # frozen codebooks, appended at every compaction (compare against
+        # base.qvecs.train_mse to decide when to retrain — DESIGN.md
+        # §Quantization on codebook staleness)
+        self.quant_drift_log: list[float] = []
         self._epoch = 0
         self._snap: Snapshot | None = None
         self._install_base(base, gids)
@@ -267,6 +311,20 @@ class MutableIndex:
                     np.concatenate([self._gids, [GID_SENTINEL]]).astype(np.int32)
                 )
             base_gids = self._base_gids_dev
+            dqv = None
+            if self._base.qvecs is not None:
+                # encode the delta buffer against the base's frozen
+                # codebooks so the quantized scan covers both tiers; cap is
+                # small and the snapshot is cached until the next write, so
+                # this stays off the search hot path
+                bq = self._base.qvecs
+                dcodes = np.asarray(encode_rows(bq.codebooks, bq.mean, self._dvec))
+                dcodes = np.concatenate(
+                    [dcodes, np.zeros((1, bq.m), np.uint8)], axis=0
+                )
+                dqv = QuantizedVectors(
+                    jnp.asarray(dcodes), bq.codebooks, bq.mean, bq.train_mse
+                )
             delta = DeltaView(
                 jnp.asarray(
                     np.concatenate([self._dvec, np.zeros((1, self.dim), np.float32)], 0)
@@ -278,6 +336,7 @@ class MutableIndex:
                 ),
                 jnp.asarray(self._dgid.astype(np.int32)),
                 jnp.asarray(self._dvalid),
+                qvecs=dqv,
             )
             self._snap = Snapshot(index, base_gids, delta, self._epoch)
         return self._snap
@@ -301,7 +360,7 @@ class MutableIndex:
 
     # -- maintenance -------------------------------------------------------
 
-    def compact(self) -> None:
+    def compact(self, retrain_codebooks: bool = False) -> None:
         """Fold the delta into a fresh base and swap epochs.
 
         Local maintenance, not a rebuild: tombstoned rows leave the graph
@@ -309,6 +368,15 @@ class MutableIndex:
         (``insert_nodes``), clustered runs are re-sorted, medoids and
         planner stats refreshed (compact.py).  The swap is the last step,
         so concurrent readers keep their old snapshot untouched.
+
+        When the base carries a quantized tier, the fold *re-encodes* the
+        delta rows against the frozen codebooks (kept rows carry their
+        codes over) and records the folded table's decode MSE in
+        ``quant_drift_log`` — the staleness signal.  Codebooks are only
+        retrained on an explicit ``compact(retrain_codebooks=True)``
+        (auto-compaction never retrains: retraining changes every ADC table
+        and thus every cached executable, so it must be an operator
+        decision, not an overflow side effect).
         """
         t0 = time.perf_counter()
         keep = self._live[:-1]
@@ -322,7 +390,25 @@ class MutableIndex:
             self._assign,
             self._centroids,
             self._cfg,
+            qvecs=self._base.qvecs,
         )
+        if index.qvecs is not None:
+            if retrain_codebooks:
+                # prefer the explicit training config (construction-time
+                # ``quant_cfg``); shape inference recovers only the
+                # *effective* trained shapes — NOT iters/seed, and a ks
+                # that train_codebooks clipped to a small original corpus
+                # stays clipped forever even after the corpus grows — so a
+                # non-default configuration must be passed in to survive
+                cfg = self._quant_cfg or QuantConfig(
+                    m=index.qvecs.m,
+                    ks=index.qvecs.ks,
+                    residual=bool(np.any(np.asarray(index.qvecs.mean))),
+                )
+                index = index._replace(
+                    qvecs=quantize_vectors(vec, cfg, self._cfg.metric)
+                )
+            self.quant_drift_log.append(quant_mse(index.qvecs, vec))
         # publish: install the new epoch, then reset the write tiers
         self._install_base(index, gids)
         self._assign = assign

@@ -61,6 +61,15 @@ COST_COOP_EF = 8.0  # per result-slot cost of the cooperative loop: queue
 COST_POST_ROW = 1.5  # per-visit cost of the graph-only loop; the loop must
 #   oversample by 1/selectivity to fill ef passing results.
 SEL_FLOOR = 1e-4  # avoid division blow-up on est_sel ~ 0
+# -- quantized-tier costs (CompassParams.quant active) ----------------------
+# ADC scores a row with m table lookups instead of a d-dim gather+reduce:
+# bytes moved drop from 4*d to m per row, so a scanned row is ~3x cheaper
+# (bench_quant's adc_scan rows are the calibration source).  Stage-two
+# rerank reads full-precision rows again; PREFILTER reranks at most its
+# materialized matches while the loop modes rerank the whole widened result
+# queue, so the rerank term is charged per arm, not globally.
+COST_ADC_ROW = 0.35
+COST_RERANK_ROW = 1.0
 
 
 class QueryPlan(NamedTuple):
@@ -85,11 +94,14 @@ class PlannedBatch(NamedTuple):
     passing: jax.Array  # (B, cap) bool full-DNF pass
 
 
-def plan_query(index: CompassIndex, pred_lo, pred_hi, pm) -> QueryPlan:
+def plan_query(index: CompassIndex, pred_lo, pred_hi, pm, quant: bool = False) -> QueryPlan:
     """Plan one query (traceable; vmapped over the batch by plan_batch).
 
     pred_lo / pred_hi: (T, A) DNF interval tensors.  ``pm`` must be
-    resolved (``prefilter_cap`` > 0).
+    resolved (``prefilter_cap`` > 0).  With ``quant`` (static) the cost
+    model prices scanned/visited rows at the ADC rate and adds each arm's
+    exact-rerank bill; ``pm.ef`` is then already the widened stage-one
+    queue (ef * refine_factor — the driver rewrites it before planning).
     """
     ca = index.cattrs
     nlist = index.nlist
@@ -106,12 +118,26 @@ def plan_query(index: CompassIndex, pred_lo, pred_hi, pm) -> QueryPlan:
     _, est_sel = E.estimate_matches(index.astats, pred_lo, pred_hi)
 
     # cost model -> mode
-    cost_pre = jnp.where(run_total <= cap, COST_PRE_ROW * run_total, jnp.inf)
-    cost_coop = jnp.float32(COST_COOP_EF * pm.ef)
+    if quant:
+        # ADC rows are cheap; the exact rerank of the survivors is not.
+        # PREFILTER's queue holds at most its run_total matches, the loop
+        # modes rerank the full widened queue (ef here == ef * refine).
+        rerank_pre = COST_RERANK_ROW * jnp.minimum(run_total, pm.ef)
+        rerank_loop = jnp.float32(COST_RERANK_ROW * pm.ef)
+        cost_pre = jnp.where(
+            run_total <= cap, COST_ADC_ROW * run_total + rerank_pre, jnp.inf
+        )
+        cost_coop = jnp.float32(COST_COOP_EF * pm.ef) + rerank_loop
+        post_row = COST_POST_ROW * COST_ADC_ROW / COST_PRE_ROW
+    else:
+        rerank_loop = jnp.float32(0.0)
+        cost_pre = jnp.where(run_total <= cap, COST_PRE_ROW * run_total, jnp.inf)
+        cost_coop = jnp.float32(COST_COOP_EF * pm.ef)
+        post_row = COST_POST_ROW
     if pm.use_graph:
         cost_post = jnp.where(
             est_sel >= pm.postfilter_min_sel,
-            COST_POST_ROW * pm.ef / jnp.maximum(est_sel, SEL_FLOOR),
+            post_row * pm.ef / jnp.maximum(est_sel, SEL_FLOOR) + rerank_loop,
             jnp.inf,
         )
     else:  # CompassRelational ablation: no graph to run POSTFILTER on
@@ -139,7 +165,9 @@ def plan_query(index: CompassIndex, pred_lo, pred_hi, pm) -> QueryPlan:
     return QueryPlan(mode, est_sel, run_total, ids, mask)
 
 
-def plan_batch(index: CompassIndex, queries, pred: P.Predicate, pm, backend) -> PlannedBatch:
+def plan_batch(
+    index: CompassIndex, queries, pred: P.Predicate, pm, backend, luts=None, q_resids=None
+) -> PlannedBatch:
     """Plan every query in the batch and pre-score the PREFILTER candidates.
 
     The candidate scan is hoisted out of the per-query vmap (like the
@@ -147,20 +175,35 @@ def plan_batch(index: CompassIndex, queries, pred: P.Predicate, pm, backend) -> 
     ``filter_distance`` problem, and it is guarded by a *batch-level*
     ``lax.cond`` on "any query chose PREFILTER" — a scalar predicate, so an
     all-COOPERATIVE batch pays only the probes, not the scan.
+
+    With ``luts``/``q_resids`` (the quantized tier: per-query (m, ks) ADC
+    tables + centered residual queries, built by the driver), the scan runs
+    over the PQ codes instead (``scan_scores_quantized`` — the pq_score
+    kernel's (B, cap) grid) and the cost model prices rows at the ADC rate;
+    the materialized candidates then carry ADC distances, which stage two's
+    exact rerank re-scores like every other quantized result.
     """
     if index.astats is None:
         raise ValueError(
             "CompassParams(planner=True) requires index attribute statistics; "
             "rebuild the index with build_index (build_attr_stats) first"
         )
-    plans = jax.vmap(lambda lo, hi: plan_query(index, lo, hi, pm))(pred.lo, pred.hi)
+    quant = luts is not None
+    plans = jax.vmap(lambda lo, hi: plan_query(index, lo, hi, pm, quant))(
+        pred.lo, pred.hi
+    )
     scan_mask = plans.mask & (plans.mode == PREFILTER)[:, None]
     b, cap = scan_mask.shape
 
     def do_scan(_):
-        dist, passing = backend.scan_scores(
-            index, queries, pred, plans.ids, scan_mask, pm.metric
-        )
+        if quant:
+            dist, passing = backend.scan_scores_quantized(
+                index, q_resids, luts, pred, plans.ids, scan_mask, pm.metric
+            )
+        else:
+            dist, passing = backend.scan_scores(
+                index, queries, pred, plans.ids, scan_mask, pm.metric
+            )
         return dist, passing & scan_mask
 
     def no_scan(_):

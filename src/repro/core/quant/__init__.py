@@ -1,0 +1,39 @@
+"""Product-quantization tier: codebooks, encode/decode, ADC search support.
+
+See DESIGN.md §Quantization.  Build with :func:`quantize_index` (or
+``quantize_vectors`` for raw tables), search by setting
+``CompassParams(quant=QuantParams(...))`` — every execution mode
+(COOPERATIVE / PREFILTER / POSTFILTER, mutable delta scans, distributed
+shards) then scores candidates through the ADC tables and reranks the
+survivors exactly.
+"""
+from .codebook import train_codebooks  # noqa: F401
+from .encode import (  # noqa: F401
+    QuantizedVectors,
+    build_luts,
+    decode,
+    decode_all,
+    encode_rows,
+    quant_mse,
+    quantize_index,
+    quantize_vectors,
+    residual_queries,
+)
+from .params import QuantConfig, QuantParams  # noqa: F401
+from .rerank import rerank_batch  # noqa: F401
+
+__all__ = [
+    "QuantConfig",
+    "QuantParams",
+    "QuantizedVectors",
+    "build_luts",
+    "decode",
+    "decode_all",
+    "encode_rows",
+    "quant_mse",
+    "quantize_index",
+    "quantize_vectors",
+    "rerank_batch",
+    "residual_queries",
+    "train_codebooks",
+]

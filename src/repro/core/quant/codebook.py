@@ -1,0 +1,58 @@
+"""Per-subspace PQ codebook training (reusing the IVF k-means of
+core/kmeans.py).
+
+Product quantization splits the (zero-padded) vector into ``m`` contiguous
+subspaces and trains an independent ``ks``-way k-means codebook per
+subspace; a row is then the ``m`` uint8 centroid ids.  Training cost is
+``m`` small k-means problems over ``(N, d/m)`` slices — each one the same
+jitted Lloyd loop the IVF layer uses, so on TPU the assignment step stays
+an MXU matmul.  Residual-vs-raw is resolved per metric by
+:meth:`QuantConfig.resolve_residual` (see params.py).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..kmeans import kmeans
+from .params import QuantConfig
+
+
+def pad_dim(d: int, m: int) -> int:
+    """Vectors are zero-padded to the next multiple of ``m`` so subspaces
+    are equal-width; the pad dims train to exactly-zero centroids (k-means
+    centroids are means of zeros) and contribute 0 to every ADC table."""
+    return ((d + m - 1) // m) * m
+
+
+def split_subspaces(x: np.ndarray, m: int) -> np.ndarray:
+    """(N, d) -> (m, N, dsub) zero-padded contiguous subspace slices."""
+    n, d = x.shape
+    dp = pad_dim(d, m)
+    if dp != d:
+        x = np.concatenate([x, np.zeros((n, dp - d), np.float32)], axis=1)
+    return np.ascontiguousarray(x.reshape(n, m, dp // m).transpose(1, 0, 2))
+
+
+def train_codebooks(
+    vectors: np.ndarray, cfg: QuantConfig, metric: str = "l2"
+) -> tuple[np.ndarray, np.ndarray]:
+    """Train per-subspace codebooks.
+
+    Returns ``(codebooks (m, ks, dsub) f32, mean (d,) f32)`` — ``mean`` is
+    all-zero when raw encoding was resolved, so downstream code never
+    branches on the residual choice: queries/rows are always centered by
+    ``mean`` before table building / encoding.
+    """
+    vectors = np.asarray(vectors, np.float32)
+    n, d = vectors.shape
+    ks = min(cfg.ks, n)  # degenerate tiny corpora: never more codes than rows
+    residual = cfg.resolve_residual(metric)
+    mean = vectors.mean(axis=0) if residual else np.zeros((d,), np.float32)
+    mean = mean.astype(np.float32)
+    subs = split_subspaces(vectors - mean[None, :], cfg.m)  # (m, N, dsub)
+    cbs = []
+    for mi in range(cfg.m):
+        km = kmeans(jnp.asarray(subs[mi]), ks, iters=cfg.iters, seed=cfg.seed + mi)
+        cbs.append(np.asarray(km.centroids, np.float32))
+    return np.stack(cbs), mean

@@ -1,0 +1,84 @@
+"""Configuration records for the product-quantization tier (core/quant).
+
+Two configs, two lifetimes:
+
+  * :class:`QuantConfig` is *build-time*: how codebooks are trained and
+    rows encoded.  It is consumed by ``train_codebooks`` /
+    ``quantize_vectors`` and then forgotten — everything search needs is
+    carried by the :class:`~repro.core.quant.encode.QuantizedVectors`
+    arrays themselves, so an index file does not depend on this object.
+  * :class:`QuantParams` is *search-time*: how the two-stage
+    ADC-then-rerank search behaves.  It hangs off
+    ``CompassParams.quant`` (default ``None`` == quantization off), so it
+    must stay a frozen, hashable dataclass — ``CompassParams`` is a
+    static jit argument and a compiled-executable cache key.
+
+Kept dependency-free (no jax import) so the engine can import it without
+pulling the quantization subsystem onto the exact-search path.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+#: rerank modes for QuantParams.rerank
+RERANK_MODES = ("full", "decode", "none")
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Codebook training / encoding configuration.
+
+    ``m`` subspaces of ``ceil(d/m)`` dims each (vectors are zero-padded to
+    a multiple of ``m``), ``ks`` centroids per subspace (<= 256 so codes
+    fit uint8).  ``residual`` selects encoding the rows' offsets from the
+    corpus mean instead of the raw rows; ``None`` picks per metric — the
+    classic choice: centered residuals for l2 (quantization error drops
+    when the corpus is off-origin), raw rows for inner product (a mean
+    offset would need a per-query bias term in every ADC table).
+    """
+
+    m: int = 8
+    ks: int = 256
+    iters: int = 10
+    seed: int = 0
+    residual: bool | None = None
+
+    def __post_init__(self):
+        if self.m < 1:
+            raise ValueError(f"m must be >= 1, got {self.m}")
+        if not 2 <= self.ks <= 256:
+            raise ValueError(f"ks must be in [2, 256] (uint8 codes), got {self.ks}")
+
+    def resolve_residual(self, metric: str) -> bool:
+        if self.residual is None:
+            return metric == "l2"
+        if self.residual and metric != "l2":
+            raise ValueError(
+                "residual encoding is l2-only (an inner-product residual needs a "
+                "per-query bias the ADC tables do not carry); use residual=False"
+            )
+        return self.residual
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantParams:
+    """Search-time parameters of the quantized tier (``CompassParams.quant``).
+
+    ``refine_factor`` widens stage one: ADC ordering is approximate, so the
+    candidate search runs at ``ef * refine_factor`` and stage two reranks
+    those survivors exactly, returning the top ``k``.  ``rerank`` picks the
+    stage-two scorer: ``"full"`` reads the full-precision rows,
+    ``"decode"`` re-scores against decoded codes (for deployments that
+    dropped the float32 table; mathematically this equals the ADC distance,
+    so it only canonicalizes summation order), ``"none"`` trusts the ADC
+    ordering outright.
+    """
+
+    refine_factor: int = 4
+    rerank: str = "full"
+
+    def __post_init__(self):
+        if self.refine_factor < 1:
+            raise ValueError(f"refine_factor must be >= 1, got {self.refine_factor}")
+        if self.rerank not in RERANK_MODES:
+            raise ValueError(f"rerank must be one of {RERANK_MODES}, got {self.rerank!r}")

@@ -17,6 +17,8 @@ from .filter_distance import filter_distance as _filter_distance_kernel
 from .filter_distance import filter_distance_batch as _filter_distance_batch_kernel
 from .flash_attention import flash_attention as _flash_kernel
 from .ivf_score import ivf_score as _ivf_kernel
+from .pq_score import pq_score as _pq_score_kernel
+from .pq_score import pq_score_batch as _pq_score_batch_kernel
 
 
 def filter_distance(vectors, attrs, idx, mask, q, lo, hi, *, use_pallas: bool = True):
@@ -31,6 +33,20 @@ def filter_distance_batch(
     if not use_pallas:
         return ref.filter_distance_batch_ref(vectors, attrs, idx, mask, queries, lo, hi)
     return _filter_distance_batch_kernel(vectors, attrs, idx, mask, queries, lo, hi)
+
+
+def pq_score(codes, attrs, idx, mask, q_resid, codebooks, lo, hi, *, use_pallas: bool = True):
+    if not use_pallas:
+        return ref.pq_score_ref(codes, attrs, idx, mask, q_resid, codebooks, lo, hi)
+    return _pq_score_kernel(codes, attrs, idx, mask, q_resid, codebooks, lo, hi)
+
+
+def pq_score_batch(
+    codes, attrs, idx, mask, q_resid, codebooks, lo, hi, *, use_pallas: bool = True
+):
+    if not use_pallas:
+        return ref.pq_score_batch_ref(codes, attrs, idx, mask, q_resid, codebooks, lo, hi)
+    return _pq_score_batch_kernel(codes, attrs, idx, mask, q_resid, codebooks, lo, hi)
 
 
 def ivf_score(queries, centroids, *, use_pallas: bool = True, **kw):

@@ -29,6 +29,65 @@ def filter_distance_batch_ref(vectors, attrs, idx, mask, queries, lo, hi):
     )(idx, mask, queries, lo, hi)
 
 
+def chain_sum_m(parts):
+    """Fold per-subspace partial distances left-to-right.
+
+    ADC distances are a sum of ``m`` table values; XLA's reduce is free to
+    pick different association trees for a (m,)->() reduce (kernel) and a
+    (V, m)->(V,) reduce (oracle), which costs a ULP.  ``m`` is small and
+    static, so both sides fold an explicit sequential chain instead —
+    order-deterministic, hence bitwise-identical across paths.
+    """
+    acc = parts[0]
+    for p in parts[1:]:
+        acc = acc + p
+    return acc
+
+
+def subspace_lut(codebooks, q_resid):
+    """Per-subspace squared-L2 ADC table: (m, ks, dsub), (d_pad,) -> (m, ks).
+
+    Shared by the jnp scoring path (vmapped in quant/encode.build_luts) and
+    the pq_score kernel's in-kernel LUT construction — one expression, so
+    the two paths agree bitwise.
+    """
+    m, _, dsub = codebooks.shape
+    qs = q_resid.reshape(m, 1, dsub)
+    diff = codebooks - qs
+    # explicit left-to-right fold over the (small, static) subspace dim:
+    # an axis reduce may lower to different association/FMA choices inside
+    # the kernel body vs the outer jit, which costs a ULP (see chain_sum_m)
+    return chain_sum_m([diff[..., j] * diff[..., j] for j in range(dsub)])
+
+
+def pq_score_ref(codes, attrs, idx, mask, q_resid, codebooks, lo, hi):
+    """ADC oracle: LUT build + code-gather scoring + DNF predicate.
+
+    ``codes``: (N + 1, m) uint8 (sentinel row N); sentinel ids are
+    masked-out visits even under a true mask, exactly like
+    filter_distance_ref.  Returns (dists (V,) f32 +inf where masked,
+    passed (V,) bool).
+    """
+    n = codes.shape[0] - 1
+    safe = jnp.where(mask, jnp.clip(idx, 0, n), n)
+    valid = mask & (safe < n)
+    lut = subspace_lut(codebooks, q_resid)  # (m, ks)
+    cd = codes[safe].astype(jnp.int32)  # (V, m)
+    vals = lut[jnp.arange(codebooks.shape[0])[None, :], cd]  # (V, m)
+    dist = chain_sum_m([vals[:, mi] for mi in range(codebooks.shape[0])])
+    a = attrs[safe]
+    term_ok = jnp.all((a[:, None, :] >= lo[None]) & (a[:, None, :] <= hi[None]), axis=-1)
+    passed = jnp.any(term_ok, axis=-1) & valid
+    return jnp.where(valid, dist, jnp.inf), passed
+
+
+def pq_score_batch_ref(codes, attrs, idx, mask, q_resid, codebooks, lo, hi):
+    """Batched (B, V) ADC oracle: per-lane query residuals and bounds."""
+    return jax.vmap(
+        lambda i, m, q, l, h: pq_score_ref(codes, attrs, i, m, q, codebooks, l, h)
+    )(idx, mask, q_resid, lo, hi)
+
+
 def ivf_score_ref(queries, centroids):
     q2 = jnp.sum(queries.astype(jnp.float32) ** 2, axis=1, keepdims=True)
     c2 = jnp.sum(centroids.astype(jnp.float32) ** 2, axis=1)

@@ -174,6 +174,12 @@ class SearchService:
         self.n_upserts = 0
         self.n_deletes = 0
         self.n_write_errors = 0
+        if params.quant is not None and self.index.qvecs is None:
+            raise ValueError(
+                "params.quant requires a quantized index "
+                "(core.quant.quantize_index) — fail at construction, not "
+                "at the first dispatch"
+            )
 
     @property
     def index(self) -> CompassIndex:
@@ -329,6 +335,10 @@ class SearchService:
 
     def _executable(self, queries: jax.Array, pred: P.Predicate) -> Callable:
         B, T, A = pred.lo.shape
+        # self.params embeds CompassParams.quant (a frozen, hashable
+        # QuantParams), so quantized and exact configurations hash to
+        # distinct keys and their executables coexist in one cache — the
+        # same separation the (B, T, A) shape axes get.
         key = (B, T, A, self.params)
         st = self._stats.setdefault((B, T), BucketStats())
         exe = self._executables.get(key)
@@ -442,6 +452,22 @@ class SearchService:
             "n_fillers": sum(s.n_fillers for s in self._stats.values()),
             "mean_wait_s": wait / n_req if n_req else 0.0,
             "planner": self.params.planner,
+            # quantized-tier provenance: which quant config this service's
+            # executables were keyed on, and the per-row footprint actually
+            # being served (codes+amortized codebook vs 4*d float32)
+            "quant": (
+                None
+                if self.params.quant is None
+                else dataclasses.asdict(self.params.quant)
+            ),
+            # footprint of the tier the candidate scans actually read:
+            # exact-mode services read the float32 rows even when the
+            # served index happens to carry codes alongside
+            "bytes_per_vector": (
+                round(self.index.qvecs.bytes_per_vector, 2)
+                if self.params.quant is not None
+                else 4 * self.index.dim
+            ),
             "mutable": self.mutable is not None,
             "epoch": None if self.mutable is None else self.mutable.epoch,
             "n_upserts": self.n_upserts,
