@@ -9,6 +9,7 @@
   bench_planner       -> planner selectivity sweep: mode/QPS/recall (ours)
   bench_updates       -> mutable-index churn: QPS/recall/compaction (ours)
   bench_quant         -> PQ tier: recall/QPS/bytes-per-vector sweep (ours)
+  bench_kernels       -> fused-visit / pq / ivf kernel microbench (ours)
 
 ``python -m benchmarks.run [--only name] [--quick] [--json-dir DIR]``
 
@@ -37,6 +38,7 @@ ALL = (
     "bench_planner",
     "bench_updates",
     "bench_quant",
+    "bench_kernels",
 )
 
 

@@ -29,6 +29,9 @@ ROW_REQUIRED = {
     # sweep rows add recall_vs_exact + quant/exact RunResults; scan rows
     # (workload == "scan") add adc_scan/exact_scan QPS instead
     "bench_quant": ("workload", "m", "refine_factor", "bytes_per_vector"),
+    # visit_step rows add fused/unfused qps arms, pq/ivf rows pallas/ref
+    # arms; the trailing autotune_table row carries the measured block table
+    "bench_kernels": ("kernel", "metric", "d", "v"),
 }
 
 

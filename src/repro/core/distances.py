@@ -13,7 +13,16 @@ import functools
 import jax
 import jax.numpy as jnp
 
-METRICS = ("l2", "ip")
+METRICS = ("l2", "ip", "cos")
+
+
+def normalize_rows(x: jax.Array) -> jax.Array:
+    """Unit-normalize trailing-dim rows (cosine -> inner product reduction:
+    ``cos`` corpora are normalized at build, queries at search entry, and
+    everything downstream — kernels included — runs plain "ip")."""
+    x = jnp.asarray(x, jnp.float32)
+    nrm = jnp.sqrt(jnp.sum(x * x, axis=-1, keepdims=True))
+    return x / jnp.maximum(nrm, jnp.float32(1e-12))
 
 
 def pairwise_l2(x: jax.Array, y: jax.Array) -> jax.Array:
@@ -34,6 +43,8 @@ def pairwise(x: jax.Array, y: jax.Array, metric: str = "l2") -> jax.Array:
         return pairwise_l2(x, y)
     if metric == "ip":
         return pairwise_ip(x, y)
+    if metric == "cos":
+        return pairwise_ip(normalize_rows(x), normalize_rows(y))
     raise ValueError(f"unknown metric {metric!r}")
 
 

@@ -1,10 +1,17 @@
 """Scoring backends for the Compass execution engine.
 
-A :class:`VisitBackend` answers the two score queries the engine makes on
+A :class:`VisitBackend` answers the score queries the engine makes on
 its hot path, and nothing else:
 
-  * ``visit_scores``    — Algorithm 4's distance + predicate evaluation over
-    a fixed-size visit list (the per-step hot spot).
+  * ``visit_step``      — Algorithm 4's whole per-step scoring: distance +
+    DNF predicate + tombstone mask + queue-admission candidates over a
+    fixed-size visit list (the per-step hot spot).  The pallas backend
+    runs it as ONE fused kernel (kernels/visit_step.py); ref composes
+    ``visit_scores`` + the live gather + the admission select — the exact
+    pre-fusion engine sequence, so ``backend="ref"`` stays bitwise
+    identical across engine versions.
+  * ``visit_scores``    — the unfused distance + predicate evaluation
+    (kept public: the planner's probes and the unfused visit path use it).
   * ``centroid_scores`` — B.OPEN / G.OPEN's exact centroid ranking input
     (one blocked scan per query *batch*, hoisted out of the per-query vmap
     so the pallas path gets the cross-query MXU blocking ``ivf_score`` is
@@ -29,10 +36,17 @@ gather).
 
 ``"ref"`` is the plain-jnp gather path (the original core/search.py math,
 moved verbatim).  ``"pallas"`` routes VISIT through the fused
-``kernels.filter_distance`` TPU kernel and centroid ranking through
-``kernels.ivf_score``; on CPU the kernels run in Pallas interpret mode (see
-kernels/ops.py) so tests exercise the kernel path.  ``"auto"`` resolves to
-``"pallas"`` on TPU and ``"ref"`` elsewhere.
+``kernels.visit_step`` TPU kernel (``kernels.filter_distance`` when
+``fused_visit=False``) and centroid ranking through ``kernels.ivf_score``;
+on CPU the kernels run in Pallas interpret mode (see kernels/ops.py) so
+tests exercise the kernel path.  ``"auto"`` resolves to ``"pallas"`` on
+TPU and ``"ref"`` elsewhere.
+
+Metrics: every scoring surface takes ``metric`` — "l2" (squared L2) and
+"ip" (negated inner product) both run on the kernels; cosine is rewritten
+to ip over normalized rows by the driver and never reaches this layer.
+The shared per-row expression is ``kernels.ref.row_distance``, so ref and
+pallas agree bitwise on VISIT for both metrics.
 """
 from __future__ import annotations
 
@@ -52,6 +66,16 @@ class VisitBackend(Protocol):
 
     def visit_scores(self, index, q, pred, safe_ids, mask, metric):
         """(dist (V,) f32 with +inf where masked; passing (V,) bool)."""
+        ...
+
+    def visit_step(self, index, q, pred, safe_ids, mask, metric, fused=True):
+        """The fused per-step scoring surface consumed by ``state.visit``:
+        returns ``(dist (V,) f32, admit (V,) f32)`` where ``dist`` feeds
+        the traversal queues (+inf where masked/sentinel) and ``admit``
+        equals ``dist`` for valid, predicate-passing AND live rows, +inf
+        otherwise (what the filtered result queue merges).  ``fused=False``
+        forces the unfused visit_scores + live + select composition on
+        every backend (CompassParams.fused_visit)."""
         ...
 
     def centroid_scores(self, index, queries, metric):
@@ -90,16 +114,25 @@ class RefBackend:
     name = "ref"
 
     def visit_scores(self, index, q, pred, safe_ids, mask, metric):
+        from ...kernels.ref import row_distance
+
         vecs = index.vectors[safe_ids]  # (V, d)
-        if metric == "l2":
-            diff = vecs - q[None, :]
-            dist = jnp.sum(diff * diff, axis=-1)
-        else:
-            dist = -(vecs @ q)
+        # the one expression the pallas kernels also evaluate per row
+        # (kernels/ref.row_distance) — parity is bitwise for l2 and ip
+        dist = row_distance(vecs, q[None, :], metric)
         dist = jnp.where(mask, dist, jnp.inf)
         attrs = index.attrs[safe_ids]
         passing = P.evaluate(pred, attrs) & mask
         return dist, passing
+
+    def visit_step(self, index, q, pred, safe_ids, mask, metric, fused=True):
+        # the pre-fusion engine sequence, verbatim: unfused scoring, then
+        # the tombstone AND, then the admission select (state.visit's old
+        # body) — the parity oracle for the fused kernel
+        dist, passing = self.visit_scores(index, q, pred, safe_ids, mask, metric)
+        if index.live is not None:
+            passing = passing & index.live[safe_ids]
+        return dist, jnp.where(passing, dist, jnp.inf)
 
     def centroid_scores(self, index, queries, metric):
         if metric == "l2":
@@ -113,12 +146,10 @@ class RefBackend:
         # sentinel ids are masked-out slots even under a true mask (same
         # validity rule as the filter_distance kernels)
         valid = mask & (safe < n)
+        from ...kernels.ref import row_distance
+
         vecs = index.vectors[safe]  # (B, V, d)
-        if metric == "l2":
-            diff = vecs - queries[:, None, :]
-            dist = jnp.sum(diff * diff, axis=-1)
-        else:
-            dist = -jnp.einsum("bvd,bd->bv", vecs, queries)
+        dist = row_distance(vecs, queries[:, None, :], metric)
         dist = jnp.where(valid, dist, jnp.inf)
         attrs = index.attrs[safe]  # (B, V, A)
         passing = jax.vmap(
@@ -168,58 +199,80 @@ class RefBackend:
 class PallasBackend:
     """Fused Pallas kernels on the hot path.
 
-    VISIT goes through ``kernels.filter_distance`` (scalar-prefetched row
-    gather + VPU distance + DNF predicate in one pass over VMEM) and the
-    centroid ranking through ``kernels.ivf_score`` (blocked MXU distance
-    matrix).  Both kernels implement squared L2 only, so for other metrics
-    this backend falls back to the reference math — the engine still runs,
-    just without kernel acceleration.
+    VISIT goes through ``kernels.visit_step`` — one kernel for the whole
+    per-step hot spot: scalar-prefetched row gather + VPU distance + DNF
+    predicate + tombstone mask + queue-admission candidates (the unfused
+    ``kernels.filter_distance`` stays behind ``fused_visit=False``) — and
+    the centroid ranking through ``kernels.ivf_score`` (blocked MXU
+    distance matrix).  Every kernel implements squared L2 and negated
+    inner product (static ``metric``); only genuinely unknown metrics fall
+    back to the reference math.
     """
 
     name = "pallas"
 
+    _KERNEL_METRICS = ("l2", "ip")
+
     def visit_scores(self, index, q, pred, safe_ids, mask, metric):
-        if metric != "l2":
+        if metric not in self._KERNEL_METRICS:
             return RefBackend().visit_scores(index, q, pred, safe_ids, mask, metric)
         from ...kernels import ops
 
         dist, passing = ops.filter_distance(
-            index.vectors, index.attrs, safe_ids, mask, q, pred.lo, pred.hi
+            index.vectors, index.attrs, safe_ids, mask, q, pred.lo, pred.hi,
+            metric=metric,
         )
         return dist, passing & mask
 
+    def visit_step(self, index, q, pred, safe_ids, mask, metric, fused=True):
+        if not fused or metric not in self._KERNEL_METRICS:
+            # unfused: the pre-fusion kernel sequence (filter_distance
+            # kernel + jnp live gather + admission select)
+            dist, passing = self.visit_scores(index, q, pred, safe_ids, mask, metric)
+            if index.live is not None:
+                passing = passing & index.live[safe_ids]
+            return dist, jnp.where(passing, dist, jnp.inf)
+        from ...kernels import ops
+
+        return ops.visit_step(
+            index.vectors, index.attrs, index.live, safe_ids, mask, q,
+            pred.lo, pred.hi, metric=metric,
+        )
+
     def centroid_scores(self, index, queries, metric):
-        if metric != "l2":
+        if metric not in self._KERNEL_METRICS:
             return RefBackend().centroid_scores(index, queries, metric)
         from ...kernels import ops
 
-        return ops.ivf_score(queries, index.centroids)
+        return ops.ivf_score(queries, index.centroids, metric=metric)
 
     def scan_scores(self, index, queries, pred, ids, mask, metric):
-        if metric != "l2":
+        if metric not in self._KERNEL_METRICS:
             return RefBackend().scan_scores(index, queries, pred, ids, mask, metric)
         from ...kernels import ops
 
         dist, passing = ops.filter_distance_batch(
-            index.vectors, index.attrs, ids, mask, queries, pred.lo, pred.hi
+            index.vectors, index.attrs, ids, mask, queries, pred.lo, pred.hi,
+            metric=metric,
         )
         return dist, passing & mask
 
     def adc_scores(self, index, q_resid, lut, pred, safe_ids, mask, metric):
-        # the pq_score kernel builds the l2 LUT in-kernel from q_resid (the
-        # fused path); non-l2 tables only exist on the jnp path
-        if metric != "l2":
+        # the pq_score kernel builds the LUT in-kernel from q_resid (the
+        # fused path); precomputed tables only feed the jnp path
+        if metric not in self._KERNEL_METRICS:
             return RefBackend().adc_scores(index, q_resid, lut, pred, safe_ids, mask, metric)
         from ...kernels import ops
 
         qv = index.qvecs
         dist, passing = ops.pq_score(
-            qv.codes, index.attrs, safe_ids, mask, q_resid, qv.codebooks, pred.lo, pred.hi
+            qv.codes, index.attrs, safe_ids, mask, q_resid, qv.codebooks,
+            pred.lo, pred.hi, metric=metric,
         )
         return dist, passing & mask
 
     def scan_scores_quantized(self, index, q_resid, luts, pred, ids, mask, metric):
-        if metric != "l2":
+        if metric not in self._KERNEL_METRICS:
             return RefBackend().scan_scores_quantized(
                 index, q_resid, luts, pred, ids, mask, metric
             )
@@ -227,7 +280,8 @@ class PallasBackend:
 
         qv = index.qvecs
         dist, passing = ops.pq_score_batch(
-            qv.codes, index.attrs, ids, mask, q_resid, qv.codebooks, pred.lo, pred.hi
+            qv.codes, index.attrs, ids, mask, q_resid, qv.codebooks,
+            pred.lo, pred.hi, metric=metric,
         )
         return dist, passing & mask
 
@@ -257,6 +311,16 @@ class QuantAdapter:
         return self.inner.adc_scores(
             index, self.q_resid, self.lut, pred, safe_ids, mask, metric
         )
+
+    def visit_step(self, index, q, pred, safe_ids, mask, metric, fused=True):
+        # ADC scoring stays a separate kernel (pq_score builds the LUT in
+        # scratch); the tombstone AND + admission select compose here —
+        # both inner backends produce parity-tested (dist, passing), so the
+        # composed admit inherits the parity
+        dist, passing = self.visit_scores(index, q, pred, safe_ids, mask, metric)
+        if index.live is not None:
+            passing = passing & index.live[safe_ids]
+        return dist, jnp.where(passing, dist, jnp.inf)
 
     def centroid_scores(self, index, queries, metric):
         # the coarse layer stays full-precision (standard IVF-PQ: centroid

@@ -61,7 +61,13 @@ if TYPE_CHECKING:  # runtime import would cycle (index -> planner -> engine)
 #: the loop at ef*refine_factor with ADC scoring (kernels/pq_score) and
 #: stage two reranks the survivors exactly; quant=None paths are bitwise
 #: unchanged (trace-time branch on index.qvecs / pm.quant).
-ENGINE_VERSION = "engine/4"
+#: engine/5: fused visit step — state.visit scores through the single
+#: backend.visit_step surface (pallas: one kernels/visit_step.py call for
+#: gather + distance + predicate + tombstone + admission); ip runs on the
+#: kernels (no more ref fallback) and "cos" is rewritten to ip over
+#: normalized rows at entry.  backend="ref" and fused_visit=False paths
+#: stay bitwise identical to engine/4.
+ENGINE_VERSION = "engine/5"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,6 +95,11 @@ class CompassParams:
     # arithmetic intensity of each visit batch; passrate adaptivity is
     # evaluated over the pooled beam neighborhood instead of per candidate)
     backend: str = "auto"  # "ref" | "pallas" | "auto" (pallas on TPU)
+    fused_visit: bool = True  # route VISIT through the fused visit-step
+    # kernel on the pallas backend (kernels/visit_step.py).  False keeps
+    # the unfused filter_distance + live-gather + select sequence — same
+    # results bitwise, one extra kernel launch + two HBM round-trips per
+    # visit batch (the parity suite asserts on/off equality).
     planner: bool = False  # cost-based per-query mode selection (DESIGN.md
     # §Planner; requires index.astats — i.e. an index built by build_index)
     prefilter_cap: int = 0  # max materialized run rows for PREFILTER;
@@ -257,6 +268,16 @@ def compass_search(
     centered residuals (built here when omitted) — the mutable fan-out
     passes its own so base and delta share one table build per query.
     """
+    if pm.metric == "cos":
+        # cosine == inner product over unit-norm rows: normalize the query
+        # batch here and run the whole engine (planner, quant tables,
+        # kernels) as "ip" — one rewrite point, no per-kernel cos variants.
+        # Requires an index built with BuildConfig(metric="cos"), which
+        # normalized the corpus rows at build time.
+        from ..distances import normalize_rows
+
+        queries = normalize_rows(queries)
+        pm = dataclasses.replace(pm, metric="ip")
     quant = pm.quant is not None
     if quant and index.qvecs is None:
         raise ValueError(

@@ -131,17 +131,21 @@ def visit(index, q, pred, st: EngineState, ids, mask, pm, backend) -> EngineStat
     mask = dedup_new(ids, mask)
     mask = mask & ~st.visited[ids]
     safe = jnp.where(mask, ids, n).astype(jnp.int32)
-    dist, passing = backend.visit_scores(index, q, pred, safe, mask, pm.metric)
+    # One fused scoring call per visit batch: distance + DNF predicate +
+    # tombstone mask + queue admission.  `dist` feeds the traversal queues
+    # (a dead record keeps routing — it stays in cand/gtop so traversal
+    # flows through it); `admit` is +inf unless the row is valid, passes
+    # the predicate AND is alive, so merging it into the result queue is
+    # exactly the old visit_scores -> live-AND -> where sequence (the ref
+    # backend literally composes that sequence; the pallas backend runs the
+    # kernels/visit_step.py fused kernel unless pm.fused_visit is off).
+    dist, admit = backend.visit_step(
+        index, q, pred, safe, mask, pm.metric, fused=pm.fused_visit
+    )
     visited = st.visited.at[safe].set(True)  # sentinel slot absorbs masked
     cand = st.cand.merge(dist, safe)
     gtop = st.gtop.merge(dist, safe)
-    # Tombstones (mutable index): a dead record keeps routing — it stays in
-    # cand/gtop so traversal flows through it — but never surfaces as a
-    # result.  `index.live is None` is a trace-time branch (pytree treedef),
-    # so the immutable path compiles without the gather.
-    if index.live is not None:
-        passing = passing & index.live[safe]
-    res = st.res.merge(jnp.where(passing, dist, INF), safe)
+    res = st.res.merge(admit, safe)
     # A quant-adapted backend (backend.QuantAdapter) scores visits through
     # the ADC tables, so the work lands in n_adc, not the full-precision
     # #Comp counter.  Trace-time branch: counts_as is a plain attribute.

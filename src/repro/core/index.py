@@ -126,6 +126,14 @@ def cluster_medoids(
 def build_index(vectors: np.ndarray, attrs: np.ndarray, cfg: BuildConfig = BuildConfig()) -> CompassIndex:
     vectors = np.asarray(vectors, np.float32)
     attrs = np.asarray(attrs, np.float32)
+    if cfg.metric == "cos":
+        # cosine == inner product over unit rows: normalize the corpus once
+        # here and build everything (graph, kmeans, medoids) as "ip"; the
+        # driver normalizes queries at search entry (driver.compass_search)
+        from .distances import normalize_rows
+
+        vectors = np.asarray(normalize_rows(vectors))
+        cfg = dataclasses.replace(cfg, metric="ip")
     n, d = vectors.shape
     graph = build_graph(
         vectors,

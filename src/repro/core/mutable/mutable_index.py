@@ -138,6 +138,17 @@ class MutableIndex:
     ):
         if base.astats is None:
             raise ValueError("MutableIndex requires an index built by build_index (astats)")
+        if metric == "cos" or (cfg is not None and cfg.metric == "cos"):
+            # the delta scan and LUT builds run outside compass_search's
+            # cos->ip rewrite; supporting cos here would need a second
+            # rewrite point on the write path.  build_index(metric="cos")
+            # already stores unit rows, so wrap that index with "ip" and
+            # normalize upserted rows/queries upstream.
+            raise ValueError(
+                "MutableIndex does not support metric='cos'; normalize rows "
+                "upstream and use metric='ip' (an index built with "
+                "BuildConfig(metric='cos') is already unit-normalized)"
+            )
         # CompassIndex does not record its build metric, so a non-l2 index
         # wrapped without an explicit ``cfg`` must pass ``metric`` here or
         # compaction would fold with l2 geometry.

@@ -59,16 +59,21 @@ COST_COOP_EF = 8.0  # per result-slot cost of the cooperative loop: queue
 #   sorts + beam visits dominate and are ~flat in selectivity (the paper's
 #   robustness result), so cost ≈ COST_COOP_EF * ef.
 COST_POST_ROW = 1.5  # per-visit cost of the graph-only loop; the loop must
-#   oversample by 1/selectivity to fill ef passing results.
+#   oversample by 1/selectivity to fill ef passing results.  The fused
+#   visit_step kernel (engine/5) cheapens a visited row on the compiled
+#   path, but it cheapens COOPERATIVE and POSTFILTER visits identically —
+#   both modes score through the same backend.visit_step — so the
+#   *relative* constants here are unchanged; bench_kernels' visit_step
+#   rows are the tracking artifact for the absolute per-row cost.
 SEL_FLOOR = 1e-4  # avoid division blow-up on est_sel ~ 0
 # -- quantized-tier costs (CompassParams.quant active) ----------------------
 # ADC scores a row with m table lookups instead of a d-dim gather+reduce:
-# bytes moved drop from 4*d to m per row, so a scanned row is ~3x cheaper
-# (bench_quant's adc_scan rows are the calibration source).  Stage-two
-# rerank reads full-precision rows again; PREFILTER reranks at most its
-# materialized matches while the loop modes rerank the whole widened result
-# queue, so the rerank term is charged per arm, not globally.
-COST_ADC_ROW = 0.35
+# bytes moved drop from 4*d to m per row, so a scanned row is ~4x cheaper.
+# Calibration source: bench_quant's scan microbench (adc_scan vs exact_scan
+# wall per row).  Last measured at n=20000, d=48, m ∈ {4, 8, 16}:
+# cost_adc/cost_exact = 0.24 / 0.31 / 0.19 — flat in m because the
+# (V, m) LUT gathers, not the arithmetic, dominate the scan on this path.
+COST_ADC_ROW = 0.25
 COST_RERANK_ROW = 1.0
 
 

@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ...kernels.ref import subspace_lut
+from ...kernels.ref import adc_lut
 from .codebook import pad_dim, train_codebooks
 from .params import QuantConfig
 
@@ -169,10 +169,10 @@ def build_luts(qv: QuantizedVectors, queries: jax.Array, metric: str) -> jax.Arr
     l2: ``lut[m, k] = ||q'_m - cb[m, k]||^2`` over centered-padded queries,
     summing to the exact decoded-row distance.  ip: ``lut[m, k] =
     -(q_m . cb[m, k])`` (raw encoding only; residual-ip is rejected at
-    train time because it would need a per-query bias).
+    train time because it would need a per-query bias).  Both metrics vmap
+    the same per-query expression the pq_score kernel builds in scratch
+    (``kernels.ref.adc_lut``), so the ref and pallas scoring paths agree
+    bitwise.
     """
     qr = residual_queries(qv, queries)  # (B, d_pad)
-    if metric == "l2":
-        return jax.vmap(lambda q: subspace_lut(qv.codebooks, q))(qr)
-    qs = qr.reshape(qr.shape[0], qv.m, qv.dsub)
-    return -jnp.einsum("bmd,mkd->bmk", qs, qv.codebooks)
+    return jax.vmap(lambda q: adc_lut(qv.codebooks, q, metric))(qr)

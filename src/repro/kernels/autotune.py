@@ -1,0 +1,102 @@
+"""Per-shape block-size autotuner for the Pallas kernel wrappers.
+
+Block sizes (rows gathered per visit-step grid step, the ivf_score matmul
+tiles) trade VMEM residency against pipeline depth, and the right choice
+depends on the problem shape — d, V, m, B — not just the kernel.  Rather
+than hard-coding one default per kernel, each wrapper asks :func:`choose`
+for its block config.  Resolution order:
+
+  1. **env pin** — ``REPRO_PALLAS_BLOCK_<KERNEL>`` (parsed by
+     ``kernels/interpret.py``), e.g. ``REPRO_PALLAS_BLOCK_VISIT_STEP="rb=4"``.
+     A pin wins over everything and is never measured against.
+  2. **measured table** — an in-process ``{(kernel, shape_key): config}``
+     cache.  On first sight of a shape (and only when measurement is
+     enabled — see ``interpret.autotune_measurement_enabled``) every
+     candidate is timed on throwaway arrays of the real shape and the
+     fastest wins; the result is cached so each shape pays the probe once
+     per process.
+  3. **built-in default** — ``candidates[0]``, used when measurement is
+     off (the CPU-interpret path: interpret-mode timings would tune for
+     the interpreter, not the hardware).
+
+Timing happens eagerly on concrete dummy arrays, so it is legal even when
+``choose`` is reached at trace time inside an outer jit (the engine hot
+path) — only the *chosen ints* flow into the traced program.  Block
+choice never affects results: every candidate computes the same values
+(tests assert bitwise equality across block sizes), so a cold cache, a
+pin, or a mis-measured table can cost speed but never correctness.
+
+The table format (what BENCH_kernels.json snapshots and DESIGN.md §Perf
+documents): ``key = (kernel, shape_key)`` where ``shape_key`` is the
+wrapper-chosen tuple of shape-determining ints/strs (e.g. visit_step uses
+``(d, a, t, v, metric, has_live, interpret)``), ``value`` the config dict
+(e.g. ``{"rb": 4}``).  ``snapshot()`` exports it for bench provenance.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Sequence
+
+from .interpret import autotune_measurement_enabled, block_override
+
+Config = dict[str, int]
+
+_TABLE: dict[tuple[str, tuple], Config] = {}
+#: shapes measured this process (bookkeeping, asserted on by tests)
+_N_MEASURED: dict[tuple[str, tuple], int] = {}
+
+
+def clear() -> None:
+    """Drop the measured table (tests)."""
+    _TABLE.clear()
+    _N_MEASURED.clear()
+
+
+def snapshot() -> dict[str, Config]:
+    """The measured table as a JSON-able dict (bench provenance)."""
+    return {f"{k[0]}:{k[1]}": dict(v) for k, v in sorted(_TABLE.items(), key=str)}
+
+
+def _measure(fn: Callable[[Config], Any], cand: Config, reps: int = 3) -> float:
+    fn(cand)  # warmup: compile + first run
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn(cand)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def choose(
+    kernel: str,
+    shape_key: tuple,
+    candidates: Sequence[Config],
+    measure_fn: Callable[[Config], Any] | None = None,
+) -> Config:
+    """Resolve the block config for one kernel launch shape.
+
+    ``measure_fn`` runs one candidate end-to-end on dummy data of the real
+    shape and blocks until done (the wrapper supplies it); candidates that
+    raise are skipped.  ``candidates[0]`` is the built-in default."""
+    pinned = block_override(kernel)
+    if pinned:
+        cfg = dict(candidates[0])
+        cfg.update(pinned)
+        return cfg
+    key = (kernel, tuple(shape_key))
+    hit = _TABLE.get(key)
+    if hit is not None:
+        return dict(hit)
+    cfg = dict(candidates[0])
+    if measure_fn is not None and autotune_measurement_enabled():
+        _N_MEASURED[key] = _N_MEASURED.get(key, 0) + 1
+        best_t = float("inf")
+        for cand in candidates:
+            try:
+                t = _measure(measure_fn, dict(cand))
+            except Exception:  # an illegal tiling for this shape: skip it
+                continue
+            if t < best_t:
+                best_t, cfg = t, dict(cand)
+    _TABLE[key] = dict(cfg)
+    return cfg

@@ -6,8 +6,9 @@ TPU design (vs. the paper's CPU SIMD loop):
     BlockSpec index_map can steer per-step DMA: grid step i pulls row
     idx[i] of `vectors`/`attrs` HBM->VMEM while step i-1 computes — the
     canonical TPU row-gather pattern (double-buffered by the pipeline).
-  * distance (squared L2) reduces on the VPU over the (1, d) row against
-    the VMEM-resident query.
+  * distance (squared L2 or negated inner product — static ``metric``,
+    shared expression ``ref.row_distance``) reduces on the VPU over the
+    (1, d) row against the VMEM-resident query.
   * the DNF interval predicate evaluates on the gathered (1, A) attr row
     against (T, A) bounds; the visit mask fuses in by pointing masked
     steps at the sentinel row N, yielding +inf distance and pass=false —
@@ -26,15 +27,15 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from .interpret import default_interpret
+from .ref import row_distance
 
 
-def _kernel(idx_ref, vec_ref, attr_ref, q_ref, lo_ref, hi_ref, dist_ref, pass_ref, *, n):
+def _kernel(idx_ref, vec_ref, attr_ref, q_ref, lo_ref, hi_ref, dist_ref, pass_ref, *, n, metric):
     i = pl.program_id(0)
     valid = idx_ref[i] < n  # sentinel row == masked-out visit
     vec = vec_ref[0, :]  # (d,) gathered row (index-mapped via idx_ref)
     q = q_ref[0, :]
-    diff = (vec - q).astype(jnp.float32)
-    dist = jnp.sum(diff * diff)
+    dist = row_distance(vec, q, metric)
     attrs = attr_ref[0, :]  # (A,)
     lo = lo_ref[...]  # (T, A)
     hi = hi_ref[...]
@@ -53,20 +54,23 @@ def filter_distance(
     lo: jax.Array,  # (T, A)
     hi: jax.Array,  # (T, A)
     *,
+    metric: str = "l2",
     interpret: bool | None = None,
 ):
     """Returns (dists (V,) f32, +inf where masked; passed (V,) bool).
 
-    The interpret default comes from kernels/interpret.py — see its
-    docstring for the env overrides and the trace-time-baking caveat.
+    ``metric``: "l2" (squared L2) or "ip" (negated inner product).  The
+    interpret default comes from kernels/interpret.py — see its docstring
+    for the env overrides and the trace-time-baking caveat.
     """
     if interpret is None:
         interpret = default_interpret()
-    return _filter_distance(vectors, attrs, idx, mask, q, lo, hi, interpret=interpret)
+    return _filter_distance(vectors, attrs, idx, mask, q, lo, hi,
+                            metric=metric, interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def _filter_distance(vectors, attrs, idx, mask, q, lo, hi, *, interpret: bool):
+@functools.partial(jax.jit, static_argnames=("metric", "interpret"))
+def _filter_distance(vectors, attrs, idx, mask, q, lo, hi, *, metric: str, interpret: bool):
     v = idx.shape[0]
     n = vectors.shape[0] - 1
     d = vectors.shape[1]
@@ -74,7 +78,7 @@ def _filter_distance(vectors, attrs, idx, mask, q, lo, hi, *, interpret: bool):
     t = lo.shape[0]
     safe_idx = jnp.where(mask, jnp.clip(idx, 0, n), n).astype(jnp.int32)
     dists, passed = pl.pallas_call(
-        functools.partial(_kernel, n=n),
+        functools.partial(_kernel, n=n, metric=metric),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=(v,),
@@ -104,14 +108,13 @@ def _filter_distance(vectors, attrs, idx, mask, q, lo, hi, *, interpret: bool):
 # ---------------------------------------------------------------------------
 
 
-def _kernel_batch(idx_ref, vec_ref, attr_ref, q_ref, lo_ref, hi_ref, dist_ref, pass_ref, *, n):
+def _kernel_batch(idx_ref, vec_ref, attr_ref, q_ref, lo_ref, hi_ref, dist_ref, pass_ref, *, n, metric):
     b = pl.program_id(0)
     i = pl.program_id(1)
     valid = idx_ref[b, i] < n  # sentinel row == masked-out slot
     vec = vec_ref[0, :]  # (d,) gathered row (index-mapped via idx_ref)
     q = q_ref[0, :]  # (d,) this lane's query
-    diff = (vec - q).astype(jnp.float32)
-    dist = jnp.sum(diff * diff)
+    dist = row_distance(vec, q, metric)
     attrs = attr_ref[0, :]  # (A,)
     lo = lo_ref[0]  # (T, A) this lane's DNF bounds
     hi = hi_ref[0]
@@ -130,6 +133,7 @@ def filter_distance_batch(
     lo: jax.Array,  # (B, T, A) per-lane DNF bounds
     hi: jax.Array,  # (B, T, A)
     *,
+    metric: str = "l2",
     interpret: bool | None = None,
 ):
     """Batched variant of :func:`filter_distance` for the planner's
@@ -143,12 +147,13 @@ def filter_distance_batch(
     if interpret is None:
         interpret = default_interpret()
     return _filter_distance_batch(
-        vectors, attrs, idx, mask, queries, lo, hi, interpret=interpret
+        vectors, attrs, idx, mask, queries, lo, hi, metric=metric, interpret=interpret
     )
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def _filter_distance_batch(vectors, attrs, idx, mask, queries, lo, hi, *, interpret: bool):
+@functools.partial(jax.jit, static_argnames=("metric", "interpret"))
+def _filter_distance_batch(vectors, attrs, idx, mask, queries, lo, hi, *,
+                           metric: str, interpret: bool):
     b, v = idx.shape
     n = vectors.shape[0] - 1
     d = vectors.shape[1]
@@ -156,7 +161,7 @@ def _filter_distance_batch(vectors, attrs, idx, mask, queries, lo, hi, *, interp
     t = lo.shape[1]
     safe_idx = jnp.where(mask, jnp.clip(idx, 0, n), n).astype(jnp.int32)
     dists, passed = pl.pallas_call(
-        functools.partial(_kernel_batch, n=n),
+        functools.partial(_kernel_batch, n=n, metric=metric),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=(b, v),

@@ -4,11 +4,17 @@ Interpret mode is platform auto-detected (see ``kernels/interpret.py``:
 native TPU lowers to Mosaic, everywhere else the Pallas interpreter
 executes the kernel body for correctness, so the engine's ``"pallas"``
 backend is testable on CPU; ``REPRO_PALLAS_COMPILE=1`` /
-``REPRO_PALLAS_INTERPRET=1`` force-override).  The detection runs per
-*trace*, not per call: inside an outer jit (e.g. ``compass_search``) the
-value is baked into the cached executable, so set the env overrides before
-the first traced call.  ``use_pallas=False`` falls back to the jnp oracle —
-search code paths stay identical either way.
+``REPRO_PALLAS_INTERPRET=1`` force-override, and
+``REPRO_PALLAS_BLOCK_*`` pins kernel block sizes past the autotuner).
+The detection runs per *trace*, not per call: inside an outer jit (e.g.
+``compass_search``) the value is baked into the cached executable, so set
+the env overrides before the first traced call.  ``use_pallas=False``
+falls back to the jnp oracle — search code paths stay identical either
+way.
+
+Scoring kernels take ``metric`` ("l2" squared L2 / "ip" negated inner
+product); cosine runs as ip over normalized rows and never reaches this
+layer (the engine rewrites it — see core/engine/driver.py).
 """
 from __future__ import annotations
 
@@ -19,40 +25,63 @@ from .flash_attention import flash_attention as _flash_kernel
 from .ivf_score import ivf_score as _ivf_kernel
 from .pq_score import pq_score as _pq_score_kernel
 from .pq_score import pq_score_batch as _pq_score_batch_kernel
+from .visit_step import visit_step as _visit_step_kernel
 
 
-def filter_distance(vectors, attrs, idx, mask, q, lo, hi, *, use_pallas: bool = True):
+def filter_distance(vectors, attrs, idx, mask, q, lo, hi, *,
+                    metric: str = "l2", use_pallas: bool = True):
     if not use_pallas:
-        return ref.filter_distance_ref(vectors, attrs, idx, mask, q, lo, hi)
-    return _filter_distance_kernel(vectors, attrs, idx, mask, q, lo, hi)
+        return ref.filter_distance_ref(vectors, attrs, idx, mask, q, lo, hi, metric)
+    return _filter_distance_kernel(vectors, attrs, idx, mask, q, lo, hi, metric=metric)
 
 
 def filter_distance_batch(
-    vectors, attrs, idx, mask, queries, lo, hi, *, use_pallas: bool = True
+    vectors, attrs, idx, mask, queries, lo, hi, *,
+    metric: str = "l2", use_pallas: bool = True
 ):
     if not use_pallas:
-        return ref.filter_distance_batch_ref(vectors, attrs, idx, mask, queries, lo, hi)
-    return _filter_distance_batch_kernel(vectors, attrs, idx, mask, queries, lo, hi)
+        return ref.filter_distance_batch_ref(
+            vectors, attrs, idx, mask, queries, lo, hi, metric
+        )
+    return _filter_distance_batch_kernel(
+        vectors, attrs, idx, mask, queries, lo, hi, metric=metric
+    )
 
 
-def pq_score(codes, attrs, idx, mask, q_resid, codebooks, lo, hi, *, use_pallas: bool = True):
+def visit_step(vectors, attrs, live, idx, mask, q, lo, hi, *,
+               metric: str = "l2", use_pallas: bool = True, **kw):
+    """Fused visit step (gather + distance + predicate + tombstone +
+    admission) — returns (dist (V,), admit (V,)); see kernels/visit_step.py."""
     if not use_pallas:
-        return ref.pq_score_ref(codes, attrs, idx, mask, q_resid, codebooks, lo, hi)
-    return _pq_score_kernel(codes, attrs, idx, mask, q_resid, codebooks, lo, hi)
+        return ref.visit_step_ref(vectors, attrs, live, idx, mask, q, lo, hi, metric)
+    return _visit_step_kernel(vectors, attrs, live, idx, mask, q, lo, hi,
+                              metric=metric, **kw)
+
+
+def pq_score(codes, attrs, idx, mask, q_resid, codebooks, lo, hi, *,
+             metric: str = "l2", use_pallas: bool = True):
+    if not use_pallas:
+        return ref.pq_score_ref(codes, attrs, idx, mask, q_resid, codebooks, lo, hi, metric)
+    return _pq_score_kernel(codes, attrs, idx, mask, q_resid, codebooks, lo, hi,
+                            metric=metric)
 
 
 def pq_score_batch(
-    codes, attrs, idx, mask, q_resid, codebooks, lo, hi, *, use_pallas: bool = True
+    codes, attrs, idx, mask, q_resid, codebooks, lo, hi, *,
+    metric: str = "l2", use_pallas: bool = True
 ):
     if not use_pallas:
-        return ref.pq_score_batch_ref(codes, attrs, idx, mask, q_resid, codebooks, lo, hi)
-    return _pq_score_batch_kernel(codes, attrs, idx, mask, q_resid, codebooks, lo, hi)
+        return ref.pq_score_batch_ref(
+            codes, attrs, idx, mask, q_resid, codebooks, lo, hi, metric
+        )
+    return _pq_score_batch_kernel(codes, attrs, idx, mask, q_resid, codebooks, lo, hi,
+                                  metric=metric)
 
 
-def ivf_score(queries, centroids, *, use_pallas: bool = True, **kw):
+def ivf_score(queries, centroids, *, metric: str = "l2", use_pallas: bool = True, **kw):
     if not use_pallas:
-        return ref.ivf_score_ref(queries, centroids)
-    return _ivf_kernel(queries, centroids, **kw)
+        return ref.ivf_score_ref(queries, centroids, metric)
+    return _ivf_kernel(queries, centroids, metric=metric, **kw)
 
 
 def flash_attention(q, k, v, *, use_pallas: bool = True, **kw):

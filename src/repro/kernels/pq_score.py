@@ -26,8 +26,8 @@ lookups.  The kernel fuses the whole per-query pipeline:
 VMEM working set per step: m·ks (LUT) + m·ks·dsub (codebooks) + d + A +
 2·T·A float32s — e.g. m=16, ks=256, d=128: 16 KB LUT + 131 KB codebooks
 ≈ 148 KB, far under the ~16 MB budget.
-Squared-L2 tables only (the engine's pallas backend falls back to the jnp
-path for other metrics, like the other kernels).
+Tables are squared-L2 or negated inner product (static ``metric``; ip
+codes are raw, not residual-centered — see quant/params.py).
 """
 from __future__ import annotations
 
@@ -39,7 +39,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from .interpret import default_interpret
-from .ref import chain_sum_m, subspace_lut
+from .ref import adc_lut, chain_sum_m
 
 
 def _lookup_sum(codes, lut_ref, ks: int):
@@ -54,12 +54,12 @@ def _lookup_sum(codes, lut_ref, ks: int):
 
 
 def _kernel(idx_ref, codes_ref, attr_ref, q_ref, cb_ref, lo_ref, hi_ref,
-            dist_ref, pass_ref, lut_ref, *, n, ks):
+            dist_ref, pass_ref, lut_ref, *, n, ks, metric):
     i = pl.program_id(0)
 
     @pl.when(i == 0)
     def _build_lut():
-        lut_ref[...] = subspace_lut(cb_ref[...], q_ref[0, :])
+        lut_ref[...] = adc_lut(cb_ref[...], q_ref[0, :], metric)
 
     valid = idx_ref[i] < n  # sentinel row == masked-out visit
     codes = codes_ref[0, :].astype(jnp.int32)  # (m,) gathered code row
@@ -83,21 +83,26 @@ def pq_score(
     lo: jax.Array,  # (T, A)
     hi: jax.Array,  # (T, A)
     *,
+    metric: str = "l2",
     interpret: bool | None = None,
 ):
     """Returns (dists (V,) f32, +inf where masked; passed (V,) bool).
 
-    The interpret default comes from kernels/interpret.py — see its
-    docstring for the env overrides and the trace-time-baking caveat.
+    ``metric`` selects the in-scratch LUT expression (ref.adc_lut): "l2"
+    squared-L2 tables, "ip" negated-inner-product tables over raw (non-
+    residual) codes.  The interpret default comes from
+    kernels/interpret.py — see its docstring for the env overrides and the
+    trace-time-baking caveat.
     """
     if interpret is None:
         interpret = default_interpret()
     return _pq_score(codes, attrs, idx, mask, q_resid, codebooks, lo, hi,
-                     interpret=interpret)
+                     metric=metric, interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def _pq_score(codes, attrs, idx, mask, q_resid, codebooks, lo, hi, *, interpret: bool):
+@functools.partial(jax.jit, static_argnames=("metric", "interpret"))
+def _pq_score(codes, attrs, idx, mask, q_resid, codebooks, lo, hi, *,
+              metric: str, interpret: bool):
     v = idx.shape[0]
     n = codes.shape[0] - 1
     m, ks, dsub = codebooks.shape
@@ -106,7 +111,7 @@ def _pq_score(codes, attrs, idx, mask, q_resid, codebooks, lo, hi, *, interpret:
     t = lo.shape[0]
     safe_idx = jnp.where(mask, jnp.clip(idx, 0, n), n).astype(jnp.int32)
     dists, passed = pl.pallas_call(
-        functools.partial(_kernel, n=n, ks=ks),
+        functools.partial(_kernel, n=n, ks=ks, metric=metric),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=(v,),
@@ -139,13 +144,13 @@ def _pq_score(codes, attrs, idx, mask, q_resid, codebooks, lo, hi, *, interpret:
 
 
 def _kernel_batch(idx_ref, codes_ref, attr_ref, q_ref, cb_ref, lo_ref, hi_ref,
-                  dist_ref, pass_ref, lut_ref, *, n, ks):
+                  dist_ref, pass_ref, lut_ref, *, n, ks, metric):
     b = pl.program_id(0)
     i = pl.program_id(1)
 
     @pl.when(i == 0)  # lane boundary: rebuild this lane's LUT once
     def _build_lut():
-        lut_ref[...] = subspace_lut(cb_ref[...], q_ref[0, :])
+        lut_ref[...] = adc_lut(cb_ref[...], q_ref[0, :], metric)
 
     valid = idx_ref[b, i] < n
     codes = codes_ref[0, :].astype(jnp.int32)
@@ -169,6 +174,7 @@ def pq_score_batch(
     lo: jax.Array,  # (B, T, A) per-lane DNF bounds
     hi: jax.Array,  # (B, T, A)
     *,
+    metric: str = "l2",
     interpret: bool | None = None,
 ):
     """Batched :func:`pq_score`: one blocked grid-(B, V) call for a whole
@@ -180,11 +186,12 @@ def pq_score_batch(
     if interpret is None:
         interpret = default_interpret()
     return _pq_score_batch(codes, attrs, idx, mask, q_resid, codebooks, lo, hi,
-                           interpret=interpret)
+                           metric=metric, interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def _pq_score_batch(codes, attrs, idx, mask, q_resid, codebooks, lo, hi, *, interpret: bool):
+@functools.partial(jax.jit, static_argnames=("metric", "interpret"))
+def _pq_score_batch(codes, attrs, idx, mask, q_resid, codebooks, lo, hi, *,
+                    metric: str, interpret: bool):
     b, v = idx.shape
     n = codes.shape[0] - 1
     m, ks, dsub = codebooks.shape
@@ -193,7 +200,7 @@ def _pq_score_batch(codes, attrs, idx, mask, q_resid, codebooks, lo, hi, *, inte
     t = lo.shape[1]
     safe_idx = jnp.where(mask, jnp.clip(idx, 0, n), n).astype(jnp.int32)
     dists, passed = pl.pallas_call(
-        functools.partial(_kernel_batch, n=n, ks=ks),
+        functools.partial(_kernel_batch, n=n, ks=ks, metric=metric),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=(b, v),

@@ -7,26 +7,60 @@ import jax
 import jax.numpy as jnp
 
 
-def filter_distance_ref(vectors, attrs, idx, mask, q, lo, hi):
+def row_distance(vec, q, metric):
+    """The one distance expression every visit-path oracle and kernel body
+    shares: rows-vs-query over the trailing axis, f32.  ``metric``:
+    ``"l2"`` squared L2, ``"ip"`` negated inner product (so smaller is
+    better for both).  Keeping it a single expression — an elementwise map
+    followed by one trailing-axis reduce — is what makes the (V, d) oracle
+    and the per-row (d,) kernel reductions bitwise identical."""
+    if metric == "l2":
+        diff = (vec - q).astype(jnp.float32)
+        return jnp.sum(diff * diff, axis=-1)
+    if metric == "ip":
+        return jnp.sum(-(vec.astype(jnp.float32) * q.astype(jnp.float32)), axis=-1)
+    raise ValueError(f"unknown kernel metric {metric!r}; expected 'l2' or 'ip'")
+
+
+def filter_distance_ref(vectors, attrs, idx, mask, q, lo, hi, metric="l2"):
     n = vectors.shape[0] - 1
     safe = jnp.where(mask, jnp.clip(idx, 0, n), n)
     # ids pointing at the sentinel row are masked-out visits even under a
     # true mask — identical to the kernel's `idx < n` validity check
     valid = mask & (safe < n)
     vec = vectors[safe]
-    diff = (vec - q[None, :]).astype(jnp.float32)
-    dist = jnp.sum(diff * diff, axis=-1)
+    dist = row_distance(vec, q[None, :], metric)
     a = attrs[safe]
     term_ok = jnp.all((a[:, None, :] >= lo[None]) & (a[:, None, :] <= hi[None]), axis=-1)
     passed = jnp.any(term_ok, axis=-1) & valid
     return jnp.where(valid, dist, jnp.inf), passed
 
 
-def filter_distance_batch_ref(vectors, attrs, idx, mask, queries, lo, hi):
+def filter_distance_batch_ref(vectors, attrs, idx, mask, queries, lo, hi, metric="l2"):
     """Batched (B, V) oracle: per-lane query/bounds, same row semantics."""
     return jax.vmap(
-        lambda i, m, q, l, h: filter_distance_ref(vectors, attrs, i, m, q, l, h)
+        lambda i, m, q, l, h: filter_distance_ref(vectors, attrs, i, m, q, l, h, metric)
     )(idx, mask, queries, lo, hi)
+
+
+def visit_step_ref(vectors, attrs, live, idx, mask, q, lo, hi, metric="l2"):
+    """Oracle for the fused visit step: distance + DNF predicate + tombstone
+    mask + queue-admission candidates in one call.
+
+    ``live`` is the (N + 1,) bool tombstone vector or None (immutable
+    index).  Returns ``(dist (V,) f32, admit (V,) f32)``: ``dist`` is the
+    raw visit distance (+inf where masked/sentinel) that feeds the
+    traversal queues, ``admit`` equals ``dist`` where the row is valid,
+    predicate-passing AND alive, else +inf — exactly what the result queue
+    merges.  Composes the pre-fusion engine sequence
+    (backend.visit_scores → live AND → where) verbatim, so the ref engine
+    path stays bitwise identical to earlier engine versions."""
+    dist, passed = filter_distance_ref(vectors, attrs, idx, mask, q, lo, hi, metric)
+    if live is not None:
+        n = vectors.shape[0] - 1
+        safe = jnp.where(mask, jnp.clip(idx, 0, n), n)
+        passed = passed & live[safe]
+    return dist, jnp.where(passed, dist, jnp.inf)
 
 
 def chain_sum_m(parts):
@@ -60,7 +94,30 @@ def subspace_lut(codebooks, q_resid):
     return chain_sum_m([diff[..., j] * diff[..., j] for j in range(dsub)])
 
 
-def pq_score_ref(codes, attrs, idx, mask, q_resid, codebooks, lo, hi):
+def subspace_lut_ip(codebooks, q_resid):
+    """Per-subspace negated-inner-product ADC table: (m, ks, dsub),
+    (d_pad,) -> (m, ks).  Summing the m tables reconstructs
+    ``-(q · decode(code))`` (codes are raw for ip — quant/params.py rejects
+    residual centering off-l2, and the zero-padded tail contributes exact
+    zeros).  Same explicit fold as :func:`subspace_lut`, same sharing
+    contract: the jnp path and the pq_score kernel both call this one
+    expression, so the two scoring paths agree bitwise."""
+    m, _, dsub = codebooks.shape
+    qs = q_resid.reshape(m, 1, dsub)
+    prod = codebooks * qs
+    return chain_sum_m([-prod[..., j] for j in range(dsub)])
+
+
+def adc_lut(codebooks, q_resid, metric="l2"):
+    """Metric dispatch for the shared ADC table expressions."""
+    if metric == "l2":
+        return subspace_lut(codebooks, q_resid)
+    if metric == "ip":
+        return subspace_lut_ip(codebooks, q_resid)
+    raise ValueError(f"unknown kernel metric {metric!r}; expected 'l2' or 'ip'")
+
+
+def pq_score_ref(codes, attrs, idx, mask, q_resid, codebooks, lo, hi, metric="l2"):
     """ADC oracle: LUT build + code-gather scoring + DNF predicate.
 
     ``codes``: (N + 1, m) uint8 (sentinel row N); sentinel ids are
@@ -71,7 +128,7 @@ def pq_score_ref(codes, attrs, idx, mask, q_resid, codebooks, lo, hi):
     n = codes.shape[0] - 1
     safe = jnp.where(mask, jnp.clip(idx, 0, n), n)
     valid = mask & (safe < n)
-    lut = subspace_lut(codebooks, q_resid)  # (m, ks)
+    lut = adc_lut(codebooks, q_resid, metric)  # (m, ks)
     cd = codes[safe].astype(jnp.int32)  # (V, m)
     vals = lut[jnp.arange(codebooks.shape[0])[None, :], cd]  # (V, m)
     dist = chain_sum_m([vals[:, mi] for mi in range(codebooks.shape[0])])
@@ -81,17 +138,19 @@ def pq_score_ref(codes, attrs, idx, mask, q_resid, codebooks, lo, hi):
     return jnp.where(valid, dist, jnp.inf), passed
 
 
-def pq_score_batch_ref(codes, attrs, idx, mask, q_resid, codebooks, lo, hi):
+def pq_score_batch_ref(codes, attrs, idx, mask, q_resid, codebooks, lo, hi, metric="l2"):
     """Batched (B, V) ADC oracle: per-lane query residuals and bounds."""
     return jax.vmap(
-        lambda i, m, q, l, h: pq_score_ref(codes, attrs, i, m, q, codebooks, l, h)
+        lambda i, m, q, l, h: pq_score_ref(codes, attrs, i, m, q, codebooks, l, h, metric)
     )(idx, mask, q_resid, lo, hi)
 
 
-def ivf_score_ref(queries, centroids):
+def ivf_score_ref(queries, centroids, metric="l2"):
+    qc = queries.astype(jnp.float32) @ centroids.astype(jnp.float32).T
+    if metric == "ip":
+        return -qc
     q2 = jnp.sum(queries.astype(jnp.float32) ** 2, axis=1, keepdims=True)
     c2 = jnp.sum(centroids.astype(jnp.float32) ** 2, axis=1)
-    qc = queries.astype(jnp.float32) @ centroids.astype(jnp.float32).T
     return q2 + c2[None, :] - 2.0 * qc
 
 

@@ -180,12 +180,18 @@ def test_backend_parity(built_index, corpus, case):
 
 
 def test_pallas_backend_routes_visit_through_kernel(built_index, corpus, monkeypatch):
-    """backend="pallas" must hit kernels.filter_distance / kernels.ivf_score
-    at trace time (a fresh ef forces a fresh trace)."""
+    """backend="pallas" must hit the fused kernels.visit_step (the VISIT hot
+    path since engine/5) plus kernels.ivf_score at trace time, and
+    fused_visit=False must fall back to the unfused kernels.filter_distance
+    route (a fresh ef forces a fresh trace for each)."""
     from repro.kernels import ops
 
-    calls = {"filter_distance": 0, "ivf_score": 0}
-    real_fd, real_ivf = ops.filter_distance, ops.ivf_score
+    calls = {"visit_step": 0, "filter_distance": 0, "ivf_score": 0}
+    real_vs, real_fd, real_ivf = ops.visit_step, ops.filter_distance, ops.ivf_score
+
+    def spy_vs(*a, **kw):
+        calls["visit_step"] += 1
+        return real_vs(*a, **kw)
 
     def spy_fd(*a, **kw):
         calls["filter_distance"] += 1
@@ -195,6 +201,7 @@ def test_pallas_backend_routes_visit_through_kernel(built_index, corpus, monkeyp
         calls["ivf_score"] += 1
         return real_ivf(*a, **kw)
 
+    monkeypatch.setattr(ops, "visit_step", spy_vs)
     monkeypatch.setattr(ops, "filter_distance", spy_fd)
     monkeypatch.setattr(ops, "ivf_score", spy_ivf)
     x, attrs, queries = corpus
@@ -203,8 +210,14 @@ def test_pallas_backend_routes_visit_through_kernel(built_index, corpus, monkeyp
     compass_search(
         built_index, jnp.asarray(queries), pred, CompassParams(k=7, ef=48, backend="pallas")
     )
-    assert calls["filter_distance"] > 0
+    assert calls["visit_step"] > 0
+    assert calls["filter_distance"] == 0  # VISIT fused: no unfused kernel calls
     assert calls["ivf_score"] > 0
+    compass_search(
+        built_index, jnp.asarray(queries), pred,
+        CompassParams(k=7, ef=40, backend="pallas", fused_visit=False),
+    )
+    assert calls["filter_distance"] > 0  # unfused route restored on demand
 
 
 def test_unknown_backend_rejected(built_index, corpus):

@@ -1,5 +1,6 @@
 """Per-kernel validation: shape/dtype sweeps, interpret-mode Pallas vs the
 pure-jnp oracle in ref.py, plus hypothesis property tests."""
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -128,3 +129,249 @@ def test_property_flash_attention_row_stochastic(s, seed):
     np.testing.assert_allclose(
         np.asarray(out[:, 0]), np.asarray(v[:, 0]), rtol=1e-5, atol=1e-5
     )
+
+
+# ---------------------------------------------------------------------------
+# Metric sweep: every scoring kernel implements "ip" alongside "l2", sharing
+# the ref path's per-row expression (kernels.ref.row_distance / adc_lut), so
+# parity is *bitwise* — but only inside one compile context: XLA may fuse the
+# eager oracle differently, so both sides go through jax.jit before compare
+# (the discipline test_quant.py established for the LUT chain).
+# ---------------------------------------------------------------------------
+
+
+def _both_jitted(kernel_fn, ref_fn, *args):
+    got = jax.jit(lambda *z: kernel_fn(*z))(*args)
+    want = jax.jit(lambda *z: ref_fn(*z))(*args)
+    return got, want
+
+
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+def test_filter_distance_metric_parity(metric):
+    rng = np.random.default_rng(21)
+    n, d, a, t, v = 120, 24, 3, 2, 33
+    vectors, attrs = _mk_corpus(rng, n, d, a)
+    idx = jnp.asarray(rng.integers(0, n + 1, v).astype(np.int32))
+    mask = jnp.asarray(rng.uniform(size=v) > 0.3)
+    q = jnp.asarray(rng.normal(size=d).astype(np.float32))
+    lo = jnp.asarray(rng.uniform(0, 0.5, (t, a)).astype(np.float32))
+    hi = jnp.asarray(rng.uniform(0.5, 1.0, (t, a)).astype(np.float32))
+    (d_k, p_k), (d_r, p_r) = _both_jitted(
+        lambda *z: ops.filter_distance(*z, metric=metric),
+        lambda *z: ref.filter_distance_ref(*z, metric),
+        vectors, attrs, idx, mask, q, lo, hi,
+    )
+    np.testing.assert_array_equal(np.asarray(d_k), np.asarray(d_r))
+    np.testing.assert_array_equal(np.asarray(p_k), np.asarray(p_r))
+
+
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+def test_ivf_score_ip_matches_ref(metric):
+    rng = np.random.default_rng(22)
+    b, c, d = 5, 130, 40
+    q = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    cent = jnp.asarray(rng.normal(size=(c, d)).astype(np.float32))
+    got = ops.ivf_score(q, cent, metric=metric, bb=2, bc=64, bd=32)
+    want = ref.ivf_score_ref(q, cent, metric)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+def test_pq_score_metric_parity(metric):
+    rng = np.random.default_rng(23)
+    n, a, t, v = 90, 3, 2, 17
+    m, ks, dsub = 4, 16, 4
+    _, attrs = _mk_corpus(rng, n, 8, a)
+    codes = jnp.asarray(
+        np.concatenate(
+            [rng.integers(0, ks, size=(n, m)), np.zeros((1, m), np.int64)]
+        ).astype(np.uint8)
+    )
+    codebooks = jnp.asarray(rng.normal(size=(m, ks, dsub)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, n + 1, v).astype(np.int32))
+    mask = jnp.asarray(rng.uniform(size=v) > 0.3)
+    qr = jnp.asarray(rng.normal(size=m * dsub).astype(np.float32))
+    lo = jnp.asarray(rng.uniform(0, 0.5, (t, a)).astype(np.float32))
+    hi = jnp.asarray(rng.uniform(0.5, 1.0, (t, a)).astype(np.float32))
+    (d_k, p_k), (d_r, p_r) = _both_jitted(
+        lambda *z: ops.pq_score(*z, metric=metric),
+        lambda *z: ref.pq_score_ref(*z, metric),
+        codes, attrs, idx, mask, qr, codebooks, lo, hi,
+    )
+    np.testing.assert_array_equal(np.asarray(d_k), np.asarray(d_r))
+    np.testing.assert_array_equal(np.asarray(p_k), np.asarray(p_r))
+
+
+# ---------------------------------------------------------------------------
+# Fused visit-step kernel: one pallas_call for gather + distance + predicate
+# + tombstone + admission.  rows_per_step blocking must never change the
+# math (rows are independent), so parity is asserted across rb values,
+# metrics, live/no-live, and under vmap (how the engine calls it).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+@pytest.mark.parametrize("with_live", [False, True])
+@pytest.mark.parametrize("rb", [1, 3, None])
+def test_visit_step_matches_ref(metric, with_live, rb):
+    rng = np.random.default_rng(31)
+    n, d, a, t, v = 150, 19, 3, 2, 29  # odd dim, V not a multiple of rb
+    vectors, attrs = _mk_corpus(rng, n, d, a)
+    live = jnp.asarray(rng.uniform(size=n + 1) > 0.2) if with_live else None
+    idx = jnp.asarray(rng.integers(0, n + 1, v).astype(np.int32))
+    mask = jnp.asarray(rng.uniform(size=v) > 0.3)
+    q = jnp.asarray(rng.normal(size=d).astype(np.float32))
+    lo = jnp.asarray(rng.uniform(0, 0.5, (t, a)).astype(np.float32))
+    hi = jnp.asarray(rng.uniform(0.5, 1.0, (t, a)).astype(np.float32))
+    kw = {} if rb is None else {"rows_per_step": rb}
+    (d_k, ad_k), (d_r, ad_r) = _both_jitted(
+        lambda *z: ops.visit_step(*z, metric=metric, **kw),
+        lambda *z: ref.visit_step_ref(*z, metric),
+        vectors, attrs, live, idx, mask, q, lo, hi,
+    )
+    np.testing.assert_array_equal(np.asarray(d_k), np.asarray(d_r))
+    np.testing.assert_array_equal(np.asarray(ad_k), np.asarray(ad_r))
+    # admission semantics: admit is either the distance or +inf, and is +inf
+    # wherever the row is masked out
+    ad = np.asarray(ad_k)
+    dk = np.asarray(d_k)
+    assert np.all(np.isinf(ad) | (ad == dk))
+    assert np.all(np.isinf(ad[~np.asarray(mask)]))
+
+
+def test_visit_step_vmapped_matches_ref():
+    """The engine vmaps per-query visit_step over the batch — blocking and
+    the scalar-prefetch grid must survive batching bitwise."""
+    rng = np.random.default_rng(32)
+    b, n, d, a, t, v = 4, 100, 16, 2, 2, 24
+    vectors, attrs = _mk_corpus(rng, n, d, a)
+    live = jnp.asarray(rng.uniform(size=n + 1) > 0.2)
+    idx = jnp.asarray(rng.integers(0, n + 1, (b, v)).astype(np.int32))
+    mask = jnp.asarray(rng.uniform(size=(b, v)) > 0.3)
+    q = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    lo = jnp.asarray(rng.uniform(0, 0.5, (t, a)).astype(np.float32))
+    hi = jnp.asarray(rng.uniform(0.5, 1.0, (t, a)).astype(np.float32))
+
+    def run(fn):
+        return jax.jit(
+            lambda qs, ids, ms: jax.vmap(
+                lambda q1, i1, m1: fn(vectors, attrs, live, i1, m1, q1, lo, hi)
+            )(qs, ids, ms)
+        )(q, idx, mask)
+
+    (d_k, ad_k) = run(lambda *z: ops.visit_step(*z, metric="l2"))
+    (d_r, ad_r) = run(lambda *z: ref.visit_step_ref(*z, "l2"))
+    np.testing.assert_array_equal(np.asarray(d_k), np.asarray(d_r))
+    np.testing.assert_array_equal(np.asarray(ad_k), np.asarray(ad_r))
+
+
+# ---------------------------------------------------------------------------
+# Per-shape block autotuner (kernels/autotune.py) + env pin resolution
+# (kernels/interpret.py REPRO_PALLAS_BLOCK_*).
+# ---------------------------------------------------------------------------
+
+
+def test_autotune_pin_beats_measured_table(monkeypatch):
+    from repro.kernels import autotune
+
+    autotune.clear()
+    cands = [{"rb": 4}, {"rb": 1}, {"rb": 8}]
+    # pre-populate the measured table with a different winner
+    autotune._TABLE[("visit_step", ("x",))] = {"rb": 8}
+    monkeypatch.setenv("REPRO_PALLAS_BLOCK_VISIT_STEP", "rb=2")
+    got = autotune.choose("visit_step", ("x",), cands)
+    assert got == {"rb": 2}  # env pin wins over the measured table
+    monkeypatch.delenv("REPRO_PALLAS_BLOCK_VISIT_STEP")
+    assert autotune.choose("visit_step", ("x",), cands) == {"rb": 8}
+    autotune.clear()
+
+
+def test_autotune_pin_fills_missing_fields(monkeypatch):
+    from repro.kernels import autotune
+
+    autotune.clear()
+    cands = [{"bb": 8, "bc": 128, "bd": 128}, {"bb": 16, "bc": 128, "bd": 128}]
+    monkeypatch.setenv("REPRO_PALLAS_BLOCK_IVF_SCORE", "bb=4")
+    got = autotune.choose("ivf_score", ("y",), cands)
+    assert got == {"bb": 4, "bc": 128, "bd": 128}  # defaults fill the rest
+    autotune.clear()
+
+
+def test_autotune_measures_each_shape_once(monkeypatch):
+    from repro.kernels import autotune
+
+    autotune.clear()
+    monkeypatch.setenv("REPRO_PALLAS_AUTOTUNE", "1")
+    calls = []
+
+    def fake_measure(cand):
+        calls.append(dict(cand))
+        return 1.0 if cand["rb"] == 4 else 0.5
+
+    cands = [{"rb": 4}, {"rb": 2}]
+    got1 = autotune.choose("visit_step", ("shape_a",), cands, fake_measure)
+    n_after_first = len(calls)
+    got2 = autotune.choose("visit_step", ("shape_a",), cands, fake_measure)
+    assert got1 == got2 == {"rb": 2}  # fastest candidate cached
+    # every candidate was probed (warmup + reps each), but the second choose
+    # hit the table: measured once per shape, not per call
+    assert {c["rb"] for c in calls} == {4, 2} and len(calls) == n_after_first
+    assert autotune._N_MEASURED[("visit_step", ("shape_a",))] == 1
+    autotune.choose("visit_step", ("shape_b",), cands, fake_measure)
+    assert len(calls) > n_after_first  # a new shape re-measures
+    autotune.clear()
+
+
+def test_autotune_disabled_uses_default(monkeypatch):
+    from repro.kernels import autotune
+
+    autotune.clear()
+    monkeypatch.setenv("REPRO_PALLAS_AUTOTUNE", "0")
+    calls = []
+
+    def fake_measure(cand):
+        calls.append(cand)
+        return 1.0
+
+    got = autotune.choose("visit_step", ("z",), [{"rb": 4}, {"rb": 2}], fake_measure)
+    assert got == {"rb": 4} and not calls  # candidates[0], nothing measured
+    autotune.clear()
+
+
+def test_visit_step_env_pin_end_to_end(monkeypatch):
+    """A pinned rb must actually reach the kernel — and, because blocking
+    never changes the math, stay bitwise identical to the ref oracle."""
+    from repro.kernels import autotune
+
+    autotune.clear()
+    monkeypatch.setenv("REPRO_PALLAS_BLOCK_VISIT_STEP", "rb=2")
+    rng = np.random.default_rng(33)
+    n, d, a, t, v = 80, 12, 2, 2, 21
+    vectors, attrs = _mk_corpus(rng, n, d, a)
+    idx = jnp.asarray(rng.integers(0, n + 1, v).astype(np.int32))
+    mask = jnp.asarray(rng.uniform(size=v) > 0.3)
+    q = jnp.asarray(rng.normal(size=d).astype(np.float32))
+    lo = jnp.asarray(rng.uniform(0, 0.5, (t, a)).astype(np.float32))
+    hi = jnp.asarray(rng.uniform(0.5, 1.0, (t, a)).astype(np.float32))
+    (d_k, ad_k), (d_r, ad_r) = _both_jitted(
+        lambda *z: ops.visit_step(*z, metric="l2"),
+        lambda *z: ref.visit_step_ref(*z, "l2"),
+        vectors, attrs, None, idx, mask, q, lo, hi,
+    )
+    np.testing.assert_array_equal(np.asarray(d_k), np.asarray(d_r))
+    np.testing.assert_array_equal(np.asarray(ad_k), np.asarray(ad_r))
+    autotune.clear()
+
+
+def test_block_override_parsing(monkeypatch):
+    from repro.kernels.interpret import block_override
+
+    monkeypatch.delenv("REPRO_PALLAS_BLOCK_VISIT_STEP", raising=False)
+    assert block_override("visit_step") == {}
+    monkeypatch.setenv("REPRO_PALLAS_BLOCK_VISIT_STEP", "rb=4")
+    assert block_override("visit_step") == {"rb": 4}
+    monkeypatch.setenv("REPRO_PALLAS_BLOCK_IVF_SCORE", "bb=8, bc=256")
+    assert block_override("ivf_score") == {"bb": 8, "bc": 256}
+    monkeypatch.setenv("REPRO_PALLAS_BLOCK_VISIT_STEP", "rb=four")
+    with pytest.raises(ValueError, match="REPRO_PALLAS_BLOCK_VISIT_STEP"):
+        block_override("visit_step")

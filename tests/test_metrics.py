@@ -1,0 +1,233 @@
+"""End-to-end metric coverage: "ip" runs the full kernel path (engine/5),
+"cos" is rewritten to ip over normalized rows at the build/search entries.
+
+Parity discipline: ref-vs-pallas comparisons are *bitwise* (ids, dists,
+n_dist) because both backends evaluate the shared per-row expression
+(kernels.ref.row_distance) inside the same compiled program.  cos-vs-ip
+comparisons cross two compile contexts (the cos run normalizes queries
+inside its own jit), so ids are asserted equal but dists only to ~1 ULP.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import predicate as P
+from repro.core.baselines import brute_force, recall
+from repro.core.distances import normalize_rows
+from repro.core.index import BuildConfig, build_index
+from repro.core.planner import plan as QP
+from repro.core.search import CompassParams, compass_search
+
+
+@pytest.fixture(scope="module")
+def mcorpus():
+    rng = np.random.default_rng(42)
+    n, d, a = 2500, 16, 4
+    centers = rng.normal(size=(24, d)).astype(np.float32) * 3
+    x = (centers[rng.integers(0, 24, n)] + rng.normal(size=(n, d))).astype(np.float32)
+    attrs = rng.uniform(size=(n, a)).astype(np.float32)
+    queries = (centers[rng.integers(0, 24, 12)] + rng.normal(size=(12, d))).astype(
+        np.float32
+    )
+    return x, attrs, queries
+
+
+@pytest.fixture(scope="module")
+def ip_index(mcorpus):
+    x, attrs, _ = mcorpus
+    return build_index(x, attrs, BuildConfig(m=10, nlist=16, metric="ip"))
+
+
+@pytest.fixture(scope="module")
+def cos_index(mcorpus):
+    x, attrs, _ = mcorpus
+    return build_index(x, attrs, BuildConfig(m=10, nlist=16, metric="cos"))
+
+
+def _preds(rng, n_queries, n_attrs, passrate, n_terms, disj=False):
+    preds = []
+    for _ in range(n_queries):
+        terms = []
+        for a in range(n_terms):
+            lo = rng.uniform(0, 1 - passrate)
+            terms.append(P.Pred.range(a, lo, lo + passrate))
+        tree = P.Pred.or_(*terms) if disj else P.Pred.and_(*terms)
+        preds.append(tree.tensor(n_attrs))
+    return P.stack_predicates(preds)
+
+
+def _assert_bitwise(a, b):
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    np.testing.assert_array_equal(np.asarray(a.dists), np.asarray(b.dists))
+    np.testing.assert_array_equal(
+        np.asarray(a.stats.n_dist), np.asarray(b.stats.n_dist)
+    )
+
+
+_CASES = {
+    "conjunction": dict(passrate=0.3, n_terms=2, disj=False),
+    "disjunction": dict(passrate=0.3, n_terms=3, disj=True),
+    "high_selectivity": dict(passrate=0.05, n_terms=2, disj=False),
+}
+
+
+@pytest.mark.parametrize("case", sorted(_CASES))
+def test_ip_backend_parity(ip_index, mcorpus, case):
+    x, attrs, queries = mcorpus
+    rng = np.random.default_rng(50)
+    pred = _preds(rng, 12, 4, **_CASES[case])
+    qj = jnp.asarray(queries)
+    r = compass_search(ip_index, qj, pred, CompassParams(k=10, ef=64, metric="ip", backend="ref"))
+    p = compass_search(ip_index, qj, pred, CompassParams(k=10, ef=64, metric="ip", backend="pallas"))
+    _assert_bitwise(r, p)
+
+
+def test_ip_fused_equals_unfused(ip_index, mcorpus):
+    """CompassParams.fused_visit is a pure execution-strategy knob: the
+    fused visit_step kernel and the unfused filter_distance route must be
+    bitwise interchangeable on the pallas backend (and fused is a no-op
+    relabel on ref)."""
+    x, attrs, queries = mcorpus
+    rng = np.random.default_rng(51)
+    pred = _preds(rng, 12, 4, 0.3, 2)
+    qj = jnp.asarray(queries)
+    for metric in ("l2", "ip"):
+        idx = ip_index if metric == "ip" else build_index(
+            x, attrs, BuildConfig(m=10, nlist=16)
+        )
+        fused = compass_search(
+            idx, qj, pred, CompassParams(k=10, ef=48, metric=metric, backend="pallas")
+        )
+        unfused = compass_search(
+            idx, qj, pred,
+            CompassParams(k=10, ef=48, metric=metric, backend="pallas", fused_visit=False),
+        )
+        _assert_bitwise(fused, unfused)
+
+
+@pytest.mark.parametrize(
+    "workload,mode",
+    [
+        ("prefilter", QP.PREFILTER),
+        ("cooperative", QP.COOPERATIVE),
+        ("postfilter", QP.POSTFILTER),
+    ],
+)
+def test_ip_planner_modes_parity(ip_index, mcorpus, workload, mode):
+    """Every planner execution mode runs ip bitwise-identically across
+    backends — PREFILTER exercises the batched scan_scores kernel path,
+    POSTFILTER the graph-only loop, COOPERATIVE the paper loop."""
+    x, attrs, queries = mcorpus
+    rng = np.random.default_rng(52)
+    passrate = {"prefilter": 0.01, "cooperative": 0.3, "postfilter": 1.0}[workload]
+    n_terms = 2 if workload == "cooperative" else 1
+    pred = _preds(rng, 12, 4, passrate, n_terms)
+    qj = jnp.asarray(queries)
+    pm = CompassParams(k=10, ef=64, metric="ip", planner=True, backend="ref")
+    r = compass_search(ip_index, qj, pred, pm)
+    p = compass_search(ip_index, qj, pred, dataclasses.replace(pm, backend="pallas"))
+    assert np.all(np.asarray(r.stats.mode) == mode), np.asarray(r.stats.mode)
+    np.testing.assert_array_equal(np.asarray(r.stats.mode), np.asarray(p.stats.mode))
+    _assert_bitwise(r, p)
+
+
+def test_ip_recall_against_brute_force(ip_index, mcorpus):
+    x, attrs, queries = mcorpus
+    rng = np.random.default_rng(53)
+    pred = _preds(rng, 12, 4, 0.4, 2)
+    qj = jnp.asarray(queries)
+    truth = brute_force(
+        jnp.asarray(x), jnp.asarray(attrs), qj, pred, 10, metric="ip"
+    )
+    res = compass_search(
+        ip_index, qj, pred, CompassParams(k=10, ef=128, metric="ip", backend="pallas")
+    )
+    r = recall(np.asarray(res.ids), np.asarray(truth.ids), np.asarray(truth.dists), x.shape[0])
+    assert r >= 0.85, r
+    # returned dists really are negated inner products of the returned rows
+    ids = np.asarray(res.ids)
+    dists = np.asarray(res.dists)
+    valid = ids[0] < x.shape[0]
+    want = -(x[ids[0][valid]] @ queries[0])
+    np.testing.assert_allclose(dists[0][valid], want, rtol=1e-5)
+
+
+def test_cos_backend_parity_and_ip_equivalence(cos_index, mcorpus):
+    """cos ref-vs-pallas is bitwise (one rewrite, then the ip path); cos
+    must equal ip-over-pre-normalized-data up to query-normalization ULPs
+    (ids exactly — dists cross compile contexts, so ~1 ULP)."""
+    x, attrs, queries = mcorpus
+    rng = np.random.default_rng(54)
+    pred = _preds(rng, 12, 4, 0.3, 2)
+    qj = jnp.asarray(queries)
+    r = compass_search(cos_index, qj, pred, CompassParams(k=10, ef=64, metric="cos", backend="ref"))
+    p = compass_search(cos_index, qj, pred, CompassParams(k=10, ef=64, metric="cos", backend="pallas"))
+    _assert_bitwise(r, p)
+
+    xn = np.asarray(normalize_rows(x))
+    ip_idx = build_index(xn, attrs, BuildConfig(m=10, nlist=16, metric="ip"))
+    qn = normalize_rows(qj)
+    ri = compass_search(ip_idx, qn, pred, CompassParams(k=10, ef=64, metric="ip", backend="ref"))
+    np.testing.assert_array_equal(np.asarray(r.ids), np.asarray(ri.ids))
+    np.testing.assert_allclose(np.asarray(r.dists), np.asarray(ri.dists), atol=1e-6)
+    # cosine distances live in [-1, 1] (negated similarity of unit rows)
+    finite = np.isfinite(np.asarray(r.dists))
+    assert np.all(np.abs(np.asarray(r.dists)[finite]) <= 1.0 + 1e-5)
+
+
+def test_quant_adc_under_ip(ip_index, mcorpus):
+    """The quantized tier under ip: raw (uncentered) codebooks, negated-IP
+    ADC tables — ref and pallas bitwise, and the rerank contract holds."""
+    from repro.core.quant import QuantConfig, QuantParams, quantize_index
+
+    x, attrs, queries = mcorpus
+    rng = np.random.default_rng(55)
+    pred = _preds(rng, 12, 4, 0.4, 2)
+    qj = jnp.asarray(queries)
+    qidx = quantize_index(ip_index, QuantConfig(m=8, ks=16), metric="ip")
+    assert np.all(np.asarray(qidx.qvecs.mean) == 0.0)  # raw encoding for ip
+    pm = CompassParams(k=10, ef=64, metric="ip", quant=QuantParams(refine_factor=4))
+    r = compass_search(qidx, qj, pred, dataclasses.replace(pm, backend="ref"))
+    p = compass_search(qidx, qj, pred, dataclasses.replace(pm, backend="pallas"))
+    np.testing.assert_array_equal(np.asarray(r.ids), np.asarray(p.ids))
+    np.testing.assert_array_equal(np.asarray(r.dists), np.asarray(p.dists))
+    assert np.all(np.asarray(p.stats.n_adc) > 0)
+    assert np.all(np.asarray(p.stats.n_rerank) > 0)
+    # rerank="full" means returned dists are exact ip of the returned rows
+    ids = np.asarray(p.ids)
+    valid = ids[0] < x.shape[0]
+    want = -(x[ids[0][valid]] @ queries[0])
+    np.testing.assert_allclose(np.asarray(p.dists)[0][valid], want, rtol=1e-5)
+
+
+def test_mutable_ip_delta_parity(ip_index, mcorpus):
+    from repro.core.mutable import MutableIndex
+
+    x, attrs, queries = mcorpus
+    rng = np.random.default_rng(56)
+    pred = _preds(rng, 12, 4, 0.4, 2)
+    qj = jnp.asarray(queries)
+    mi = MutableIndex(ip_index, metric="ip", delta_cap=64)
+    for i in range(24):
+        mi.upsert(
+            50_000 + i,
+            rng.normal(size=x.shape[1]).astype(np.float32),
+            rng.uniform(size=attrs.shape[1]).astype(np.float32),
+        )
+    mi.delete(int(np.asarray(compass_search(
+        ip_index, qj[:1], P.Predicate(pred.lo[:1], pred.hi[:1]),
+        CompassParams(k=1, ef=16, metric="ip"),
+    ).ids)[0, 0]))  # tombstone a known-good result: the live mask must hide it
+    r = mi.search(qj, pred, CompassParams(k=10, ef=64, metric="ip", backend="ref"))
+    p = mi.search(qj, pred, CompassParams(k=10, ef=64, metric="ip", backend="pallas"))
+    np.testing.assert_array_equal(np.asarray(r.ids), np.asarray(p.ids))
+    np.testing.assert_array_equal(np.asarray(r.dists), np.asarray(p.dists))
+
+
+def test_mutable_rejects_cos(ip_index):
+    from repro.core.mutable import MutableIndex
+
+    with pytest.raises(ValueError, match="cos"):
+        MutableIndex(ip_index, metric="cos")
