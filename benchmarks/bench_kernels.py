@@ -193,7 +193,7 @@ def selfcheck() -> None:
     from repro.core import predicate as P
     from repro.core.engine.backend import PallasBackend
     from repro.core.index import BuildConfig, build_index
-    from repro.core.search import CompassParams, compass_search
+    from repro.compass import CompassParams, compass_search
     import repro.kernels.visit_step as vs
 
     rng = np.random.default_rng(0)

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.planner.plan import MODE_NAMES
-from repro.core.search import CompassParams, compass_search
+from repro.compass import CompassParams, compass_search
 
 from . import common as C
 

@@ -36,7 +36,7 @@ from repro.core.quant import (
     quantize_index,
     residual_queries,
 )
-from repro.core.search import CompassParams, compass_search
+from repro.compass import CompassParams, compass_search
 
 from . import common as C
 

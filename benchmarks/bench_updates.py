@@ -7,7 +7,14 @@ search batches across ``ROUNDS`` rounds, sized so the delta segment
 overflows and triggers online compaction mid-run, then reports
 
   * steady-state search QPS during churn (per workload: a moderate
-    conjunction and a ≤1% "narrow" predicate, planner on),
+    conjunction and a ≤1% "narrow" predicate, planner on), with per-call
+    p50/p99 latency — only round 0 warms up, so any epoch-crossing
+    recompile lands in a *timed* call and shows up as a p99 cliff,
+  * per-phase compile accounting (``n_compiles`` / ``n_cache_hits`` on
+    every row, measured as jit trace-cache deltas): the shape-stable
+    serving claim is ``n_compiles == occupied buckets`` after round 0 —
+    zero recompiles across compaction epochs under the default
+    ``ShapePolicy`` row bucketing (the ``steady_state`` row),
   * final recall vs exact brute force over the materialized table, next to
     a fresh ``build_index`` over the same table searched identically
     (recall-vs-fresh-rebuild: the delta/tombstone machinery should cost
@@ -17,19 +24,26 @@ overflows and triggers online compaction mid-run, then reports
   * the rebuild-per-write strawman: a build-once index absorbs a write
     only by rebuilding, so its write "QPS" is 1/build_time — the
     ``speedup_vs_rebuild_per_write`` figure is the point of the subsystem.
+
+``--selfcheck`` is the CI tripwire (exit 1 on failure): a tiny churn run
+crossing ≥3 compaction epochs asserting (a) zero steady-state recompiles
+for the bucketed index and (b) bitwise result parity against an unbucketed
+(``bucket_rows=False``) twin fed the identical write history — padding
+rows never surface.
 """
 from __future__ import annotations
 
 import os
+import sys
 import time
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compass import CompassParams, MutableIndex, ShapePolicy, compass_search
 from repro.core.baselines import brute_force, recall
 from repro.core.index import BuildConfig, build_index
-from repro.core.mutable import MutableIndex
-from repro.core.search import CompassParams, compass_search
+from repro.core.mutable import mutable_search
 
 from . import common as C
 
@@ -44,6 +58,15 @@ WORKLOADS = {
     "narrow": (1, 0.01, 0.01, False),
     "disj": (4, 0.05, 0.19, True),
 }
+
+
+def _cache_entries() -> int:
+    """Total jitted-trace cache entries on the two search entry points.
+
+    Deltas of this figure around a phase are that phase's compile count:
+    each entry is one (shapes, static params) trace, i.e. one XLA compile.
+    """
+    return int(mutable_search._cache_size()) + int(compass_search._cache_size())
 
 
 def _recall_gids(res_ids, truth, table_gids, n_table) -> float:
@@ -73,17 +96,23 @@ def run(dataset: str = "SYN-EASY", out=print):
     }
     out(
         f"# updates bench dataset={dataset} n={C.N} delta_cap={DELTA_CAP} "
-        f"rounds={ROUNDS} writes/round={DELTA_CAP // 2} build={build_s:.1f}s"
+        f"rounds={ROUNDS} writes/round={DELTA_CAP // 2} build={build_s:.1f}s "
+        f"row_bucket={mi.base.n_records}"
     )
 
     live = list(range(C.N))
     next_gid = C.N
     write_wall = 0.0
+    write_compiles = 0
     n_writes = 0
-    search_wall = {w: 0.0 for w in WORKLOADS}
-    search_q = {w: 0 for w in WORKLOADS}
-    for _ in range(ROUNDS):
+    lat_ms = {w: [] for w in WORKLOADS}  # per-call, rounds >= 1 untruncated
+    n_calls = {w: 0 for w in WORKLOADS}
+    wl_compiles = {w: 0 for w in WORKLOADS}
+    compiles_by_round = []  # search-phase compile deltas, one per round
+    epoch_by_round = []
+    for rnd in range(ROUNDS):
         t0 = time.time()
+        c0 = _cache_entries()
         for _ in range(DELTA_CAP // 2):
             u = rng.random()
             if u < 0.6 or not live:
@@ -101,14 +130,24 @@ def run(dataset: str = "SYN-EASY", out=print):
                 mi.delete(gid)
             n_writes += 1
         write_wall += time.time() - t0
+        write_compiles += _cache_entries() - c0
+        c_round = _cache_entries()
         for name, pred in preds.items():
-            mi.search(qj, pred, pm).ids.block_until_ready()  # warmup/compile
-            t0 = time.time()
+            c0 = _cache_entries()
+            if rnd == 0:  # warmup: the bucket's one expected compile
+                mi.search(qj, pred, pm).ids.block_until_ready()
+                n_calls[name] += 1
+            # rounds >= 1 run untruncated: a post-compaction recompile
+            # would land in a timed call and surface in the p99 column
             for _ in range(REPS):
+                t1 = time.time()
                 res = mi.search(qj, pred, pm)
                 res.ids.block_until_ready()
-            search_wall[name] += time.time() - t0
-            search_q[name] += REPS * C.N_QUERIES
+                lat_ms[name].append((time.time() - t1) * 1e3)
+            n_calls[name] += REPS
+            wl_compiles[name] += _cache_entries() - c0
+        compiles_by_round.append(_cache_entries() - c_round)
+        epoch_by_round.append(mi.epoch)
 
     # final-state evaluation: exact truth over the materialized table, and a
     # fresh rebuild over the very same table as the recall reference point
@@ -118,23 +157,26 @@ def run(dataset: str = "SYN-EASY", out=print):
     fresh = build_index(vec, att, cfg)
     rebuild_s = time.time() - t0
     rows = []
-    out("workload,passrate,mutable_qps,mutable_recall,rebuild_recall")
+    out("workload,passrate,mutable_qps,p99_ms,n_compiles,mutable_recall,rebuild_recall")
     for name, (_, _, passrate, _) in WORKLOADS.items():
         pred = preds[name]
         truth = brute_force(jnp.asarray(vec), jnp.asarray(att), qj, pred, C.K)
         res_m = mi.search(qj, pred, pm)
         r_mut = _recall_gids(res_m.ids, truth, gids, n_table)
+        c0 = _cache_entries()
         compass_search(fresh, qj, pred, pm).ids.block_until_ready()  # warmup
         t0 = time.time()
         res_f = compass_search(fresh, qj, pred, pm)
         res_f.ids.block_until_ready()
         fresh_wall = time.time() - t0
+        fresh_compiles = _cache_entries() - c0
         r_fresh = _recall_gids(
             np.where(np.asarray(res_f.ids) < n_table,
                      gids[np.clip(np.asarray(res_f.ids), 0, n_table - 1)], -1),
             truth, gids, n_table,
         )
-        qps_mut = search_q[name] / search_wall[name] if search_wall[name] else 0.0
+        lat = np.asarray(lat_ms[name])
+        qps_mut = REPS * ROUNDS * C.N_QUERIES / lat.sum() * 1e3 if lat.size else 0.0
         rows.append(
             {
                 "phase": "search_churn",
@@ -146,6 +188,12 @@ def run(dataset: str = "SYN-EASY", out=print):
                 "recall": r_mut,
                 "recall_fresh_rebuild": r_fresh,
                 "n_dist": float(np.asarray(res_m.stats.n_dist).mean()),
+                "n_compiles": wl_compiles[name],
+                "n_cache_hits": n_calls[name] - wl_compiles[name],
+                # batch-call latency across every churn round — compaction
+                # events included, so epoch-crossing cliffs show here
+                "p50_ms": float(np.percentile(lat, 50)) if lat.size else 0.0,
+                "p99_ms": float(np.percentile(lat, 99)) if lat.size else 0.0,
             }
         )
         rows.append(
@@ -157,9 +205,44 @@ def run(dataset: str = "SYN-EASY", out=print):
                 "ef": EF,
                 "qps": C.N_QUERIES / fresh_wall if fresh_wall else 0.0,
                 "recall": r_fresh,
+                "n_compiles": fresh_compiles,
+                "n_cache_hits": 2 - fresh_compiles,
             }
         )
-        out(f"{name},{passrate},{qps_mut:.1f},{r_mut:.4f},{r_fresh:.4f}")
+        out(
+            f"{name},{passrate},{qps_mut:.1f},"
+            f"{float(np.percentile(lat, 99)) if lat.size else 0:.1f},"
+            f"{wl_compiles[name]},{r_mut:.4f},{r_fresh:.4f}"
+        )
+
+    # the shape-stable serving claim, measured: round 0 compiles the
+    # occupied buckets; every later round (compactions included) must
+    # re-use them.  steady_compiles > 0 means a shape leaked.
+    warm_compiles = compiles_by_round[0] if compiles_by_round else 0
+    steady_compiles = sum(compiles_by_round[1:])
+    steady_calls = sum(n_calls.values()) - len(WORKLOADS)  # minus warmups
+    rows.append(
+        {
+            "phase": "steady_state",
+            "qps": sum(
+                REPS * ROUNDS * C.N_QUERIES / np.asarray(v).sum() * 1e3
+                for v in lat_ms.values()
+                if np.asarray(v).size
+            ),
+            "n_compiles": steady_compiles,
+            "n_cache_hits": steady_calls - steady_compiles,
+            "occupied_buckets": warm_compiles,
+            "compiles_by_round": compiles_by_round,
+            "epoch_by_round": epoch_by_round,
+            "epochs_crossed": mi.epoch,
+            "row_bucket": mi.base.n_records,
+            "zero_steady_state_recompiles": steady_compiles == 0,
+        }
+    )
+    out(
+        f"steady state: {warm_compiles} warmup compiles (occupied buckets), "
+        f"{steady_compiles} recompiles across {mi.epoch} compaction epochs"
+    )
 
     pauses = mi.compaction_log
     write_qps = n_writes / write_wall if write_wall else 0.0
@@ -171,6 +254,8 @@ def run(dataset: str = "SYN-EASY", out=print):
             "method": "mutable_write",
             "qps": write_qps,
             "n_writes": n_writes,
+            "n_compiles": write_compiles,
+            "n_cache_hits": 0,
             "compaction_count": len(pauses),
             "compaction_mean_s": float(np.mean(pauses)) if pauses else 0.0,
             "compaction_max_s": float(np.max(pauses)) if pauses else 0.0,
@@ -189,7 +274,95 @@ def run(dataset: str = "SYN-EASY", out=print):
     return rows
 
 
-def main():
+def selfcheck(out=print) -> int:
+    """CI tripwire: zero steady-state recompiles + bitwise bucket parity.
+
+    Tiny corpus, fixed sizes (independent of the REPRO_BENCH_* knobs so the
+    gate is stable): churn a bucketed index and an unbucketed twin through
+    the identical write history across >= 3 compaction epochs; after one
+    warmup search the bucketed index must add zero jit cache entries, and
+    every round's results must match the twin's bitwise (ids and dists).
+    Returns a process exit code (0 ok, 1 failed).
+    """
+    rng = np.random.default_rng(0)
+    n, d, cap = 600, 16, 48
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    at = rng.uniform(size=(n, C.N_ATTRS)).astype(np.float32)
+    q = jnp.asarray(rng.normal(size=(8, d)).astype(np.float32))
+    cfg = BuildConfig(m=8, nlist=16, kmeans_iters=4)
+    mi = MutableIndex.build(x, at, cfg, shape=ShapePolicy(min_rows=1024, delta_cap=cap))
+    ref = MutableIndex.build(
+        x, at, cfg, delta_cap=cap, shape=ShapePolicy(bucket_rows=False)
+    )
+    pm = CompassParams(k=C.K, ef=32, planner=True, backend=C.BACKEND)
+    pred = C.make_workload(rng, 8, 0.3, 2, False)
+    assert mi.base.n_records == 1024, mi.base.n_records
+
+    mi.search(q, pred, pm).ids.block_until_ready()  # warmup: the one compile
+    failures = []
+    steady_compiles = 0
+    live = list(range(n))
+    next_gid = n
+    rounds = 0
+    while len(mi.compaction_log) < 3 and rounds < 30:
+        rounds += 1
+        for _ in range(cap // 2):
+            u = rng.random()
+            if u < 0.6 or not live:
+                gid, next_gid = next_gid, next_gid + 1
+                live.append(gid)
+                v = rng.normal(size=d).astype(np.float32)
+                a = rng.uniform(size=C.N_ATTRS).astype(np.float32)
+                mi.upsert(gid, v, a)
+                ref.upsert(gid, v, a)
+            elif u < 0.8:
+                gid = live[rng.integers(len(live))]
+                v = rng.normal(size=d).astype(np.float32)
+                a = rng.uniform(size=C.N_ATTRS).astype(np.float32)
+                mi.upsert(gid, v, a)
+                ref.upsert(gid, v, a)
+            else:
+                gid = live.pop(int(rng.integers(len(live))))
+                mi.delete(gid)
+                ref.delete(gid)
+        # measure the cache delta around the *bucketed* search only — the
+        # twin legitimately recompiles every epoch (that is the baseline
+        # behaviour this subsystem removes)
+        c0 = _cache_entries()
+        r_b = mi.search(q, pred, pm)
+        r_b.ids.block_until_ready()
+        steady_compiles += _cache_entries() - c0
+        r_u = ref.search(q, pred, pm)
+        if not (
+            np.array_equal(np.asarray(r_b.ids), np.asarray(r_u.ids))
+            and np.array_equal(np.asarray(r_b.dists), np.asarray(r_u.dists))
+        ):
+            failures.append(f"round {rounds}: bucketed != unbucketed results")
+    if len(mi.compaction_log) < 3:
+        failures.append(f"only {len(mi.compaction_log)} compactions in {rounds} rounds")
+    if mi.epoch != ref.epoch:
+        failures.append(f"epoch drift: bucketed {mi.epoch} vs twin {ref.epoch}")
+    if steady_compiles != 0:
+        failures.append(
+            f"{steady_compiles} steady-state recompiles across "
+            f"{len(mi.compaction_log)} compactions (expected 0)"
+        )
+    if failures:
+        for f in failures:
+            out(f"FAIL bench_updates selfcheck: {f}")
+        return 1
+    out(
+        f"ok bench_updates selfcheck: 0 steady-state recompiles, bitwise "
+        f"parity over {rounds} rounds / {len(mi.compaction_log)} compactions "
+        f"(bucket {mi.base.n_records} rows, twin at {ref.base.n_records})"
+    )
+    return 0
+
+
+def main(argv: list[str] | None = None):
+    args = sys.argv[1:] if argv is None else argv
+    if "--selfcheck" in args:
+        sys.exit(selfcheck())
     run()
 
 

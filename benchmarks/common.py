@@ -24,7 +24,7 @@ import numpy as np
 from repro.core import predicate as P
 from repro.core.baselines import brute_force, navix_search, postfilter_search, prefilter_search, recall
 from repro.core.index import BuildConfig, build_index
-from repro.core.search import CompassParams, compass_search
+from repro.compass import CompassParams, compass_search
 from repro.data.synthetic import make_vector_corpus
 
 CACHE = os.path.join(os.path.dirname(__file__), ".cache")
@@ -41,7 +41,8 @@ def bench_metadata() -> dict:
     """Provenance block written into every BENCH_*.json: which engine and
     backend produced the numbers, on what platform/scale — so benchmark
     trajectories across PRs stay attributable."""
-    from repro.core.search import ENGINE_VERSION, resolve_backend
+    from repro.compass import ENGINE_VERSION
+    from repro.core.engine import resolve_backend
 
     return {
         "engine_version": ENGINE_VERSION,

@@ -23,9 +23,13 @@ META_REQUIRED = ("engine_version", "backend", "platform", "jax_version", "n")
 # listed — their shape is covered by the envelope check alone).
 ROW_REQUIRED = {
     "bench_planner": ("workload", "passrate", "mode_counts", "planner", "cooperative"),
-    # every updates row carries a phase + a qps figure; search rows add
-    # workload/recall, the writes row adds the compaction profile
-    "bench_updates": ("phase", "qps"),
+    # every updates row carries a phase, a qps figure and the compile
+    # accounting (the shape-stable serving claim is only a claim if the
+    # recompile count ships in the artifact); search rows add
+    # workload/recall + p50/p99 latency, the steady_state row the
+    # occupied-bucket/per-round compile breakdown, the writes row the
+    # compaction profile
+    "bench_updates": ("phase", "qps", "n_compiles", "n_cache_hits"),
     # sweep rows add recall_vs_exact + quant/exact RunResults; scan rows
     # (workload == "scan") add adc_scan/exact_scan QPS instead
     "bench_quant": ("workload", "m", "refine_factor", "bytes_per_vector"),

@@ -15,7 +15,7 @@ from repro.core.baselines import brute_force, recall
 from repro.core.index import BuildConfig, build_index
 from repro.core.mutable import MutableIndex
 from repro.core.quant import QuantConfig, QuantParams, quantize_index
-from repro.core.search import CompassParams, compass_search
+from repro.compass import CompassParams, compass_search
 from repro.data.synthetic import make_vector_corpus
 
 

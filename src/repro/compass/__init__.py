@@ -1,0 +1,93 @@
+"""The Compass public API — one import surface for the whole system.
+
+Everything a caller needs to build, query, mutate, serve and shard a
+filtered-search index lives here, under stable names:
+
+    from repro.compass import (
+        build, search, Pred, BuildConfig, CompassParams, ShapePolicy,
+        MutableIndex, SearchService, DistributedMutableIndex,
+    )
+
+    index = build(vectors, attrs, BuildConfig(metric="l2"))
+    res = search(index, queries, Pred.all(Pred.attr(0).between(0.2, 0.8)),
+                 CompassParams(k=10, planner=True))
+
+Layer map (each name re-exported from its implementation module):
+
+* **build / query** — ``build`` (:func:`repro.core.index.build_index`),
+  ``search`` (:func:`repro.core.engine.compass_search`), ``BuildConfig``,
+  ``CompassParams``, ``SearchResult`` / ``SearchStats``.
+* **predicates** — ``Pred`` (host-side DNF builder), ``Predicate`` (the
+  lowered ``(T, A)`` interval tensors), ``stack_predicates``.
+* **shapes** — ``ShapePolicy``: the compiled-shape policy (row buckets
+  across compaction folds, delta capacity, ef rounding, kernel block
+  pins) shared by ``CompassParams``, ``MutableIndex`` and the serving
+  executable-cache keys (DESIGN.md §Mutability, bucket-fold contract).
+* **mutability** — ``MutableIndex`` (LSM delta + tombstones + compaction),
+  ``Snapshot``.
+* **quantization** — ``QuantConfig`` (training) / ``QuantParams``
+  (search), ``quantize_index``.
+* **serving** — ``SearchService`` (continuous batching, AOT executable
+  cache), ``ServiceResult``.
+* **distributed** — ``DistributedMutableIndex`` (owner-routed mutable
+  shards), ``build_sharded_index`` / ``make_distributed_search`` (static
+  shard_map fan-out).
+
+Engine internals (queues, iterators, backends) intentionally stay out:
+import them from :mod:`repro.core.engine`.  The legacy
+``repro.core.search`` shim is deprecated and re-exports a subset of this
+surface with a ``DeprecationWarning``.
+"""
+from __future__ import annotations
+
+from repro.core.distributed import (
+    DistributedMutableIndex,
+    build_sharded_index,
+    make_distributed_search,
+)
+from repro.core.engine import (
+    ENGINE_VERSION,
+    CompassParams,
+    SearchResult,
+    SearchStats,
+    ShapePolicy,
+    compass_search,
+)
+from repro.core.index import BuildConfig, CompassIndex, build_index
+from repro.core.mutable import MutableIndex, Snapshot
+from repro.core.predicate import Pred, Predicate, stack_predicates
+from repro.core.quant import QuantConfig, QuantParams
+from repro.core.quant.encode import quantize_index
+from repro.serving.search_service import SearchService, ServiceResult
+
+# the canonical short names; the long forms stay available for callers
+# migrating mechanically from repro.core.* imports
+build = build_index
+search = compass_search
+
+__all__ = [
+    "ENGINE_VERSION",
+    "BuildConfig",
+    "CompassIndex",
+    "CompassParams",
+    "DistributedMutableIndex",
+    "MutableIndex",
+    "Pred",
+    "Predicate",
+    "QuantConfig",
+    "QuantParams",
+    "SearchResult",
+    "SearchService",
+    "SearchStats",
+    "ServiceResult",
+    "ShapePolicy",
+    "Snapshot",
+    "build",
+    "build_index",
+    "build_sharded_index",
+    "compass_search",
+    "make_distributed_search",
+    "quantize_index",
+    "search",
+    "stack_predicates",
+]

@@ -26,7 +26,7 @@ import numpy as np
 from . import predicate as P
 from .index import CompassIndex
 from .planner.plan import POSTFILTER
-from .search import CompassParams, SearchResult, SearchStats, compass_search
+from .engine import CompassParams, SearchResult, SearchStats, compass_search
 
 
 class BruteResult(NamedTuple):

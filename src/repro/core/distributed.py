@@ -35,7 +35,7 @@ from .index import BuildConfig, CompassIndex, build_index
 from .planner.stats import AttrStats
 from .quant.encode import QuantizedVectors, quantize_index
 from .quant.params import QuantConfig
-from .search import CompassParams, compass_search
+from .engine import CompassParams, compass_search
 
 
 class ShardedIndex(NamedTuple):
@@ -260,9 +260,17 @@ class DistributedMutableIndex:
         *,
         delta_cap: int = 256,
         auto_compact: bool = True,
+        shape=None,
     ) -> "DistributedMutableIndex":
         """Contiguous split (like build_sharded_index) with global-position
-        gids, one independently-built mutable shard per split."""
+        gids, one independently-built mutable shard per split.
+
+        ``shape`` (a :class:`~repro.core.engine.ShapePolicy`) applies *per
+        shard*: each shard buckets its own base row count and delta
+        capacity independently, so one shard compacting into a new bucket
+        never perturbs the compiled shapes — or cached executables — of
+        the others.
+        """
         from .mutable import MutableIndex
 
         n = vectors.shape[0]
@@ -278,6 +286,7 @@ class DistributedMutableIndex:
                     delta_cap=delta_cap,
                     auto_compact=auto_compact,
                     gids=np.arange(sl.start, sl.stop, dtype=np.int64),
+                    shape=shape,
                 )
             )
         return cls(shards)

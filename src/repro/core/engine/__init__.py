@@ -12,16 +12,19 @@ coordinated layers behind one public entry point.
   * :mod:`~repro.core.engine.driver`     — Algorithm 1's coordination loop
     and the public :func:`compass_search`.
 
-``repro.core.search`` re-exports the public names for compatibility.
+``repro.compass`` is the public surface over this package (the legacy
+``repro.core.search`` shim re-exports the same names with a
+``DeprecationWarning``).
 """
 from .backend import PallasBackend, RefBackend, VisitBackend, resolve_backend
-from .driver import ENGINE_VERSION, CompassParams, compass_search
+from .driver import ENGINE_VERSION, CompassParams, ShapePolicy, compass_search
 from .state import EngineState, FixedQueue, SearchResult, SearchStats
 
 __all__ = [
     "ENGINE_VERSION",
     "CompassParams",
     "EngineState",
+    "ShapePolicy",
     "FixedQueue",
     "PallasBackend",
     "RefBackend",

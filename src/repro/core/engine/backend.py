@@ -68,14 +68,19 @@ class VisitBackend(Protocol):
         """(dist (V,) f32 with +inf where masked; passing (V,) bool)."""
         ...
 
-    def visit_step(self, index, q, pred, safe_ids, mask, metric, fused=True):
+    def visit_step(
+        self, index, q, pred, safe_ids, mask, metric, fused=True, rows_per_step=None
+    ):
         """The fused per-step scoring surface consumed by ``state.visit``:
         returns ``(dist (V,) f32, admit (V,) f32)`` where ``dist`` feeds
         the traversal queues (+inf where masked/sentinel) and ``admit``
         equals ``dist`` for valid, predicate-passing AND live rows, +inf
         otherwise (what the filtered result queue merges).  ``fused=False``
         forces the unfused visit_scores + live + select composition on
-        every backend (CompassParams.fused_visit)."""
+        every backend (CompassParams.fused_visit).  ``rows_per_step`` pins
+        the fused kernel's block size (ShapePolicy.visit_rb; None =
+        autotune); non-kernel backends ignore it — block choice never
+        affects results."""
         ...
 
     def centroid_scores(self, index, queries, metric):
@@ -125,7 +130,9 @@ class RefBackend:
         passing = P.evaluate(pred, attrs) & mask
         return dist, passing
 
-    def visit_step(self, index, q, pred, safe_ids, mask, metric, fused=True):
+    def visit_step(
+        self, index, q, pred, safe_ids, mask, metric, fused=True, rows_per_step=None
+    ):
         # the pre-fusion engine sequence, verbatim: unfused scoring, then
         # the tombstone AND, then the admission select (state.visit's old
         # body) — the parity oracle for the fused kernel
@@ -224,7 +231,9 @@ class PallasBackend:
         )
         return dist, passing & mask
 
-    def visit_step(self, index, q, pred, safe_ids, mask, metric, fused=True):
+    def visit_step(
+        self, index, q, pred, safe_ids, mask, metric, fused=True, rows_per_step=None
+    ):
         if not fused or metric not in self._KERNEL_METRICS:
             # unfused: the pre-fusion kernel sequence (filter_distance
             # kernel + jnp live gather + admission select)
@@ -236,7 +245,7 @@ class PallasBackend:
 
         return ops.visit_step(
             index.vectors, index.attrs, index.live, safe_ids, mask, q,
-            pred.lo, pred.hi, metric=metric,
+            pred.lo, pred.hi, metric=metric, rows_per_step=rows_per_step,
         )
 
     def centroid_scores(self, index, queries, metric):
@@ -312,7 +321,9 @@ class QuantAdapter:
             index, self.q_resid, self.lut, pred, safe_ids, mask, metric
         )
 
-    def visit_step(self, index, q, pred, safe_ids, mask, metric, fused=True):
+    def visit_step(
+        self, index, q, pred, safe_ids, mask, metric, fused=True, rows_per_step=None
+    ):
         # ADC scoring stays a separate kernel (pq_score builds the LUT in
         # scratch); the tombstone AND + admission select compose here —
         # both inner backends produce parity-tested (dist, passing), so the

@@ -71,6 +71,68 @@ ENGINE_VERSION = "engine/5"
 
 
 @dataclasses.dataclass(frozen=True)
+class ShapePolicy:
+    """Every steady-state compiled shape in one frozen, hashable config.
+
+    ``compass_search`` / ``mutable_search`` are jitted over static shapes:
+    each distinct row count, delta capacity, queue width or kernel block is
+    a fresh XLA program.  The shape-affecting knobs used to be scattered
+    (row counts implicit in the fold, ``delta_cap`` on MutableIndex, ``ef``
+    on CompassParams, block pins in env vars); this object gathers them so
+    the serving executable cache can key on *one* value and the mutable
+    path can hold every shape fixed across compaction epochs
+    (DESIGN.md §Mutability, bucket-fold contract):
+
+      * **row buckets** — compaction folds pad the base to the next
+        power-of-two row count (>= ``min_rows``) with dead, tombstoned
+        rows, so churn that stays within a bucket re-traces nothing.
+      * **delta capacity** — ``delta_cap`` (0 = adopt the MutableIndex
+        constructor argument) is a compiled shape; owning it here makes it
+        part of the policy identity rather than an ad-hoc constructor int.
+      * **ef / refine widths** — ``ef_step`` rounds ``ef`` (and therefore
+        the quant-widened ``ef * refine_factor`` stage-one width) up to a
+        multiple, collapsing near-miss configurations onto shared
+        executables.  Rounding *widens* the search — results are those of
+        the rounded ``ef``, never an approximation of the requested one.
+      * **fused-visit block** — ``visit_rb`` pins the visit-step kernel's
+        rows-per-step (0 = autotune / ``REPRO_PALLAS_BLOCK_VISIT_STEP``),
+        making the block choice part of the params identity instead of
+        ambient process state.  Block choice never affects results.
+
+    ``ef`` / ``refine_factor`` here are construction-time overrides
+    (0 = keep the CompassParams / QuantParams field): ``CompassParams.
+    __post_init__`` adopts a non-zero value into the legacy field and
+    normalizes it back to 0, so the legacy fields stay the single source
+    of truth and existing call sites / BENCH provenance keys keep working.
+    """
+
+    bucket_rows: bool = True  # pad compaction folds to power-of-two buckets
+    min_rows: int = 1024  # smallest row bucket a fold pads to
+    delta_cap: int = 0  # delta-segment capacity; 0 = constructor default
+    ef_step: int = 0  # round ef up to a multiple; 0 = exact (no rounding)
+    visit_rb: int = 0  # fused visit-step rows-per-step pin; 0 = autotune
+    ef: int = 0  # construction-time override of CompassParams.ef
+    refine_factor: int = 0  # construction-time override of quant.refine_factor
+
+    def row_bucket(self, n_live: int) -> int:
+        """Padded base row count for ``n_live`` real rows (identity when
+        ``bucket_rows`` is off)."""
+        if not self.bucket_rows:
+            return n_live
+        return max(self.min_rows, 1 << max(0, n_live - 1).bit_length())
+
+    def bucket_ef(self, ef: int) -> int:
+        """``ef`` rounded up to the next ``ef_step`` multiple (identity
+        when ``ef_step`` is 0)."""
+        if self.ef_step <= 0:
+            return ef
+        return -(-ef // self.ef_step) * self.ef_step
+
+    def resolve_delta_cap(self, default: int) -> int:
+        return self.delta_cap if self.delta_cap > 0 else int(default)
+
+
+@dataclasses.dataclass(frozen=True)
 class CompassParams:
     k: int = 10  # results to return
     ef: int = 64  # target size of the filtered result queue (paper `ef`)
@@ -109,6 +171,34 @@ class CompassParams:
     quant: QuantParams | None = None  # quantized-tier search (DESIGN.md
     # §Quantization; requires index.qvecs — i.e. quantize_index).  None
     # (the default) keeps every program bitwise identical to exact search.
+    shape: ShapePolicy = ShapePolicy()  # compiled-shape policy (row/ef
+    # buckets, delta capacity, kernel block pin).  Part of hash/eq, so it
+    # keys every executable cache that keys on CompassParams.
+
+    def __post_init__(self):
+        # Adopt ShapePolicy's construction-time overrides into the legacy
+        # fields, then normalize them back to 0.  The normalization makes
+        # __post_init__ idempotent under dataclasses.replace — the quant
+        # stage does replace(pm, ef=ef*rf, k=ef*rf), and a sticky nonzero
+        # shape.ef would silently clobber the widened width on re-init.
+        sp = self.shape
+        if sp.ef:
+            object.__setattr__(self, "ef", sp.ef)
+        if sp.refine_factor and self.quant is not None:
+            object.__setattr__(
+                self,
+                "quant",
+                dataclasses.replace(self.quant, refine_factor=sp.refine_factor),
+            )
+        if sp.ef or sp.refine_factor:
+            object.__setattr__(
+                self, "shape", dataclasses.replace(sp, ef=0, refine_factor=0)
+            )
+        # ef rounding happens here, not in resolved(): two params that
+        # land in the same ef bucket must already be ==/hash-equal so the
+        # jit trace cache and serving executable keys collapse them.
+        if sp.ef_step > 0:
+            object.__setattr__(self, "ef", sp.bucket_ef(self.ef))
 
     def resolved(self) -> "CompassParams":
         ef_cap = self.ef_cap or 2 * self.ef + 32

@@ -140,7 +140,8 @@ def visit(index, q, pred, st: EngineState, ids, mask, pm, backend) -> EngineStat
     # backend literally composes that sequence; the pallas backend runs the
     # kernels/visit_step.py fused kernel unless pm.fused_visit is off).
     dist, admit = backend.visit_step(
-        index, q, pred, safe, mask, pm.metric, fused=pm.fused_visit
+        index, q, pred, safe, mask, pm.metric, fused=pm.fused_visit,
+        rows_per_step=pm.shape.visit_rb or None,
     )
     visited = st.visited.at[safe].set(True)  # sentinel slot absorbs masked
     cand = st.cand.merge(dist, safe)

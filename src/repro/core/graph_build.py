@@ -18,7 +18,7 @@ graph algorithm like NSG").  We therefore build a *flat* navigable graph
   6. medoid entry point (replaces HNSW's upper layers; identical role:
      a navigable, query-independent entry).
 
-Search-time traversal (``repro.core.search``) is byte-for-byte the paper's
+Search-time traversal (``repro.core.engine``) is byte-for-byte the paper's
 best-first loop and does not care which construction produced the graph.
 """
 from __future__ import annotations

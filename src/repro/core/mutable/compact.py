@@ -35,7 +35,7 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from ..clustered_attrs import build_clustered_attrs
+from ..clustered_attrs import ClusteredAttrs, build_clustered_attrs
 from ..graph_build import GraphIndex, _repair_connectivity, insert_nodes, remove_nodes
 from ..index import BuildConfig, CompassIndex, cluster_medoids
 from ..planner.stats import build_attr_stats
@@ -52,6 +52,94 @@ def assign_to_centroids(vectors: np.ndarray, centroids: np.ndarray, metric: str 
     return np.argmin(d, axis=1).astype(np.int32)
 
 
+def pad_index_rows(index: CompassIndex, n_rows: int) -> CompassIndex:
+    """Pad a freshly built index to ``n_rows`` total rows with dead rows.
+
+    The bucket-fold contract (DESIGN.md §Mutability): every component is
+    built over the *real* rows first — so a padded index is bitwise the
+    unpadded one plus inert tail rows — and the padding can never surface
+    in a search:
+
+      * **vectors / attrs** — padding rows take the sentinel-row values
+        (zero vector, ``+inf`` attrs).  ``+inf`` exceeds ``POS_INF``
+        (float32 max), so a padding row fails *every* predicate term,
+        including one-sided ``a <= POS_INF`` bounds — admission is closed
+        even without a live mask.
+      * **graph** — padding rows have no in-edges (no real row links to
+        them) and sentinel-only out-rows, so traversal never reaches them;
+        the sentinel edge id is remapped ``n -> n_rows`` to keep the
+        "sentinel == row count" convention.
+      * **clustered runs** — padding appends to the *last* cluster's tail
+        with ``+inf`` sort keys; ``searchsorted`` run probes exclude them
+        for any finite (or ``POS_INF``) bound, so PREFILTER never
+        materializes a padding id.
+      * **planner stats** — untouched: ``astats`` was built over real rows
+        only, so histogram mass and ``cluster_counts`` (the selectivity
+        denominator, see planner/estimate.py) count live rows only.
+      * **medoids / entry / centroids** — untouched; padding rows are
+        never cluster representatives or traversal seeds.
+
+    The returned index keeps ``live=None`` — deadness is the *caller's*
+    bookkeeping (``MutableIndex`` marks padding rows dead in its tombstone
+    bitmap, so the engine's existing live-mask admission also excludes
+    them; the graph/predicate/run properties above make them free even on
+    the masked path: never visited, never scored).
+    """
+    n = index.n_records
+    if n_rows < n:
+        raise ValueError(f"n_rows={n_rows} < {n} real rows")
+    if n_rows == n:
+        return index
+    npad = n_rows - n
+    d = index.vectors.shape[1]
+    A = index.attrs.shape[1]
+    nlist = index.centroids.shape[0]
+    vec = np.asarray(index.vectors)  # (n+1, d) — sentinel row last
+    att = np.asarray(index.attrs)
+    vpad = np.concatenate([vec[:n], np.zeros((npad + 1, d), np.float32)], 0)
+    apad = np.concatenate(
+        [att[:n], np.full((npad + 1, A), np.inf, np.float32)], 0
+    )
+    nb = np.asarray(index.graph.neighbors)
+    nb = np.where(nb >= n, n_rows, nb)
+    nb = np.concatenate(
+        [nb, np.full((npad, nb.shape[1]), n_rows, nb.dtype)], 0
+    ).astype(np.int32)
+    graph = GraphIndex(jnp.asarray(nb), index.graph.entry)
+    pad_ids = np.arange(n, n_rows, dtype=np.int32)
+    order = np.concatenate(
+        [np.asarray(index.cattrs.order), np.tile(pad_ids, (A, 1))], 1
+    )
+    svals = np.concatenate(
+        [np.asarray(index.cattrs.sorted_vals), np.full((A, npad), np.inf, np.float32)], 1
+    )
+    offsets = np.asarray(index.cattrs.offsets).copy()
+    offsets[-1] += npad
+    assign = np.concatenate(
+        [
+            np.asarray(index.cattrs.assignments),
+            np.full((npad,), nlist - 1, np.int32),
+        ]
+    )
+    cattrs = ClusteredAttrs(
+        jnp.asarray(order), jnp.asarray(svals), jnp.asarray(offsets), jnp.asarray(assign)
+    )
+    qv = index.qvecs
+    if qv is not None:
+        codes = np.asarray(qv.codes)  # (n+1, m) — sentinel row last
+        codes = np.concatenate(
+            [codes[:n], np.zeros((npad + 1, qv.m), np.uint8)], 0
+        )
+        qv = QuantizedVectors(jnp.asarray(codes), qv.codebooks, qv.mean, qv.train_mse)
+    return index._replace(
+        vectors=jnp.asarray(vpad),
+        attrs=jnp.asarray(apad),
+        graph=graph,
+        cattrs=cattrs,
+        qvecs=qv,
+    )
+
+
 def fold_index(
     vectors: np.ndarray,  # (n_new, d) folded table: kept base rows + delta rows
     attrs: np.ndarray,  # (n_new, A)
@@ -62,6 +150,7 @@ def fold_index(
     centroids: np.ndarray,  # (nlist, d) — carried over unchanged
     cfg: BuildConfig,
     qvecs: QuantizedVectors | None = None,  # old quantized tier, if any
+    n_rows: int | None = None,  # pad the fold to this many total rows
 ) -> tuple[CompassIndex, np.ndarray]:
     """Fold a (keep_mask, delta rows) pair into a fresh CompassIndex.
 
@@ -71,6 +160,13 @@ def fold_index(
     the *frozen* codebooks — retraining is the caller's explicit decision
     (``MutableIndex.compact(retrain_codebooks=True)``), because new
     codebooks invalidate every cached ADC executable at once.
+
+    ``n_rows`` pads the fold to a fixed total row count with dead rows
+    (``pad_index_rows``) — the shape-bucketing half of the contract: the
+    caller picks the bucket (``ShapePolicy.row_bucket``), the fold builds
+    every component over the real rows first and pads after, so a bucketed
+    fold is bitwise the unbucketed fold plus inert tail rows.  The
+    returned assignments cover the padded rows too (last cluster).
     """
     vectors = np.asarray(vectors, np.float32)
     attrs = np.asarray(attrs, np.float32)
@@ -135,4 +231,7 @@ def fold_index(
         astats,
         qvecs=new_qvecs,
     )
+    if n_rows is not None and n_rows != n_new:
+        index = pad_index_rows(index, n_rows)
+        assign = np.asarray(index.cattrs.assignments)
     return index, assign

@@ -42,6 +42,7 @@ import numpy as np
 
 from .. import predicate as P
 from ..engine.backend import resolve_backend
+from ..engine.driver import ShapePolicy
 from ..engine.state import SearchResult
 from ..index import BuildConfig, CompassIndex, build_index
 from ..quant.encode import (
@@ -53,7 +54,7 @@ from ..quant.encode import (
     residual_queries,
 )
 from ..quant.params import QuantConfig
-from .compact import fold_index
+from .compact import fold_index, pad_index_rows
 from .delta import DeltaView, delta_topk, delta_topk_quantized
 
 GID_SENTINEL = -1  # empty result slot / empty delta slot
@@ -82,7 +83,7 @@ def mutable_search(
     the same two-stage ADC-scan-then-exact-rerank as the base
     (delta.delta_topk_quantized), so both tiers obey one scoring contract.
     """
-    from ..search import compass_search  # local: engine -> mutable would cycle
+    from ..engine import compass_search  # local: avoids import-order cycles
 
     pmr = pm.resolved()
     backend = resolve_backend(pmr.backend)
@@ -135,6 +136,7 @@ class MutableIndex:
         metric: str = "l2",
         gids: np.ndarray | None = None,
         quant_cfg: QuantConfig | None = None,
+        shape: ShapePolicy | None = None,
     ):
         if base.astats is None:
             raise ValueError("MutableIndex requires an index built by build_index (astats)")
@@ -165,7 +167,13 @@ class MutableIndex:
         # this the retrain would fall back to shape inference and silently
         # drop a non-default iters/seed choice
         self._quant_cfg = quant_cfg
-        self.delta_cap = int(delta_cap)
+        # the compiled-shape policy (DESIGN.md §Mutability, bucket-fold
+        # contract): row buckets for every base the index ever serves —
+        # the wrapped one included, so epoch 0 shares the bucket's
+        # executable with every post-compaction epoch — plus the delta
+        # capacity (shape.delta_cap wins over the legacy argument)
+        self.shape = shape if shape is not None else ShapePolicy()
+        self.delta_cap = self.shape.resolve_delta_cap(delta_cap)
         self.auto_compact = bool(auto_compact)
         self.compaction_log: list[float] = []  # fold wall-clock seconds
         # quantized-tier drift: decode MSE of the folded table against the
@@ -175,18 +183,27 @@ class MutableIndex:
         self.quant_drift_log: list[float] = []
         self._epoch = 0
         self._snap: Snapshot | None = None
-        self._install_base(base, gids)
+        n_real = base.n_records
+        if self.shape.bucket_rows:
+            base = pad_index_rows(
+                base._replace(live=None), self.shape.row_bucket(n_real)
+            )
+        self._install_base(base, gids, n_real=n_real)
         self._reset_delta()
 
     # -- wiring ------------------------------------------------------------
 
-    def _install_base(self, base: CompassIndex, gids: np.ndarray | None) -> None:
+    def _install_base(
+        self, base: CompassIndex, gids: np.ndarray | None, n_real: int | None = None
+    ) -> None:
         n = base.n_records
+        if n_real is None:
+            n_real = n
         if gids is None:
-            gids = np.arange(n, dtype=np.int64)
+            gids = np.arange(n_real, dtype=np.int64)
         gids = np.asarray(gids, np.int64)
-        if gids.shape != (n,):
-            raise ValueError(f"gids shape {gids.shape} != ({n},)")
+        if gids.shape != (n_real,):
+            raise ValueError(f"gids shape {gids.shape} != ({n_real},)")
         self._base = base._replace(live=None)
         self._base_gids_dev = None  # per-epoch device cache (see snapshot)
         # host mirrors consumed by compaction
@@ -194,9 +211,18 @@ class MutableIndex:
         self._attrs = np.asarray(base.attrs)[:n]
         self._assign = np.asarray(base.cattrs.assignments)
         self._centroids = np.asarray(base.centroids)
+        # rows [n_real, n) are the bucket's dead padding (pad_index_rows):
+        # never addressable (sentinel gid), born tombstoned so the engine's
+        # live mask excludes them on top of the structural guarantees
+        self._n_base_real = n_real
+        if n_real < n:
+            gids = np.concatenate(
+                [gids, np.full((n - n_real,), GID_SENTINEL, np.int64)]
+            )
         self._gids = gids
-        self._gid2base = {int(g): p for p, g in enumerate(gids)}
+        self._gid2base = {int(g): p for p, g in enumerate(gids[:n_real])}
         self._live = np.ones((n + 1,), bool)
+        self._live[n_real:n] = False
 
     def _reset_delta(self) -> None:
         cap = self.delta_cap
@@ -217,6 +243,7 @@ class MutableIndex:
         delta_cap: int = 256,
         auto_compact: bool = True,
         gids: np.ndarray | None = None,
+        shape: ShapePolicy | None = None,
     ) -> "MutableIndex":
         return cls(
             build_index(vectors, attrs, cfg),
@@ -224,6 +251,7 @@ class MutableIndex:
             auto_compact=auto_compact,
             cfg=cfg,
             gids=gids,
+            shape=shape,
         )
 
     # -- introspection -----------------------------------------------------
@@ -246,8 +274,9 @@ class MutableIndex:
 
     @property
     def gids(self) -> np.ndarray:
-        """Global ids of the current base rows (positional order)."""
-        return self._gids
+        """Global ids of the current base rows (positional order; bucket
+        padding rows, which carry no gid, are excluded)."""
+        return self._gids[: self._n_base_real]
 
     @property
     def delta_fill(self) -> int:
@@ -392,6 +421,11 @@ class MutableIndex:
         t0 = time.perf_counter()
         keep = self._live[:-1]
         vec, attr, gids = self.materialize()
+        # bucket the fold (ShapePolicy.row_bucket is the identity when
+        # bucketing is off): churn that stays within a bucket keeps
+        # n_records — and therefore every compiled program — fixed across
+        # the epoch swap; the old bucket's padding rows are tombstoned
+        # (keep=False) and drop out of the fold like any dead row
         index, assign = fold_index(
             vec,
             attr,
@@ -402,6 +436,7 @@ class MutableIndex:
             self._centroids,
             self._cfg,
             qvecs=self._base.qvecs,
+            n_rows=self.shape.row_bucket(vec.shape[0]),
         )
         if index.qvecs is not None:
             if retrain_codebooks:
@@ -416,12 +451,22 @@ class MutableIndex:
                     ks=index.qvecs.ks,
                     residual=bool(np.any(np.asarray(index.qvecs.mean))),
                 )
-                index = index._replace(
-                    qvecs=quantize_vectors(vec, cfg, self._cfg.metric)
-                )
+                qv = quantize_vectors(vec, cfg, self._cfg.metric)
+                if index.n_records != vec.shape[0]:
+                    # re-pad the retrained codes to the row bucket (the
+                    # retrain sees real rows only — padding must not train)
+                    npad = index.n_records - vec.shape[0]
+                    codes = np.asarray(qv.codes)
+                    codes = np.concatenate(
+                        [codes[:-1], np.zeros((npad + 1, qv.m), np.uint8)], 0
+                    )
+                    qv = QuantizedVectors(
+                        jnp.asarray(codes), qv.codebooks, qv.mean, qv.train_mse
+                    )
+                index = index._replace(qvecs=qv)
             self.quant_drift_log.append(quant_mse(index.qvecs, vec))
         # publish: install the new epoch, then reset the write tiers
-        self._install_base(index, gids)
+        self._install_base(index, gids, n_real=vec.shape[0])
         self._assign = assign
         self._reset_delta()
         self._epoch += 1

@@ -59,10 +59,27 @@ def build_attr_stats(
     *,
     n_bins: int = 64,
     n_cluster_bins: int = 8,
+    live: np.ndarray | None = None,
 ) -> AttrStats:
-    """Host-side build (index time): quantile edges per attr, per cluster."""
+    """Host-side build (index time): quantile edges per attr, per cluster.
+
+    **Live-row discipline** (the bucket-fold contract, DESIGN.md
+    §Mutability): statistics must cover *live* rows only.  Dead rows —
+    tombstones awaiting compaction, or the dead padding a bucketed fold
+    appends — must contribute nothing, or they skew histogram mass and
+    inflate ``cluster_counts``, the denominator every selectivity estimate
+    divides by (planner/estimate.py).  ``fold_index`` upholds this by
+    building stats over the real rows *before* padding; ``live`` is the
+    explicit escape hatch for callers whose row table already contains
+    dead rows (a (n,) bool mask — False rows are dropped before any
+    quantile or count).
+    """
     attrs = np.asarray(attrs, np.float32)
     assignments = np.asarray(assignments, np.int64)
+    if live is not None:
+        live = np.asarray(live, bool)
+        attrs = attrs[live]
+        assignments = assignments[live]
     n, n_attrs = attrs.shape
     qs_g = np.linspace(0.0, 1.0, n_bins + 1)
     qs_c = np.linspace(0.0, 1.0, n_cluster_bins + 1)

@@ -1,31 +1,42 @@
-"""CompassSearch — compatibility shim over :mod:`repro.core.engine`.
+"""DEPRECATED compatibility shim — import from :mod:`repro.compass` instead.
 
-The search core used to live here as one 430-line module; it is now the
-execution-engine package (state/queues, G.NEXT/B.NEXT iterators, pluggable
-scoring backends, driver loop — see ``engine/__init__.py`` and DESIGN.md
-§Perf).  This module re-exports the public surface so existing imports
-(``serving/rag.py``, ``benchmarks/``, ``examples/``, tests) keep working:
+The search core used to live here as one 430-line module; it then became
+the execution-engine package (``repro.core.engine``), and this module kept
+the old import path alive.  With the unified public surface
+(``repro.compass``: build / search / predicates / params / mutable /
+serving / distributed in one namespace), this shim is deprecated and will
+be removed after one release of grace:
 
-    from repro.core.search import CompassParams, compass_search
+    # old                                        # new
+    from repro.core.search import ...      ->    from repro.compass import ...
 
-Backend selection: ``CompassParams(backend="pallas")`` routes VISIT through
-``kernels.filter_distance`` and centroid ranking through
-``kernels.ivf_score``; ``"ref"`` is the plain-jnp path; the default
-``"auto"`` picks pallas on TPU and ref elsewhere.  Both produce identical
-results (enforced by tests/test_compass_search.py).
+Internal modules must not import through here (CI greps for it); the
+re-exports remain only for external callers mid-migration.
 """
 from __future__ import annotations
 
-from .engine import (  # noqa: F401
+import warnings
+
+warnings.warn(
+    "repro.core.search is deprecated; import from repro.compass "
+    "(engine internals: repro.core.engine). This shim will be removed "
+    "after one release.",
+    DeprecationWarning,
+    stacklevel=2,
+)
+
+from .engine import (  # noqa: F401,E402
     ENGINE_VERSION,
     CompassParams,
     EngineState,
     FixedQueue,
     SearchResult,
     SearchStats,
+    ShapePolicy,
     compass_search,
     resolve_backend,
 )
+
 __all__ = [
     "ENGINE_VERSION",
     "CompassParams",
@@ -33,6 +44,7 @@ __all__ = [
     "FixedQueue",
     "SearchResult",
     "SearchStats",
+    "ShapePolicy",
     "compass_search",
     "resolve_backend",
 ]

@@ -21,7 +21,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import predicate as P
 from repro.core.index import BuildConfig, CompassIndex, build_index
-from repro.core.search import CompassParams, compass_search
+from repro.core.engine import CompassParams, compass_search
 from repro.models.model import forward
 from repro.serving.search_service import SearchService
 

@@ -18,7 +18,12 @@ request stream and the engine:
 * **Compiled-executable cache** — one AOT-compiled executable per occupied
   ``(B, T, A, CompassParams)`` key (``compass_search.lower(...).compile()``);
   steady-state traffic runs with a bounded, observable number of
-  compilations (``stats()["compiles"]`` == occupied buckets).
+  compilations (``stats()["compiles"]`` == occupied buckets).  For mutable
+  services the snapshot shapes enter the key too — and because
+  ``ShapePolicy`` buckets the base row count across compaction folds and
+  fixes the delta capacity, those shapes are *epoch-stable*: a compaction
+  swap re-uses the previous epoch's executables and the steady-state
+  recompile budget is zero (the bench_updates ``--selfcheck`` tripwire).
 * **Padding stripping** — :class:`ServiceResult` drops filler lanes, pad
   terms and the ``k``-prefix, so a response is bitwise-identical to calling
   ``compass_search`` directly on that query with its natural-``T`` predicate
@@ -47,10 +52,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import predicate as P
+from repro.core.engine import CompassParams, compass_search
 from repro.core.index import CompassIndex
 from repro.core.mutable import MutableIndex, mutable_search
 from repro.core.planner import plan as plan_mod
-from repro.core.search import CompassParams, compass_search
 
 
 @dataclasses.dataclass
@@ -180,6 +185,21 @@ class SearchService:
                 "(core.quant.quantize_index) — fail at construction, not "
                 "at the first dispatch"
             )
+        if self.mutable is not None:
+            # the executable-cache key embeds params.shape while the actual
+            # compiled shapes (row bucket, delta cap) come from the index's
+            # own policy — a mismatch would make the cache accounting lie
+            # about the steady-state recompile budget, so fail loudly here.
+            # Compare with the construction-time overrides zeroed: params
+            # normalizes shape.ef / shape.refine_factor after adoption.
+            mine = dataclasses.replace(params.shape, ef=0, refine_factor=0)
+            theirs = dataclasses.replace(self.mutable.shape, ef=0, refine_factor=0)
+            if mine != theirs:
+                raise ValueError(
+                    "params.shape != mutable index's ShapePolicy "
+                    f"({mine} vs {theirs}); construct both from one policy "
+                    "so cache keys reflect the served shapes"
+                )
 
     @property
     def index(self) -> CompassIndex:
@@ -447,6 +467,10 @@ class SearchService:
             "max_wait_s": self.max_wait_s,
             "compiles": self.compile_count,
             "occupied_buckets": len(self._stats),
+            # the compiled-shape policy in force — with bucket_rows on, the
+            # mutable snapshot shapes in the cache keys are epoch-stable,
+            # so compiles stays == occupied shapes across compactions
+            "shape_policy": dataclasses.asdict(self.params.shape),
             "n_requests": n_req,
             "n_batches": sum(s.n_batches for s in self._stats.values()),
             "n_fillers": sum(s.n_fillers for s in self._stats.values()),

@@ -13,7 +13,7 @@ from repro.core.baselines import (
     prefilter_search,
     recall,
 )
-from repro.core.search import CompassParams, compass_search
+from repro.compass import CompassParams, compass_search
 
 
 def _preds(rng, n_queries, n_attrs, passrate, n_terms, disj=False):

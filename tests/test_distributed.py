@@ -17,7 +17,7 @@ SCRIPT = textwrap.dedent(
     from repro.core.baselines import brute_force, recall
     from repro.core.distributed import build_sharded_index, make_distributed_search
     from repro.core.index import BuildConfig
-    from repro.core.search import CompassParams
+    from repro.compass import CompassParams
     from repro.data.synthetic import make_vector_corpus
 
     n, d, a, n_shards = 8000, 24, 4, 8

@@ -18,7 +18,7 @@ from repro.core.baselines import brute_force, recall
 from repro.core.distances import normalize_rows
 from repro.core.index import BuildConfig, build_index
 from repro.core.planner import plan as QP
-from repro.core.search import CompassParams, compass_search
+from repro.compass import CompassParams, compass_search
 
 
 @pytest.fixture(scope="module")

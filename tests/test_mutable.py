@@ -14,7 +14,7 @@ from repro.core.graph_build import insert_nodes, remove_nodes
 from repro.core.index import BuildConfig, build_index, cluster_medoids
 from repro.core.mutable import MutableIndex
 from repro.core.planner.plan import COOPERATIVE, POSTFILTER, PREFILTER
-from repro.core.search import CompassParams, compass_search
+from repro.compass import CompassParams, compass_search
 from repro.serving.search_service import SearchService
 
 A = 4

@@ -12,7 +12,7 @@ import pytest
 
 from repro.core import predicate as P
 from repro.core.baselines import brute_force, recall
-from repro.core.search import CompassParams, compass_search
+from repro.compass import CompassParams, compass_search
 
 
 def test_beam_expansion_preserves_recall(built_index, corpus):

@@ -12,7 +12,7 @@ from repro.core.clustered_attrs import build_clustered_attrs
 from repro.core.planner import estimate as E
 from repro.core.planner import plan as QP
 from repro.core.planner.stats import build_attr_stats, term_run_bounds
-from repro.core.search import CompassParams, compass_search
+from repro.compass import CompassParams, compass_search
 
 
 @pytest.fixture(scope="module")
@@ -171,7 +171,7 @@ def test_high_selectivity_chooses_prefilter_and_is_exact(built_index, corpus):
     compiled program (the ref-vs-pallas parity test covers that); across
     programs the same caveat as ivf_score applies (engine/backend.py).
     """
-    from repro.core.search import resolve_backend
+    from repro.core.engine import resolve_backend
 
     x, attrs, queries = corpus
     rng = np.random.default_rng(21)

@@ -24,7 +24,7 @@ from repro.core.quant import (
     quantize_index,
     quantize_vectors,
 )
-from repro.core.search import CompassParams, compass_search
+from repro.compass import CompassParams, compass_search
 from repro.kernels import ops, ref
 
 K = 10

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.core import predicate as P
-from repro.core.search import CompassParams, compass_search
+from repro.compass import CompassParams, compass_search
 from repro.serving.search_service import SearchService
 
 PM = CompassParams(k=10, ef=32)

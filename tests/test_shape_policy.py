@@ -1,0 +1,293 @@
+"""Shape-stable serving under churn: ShapePolicy, bucketed compaction
+folds, epoch-crossing executable-cache reuse, and the repro.compass
+public surface (DESIGN.md §Mutability, bucket-fold contract)."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import sys
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.compass import (
+    CompassParams,
+    MutableIndex,
+    SearchService,
+    ShapePolicy,
+    compass_search,
+)
+from repro.core import predicate as P
+from repro.core.index import BuildConfig, build_index
+from repro.core.mutable import mutable_search
+from repro.core.mutable.compact import pad_index_rows
+from repro.core.planner.stats import build_attr_stats
+
+A = 4
+CFG = BuildConfig(m=8, nlist=16, kmeans_iters=4)
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    rng = np.random.default_rng(3)
+    n, d = 700, 16
+    centers = rng.normal(size=(12, d)).astype(np.float32) * 3
+    x = (centers[rng.integers(0, 12, n)] + rng.normal(size=(n, d))).astype(np.float32)
+    attrs = rng.uniform(size=(n, A)).astype(np.float32)
+    queries = (centers[rng.integers(0, 12, 8)] + rng.normal(size=(8, d))).astype(
+        np.float32
+    )
+    return x, attrs, queries
+
+
+@pytest.fixture(scope="module")
+def base(corpus):
+    x, attrs, _ = corpus
+    return build_index(x, attrs, CFG)
+
+
+def stacked(tree, b):
+    return P.stack_predicates([tree.tensor(A)] * b)
+
+
+def churn(indices, rng, n_rounds, writes_per_round, d, next_gid, live):
+    """Apply an identical mixed write history to every index in ``indices``."""
+    for _ in range(n_rounds):
+        for _ in range(writes_per_round):
+            u = rng.random()
+            if u < 0.6 or not live:
+                gid, next_gid = next_gid, next_gid + 1
+                live.append(gid)
+                v = rng.normal(size=d).astype(np.float32)
+                a = rng.uniform(size=A).astype(np.float32)
+                for mi in indices:
+                    mi.upsert(gid, v, a)
+            elif u < 0.8:
+                gid = live[rng.integers(len(live))]
+                v = rng.normal(size=d).astype(np.float32)
+                a = rng.uniform(size=A).astype(np.float32)
+                for mi in indices:
+                    mi.upsert(gid, v, a)
+            else:
+                gid = live.pop(int(rng.integers(len(live))))
+                for mi in indices:
+                    mi.delete(gid)
+    return next_gid
+
+
+# ---------------------------------------------------------------------------
+# ShapePolicy mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_row_bucket_power_of_two_with_floor():
+    sp = ShapePolicy(min_rows=1024)
+    assert sp.row_bucket(1) == 1024
+    assert sp.row_bucket(1024) == 1024
+    assert sp.row_bucket(1025) == 2048
+    assert sp.row_bucket(5000) == 8192
+    assert ShapePolicy(bucket_rows=False).row_bucket(5000) == 5000
+
+
+def test_ef_step_rounds_and_collapses_equality():
+    sp = ShapePolicy(ef_step=16)
+    assert sp.bucket_ef(64) == 64 and sp.bucket_ef(65) == 80
+    a = CompassParams(ef=50, shape=sp)
+    b = CompassParams(ef=64, shape=sp)
+    assert a.ef == 64 and a == b and hash(a) == hash(b)
+
+
+def test_shape_overrides_adopt_then_normalize():
+    pm = CompassParams(shape=ShapePolicy(ef=128))
+    assert pm.ef == 128 and pm.shape.ef == 0  # adopted, then normalized
+    # normalization keeps __post_init__ idempotent under replace (the
+    # quant-widening path re-runs it with a widened ef)
+    pm2 = dataclasses.replace(pm, ef=pm.ef * 3)
+    assert pm2.ef == 384
+
+
+def test_delta_cap_resolution():
+    assert ShapePolicy(delta_cap=96).resolve_delta_cap(256) == 96
+    assert ShapePolicy().resolve_delta_cap(256) == 256
+
+
+# ---------------------------------------------------------------------------
+# pad_index_rows: padding is structurally inert
+# ---------------------------------------------------------------------------
+
+
+def test_pad_index_rows_invariants(base):
+    n = base.n_records
+    padded = pad_index_rows(base, 1024)
+    assert padded.n_records == 1024
+    npad = 1024 - n
+    # planner stats untouched: histogram mass and the selectivity
+    # denominator count live rows only
+    assert float(np.asarray(padded.astats.cluster_counts).sum()) == n
+    # padding rows: +inf attrs (fail every term), sentinel-only edges,
+    # no in-edges from real rows
+    attrs = np.asarray(padded.attrs)
+    assert np.all(np.isinf(attrs[n:]))
+    nb = np.asarray(padded.graph.neighbors)
+    assert nb.shape[0] == 1024
+    assert np.all(nb[n:] == 1024)  # out-edges: sentinel only
+    assert not np.any((nb[:n] >= n) & (nb[:n] < 1024))  # no in-edges
+    # clustered runs: padding appended to the last cluster with +inf keys
+    offs = np.asarray(padded.cattrs.offsets)
+    assert offs[-1] - np.asarray(base.cattrs.offsets)[-1] == npad
+    assert np.all(np.isinf(np.asarray(padded.cattrs.sorted_vals)[:, -npad:]))
+    assert np.all(np.asarray(padded.cattrs.assignments)[n:] == base.nlist - 1)
+    # idempotent / validated
+    assert pad_index_rows(padded, 1024) is padded
+    with pytest.raises(ValueError):
+        pad_index_rows(padded, 512)
+
+
+def test_build_attr_stats_live_mask():
+    rng = np.random.default_rng(0)
+    attrs = rng.uniform(size=(100, 2)).astype(np.float32)
+    assign = rng.integers(0, 4, size=100)
+    live = np.zeros(100, bool)
+    live[:60] = True
+    st = build_attr_stats(attrs, assign, 4, live=live)
+    assert float(np.asarray(st.cluster_counts).sum()) == 60.0
+    ref = build_attr_stats(attrs[:60], assign[:60], 4)
+    assert np.array_equal(np.asarray(st.edges), np.asarray(ref.edges))
+
+
+# ---------------------------------------------------------------------------
+# bitwise parity: padding rows never surface
+# ---------------------------------------------------------------------------
+
+
+def test_bucketed_bitwise_parity_across_epochs(base, corpus):
+    x, attrs, queries = corpus
+    d = x.shape[1]
+    cap = 48
+    mi = MutableIndex(base, cfg=CFG, shape=ShapePolicy(min_rows=1024, delta_cap=cap))
+    ref = MutableIndex(
+        build_index(x, attrs, CFG),
+        cfg=CFG,
+        delta_cap=cap,
+        shape=ShapePolicy(bucket_rows=False),
+    )
+    assert mi.base.n_records == 1024 and ref.base.n_records == x.shape[0]
+    assert mi.n_live == ref.n_live == x.shape[0]
+    assert len(mi.gids) == x.shape[0]  # padding rows carry no gid
+
+    pm = CompassParams(k=10, ef=48, planner=True, backend="ref")
+    pred = stacked(P.Pred.range(0, 0.2, 0.8), 8)
+    rng = np.random.default_rng(7)
+    live = list(range(x.shape[0]))
+    next_gid = x.shape[0]
+    # epoch 0 parity (the wrapped base is padded too), then across >= 3
+    # compaction epochs under identical write histories
+    for _ in range(4):
+        r_b = mi.search(queries, pred, pm)
+        r_u = ref.search(queries, pred, pm)
+        assert np.array_equal(np.asarray(r_b.ids), np.asarray(r_u.ids))
+        assert np.array_equal(np.asarray(r_b.dists), np.asarray(r_u.dists))
+        # planner mode choice unchanged by padding (live-row histograms)
+        assert np.array_equal(
+            np.asarray(r_b.stats.mode), np.asarray(r_u.stats.mode)
+        )
+        next_gid = churn([mi, ref], rng, 2, cap // 2, d, next_gid, live)
+    assert mi.epoch >= 3 and mi.epoch == ref.epoch
+    assert mi.n_live == ref.n_live
+    # row count stayed in the bucket the whole run
+    assert mi.base.n_records == 1024
+
+
+def test_epoch_crossing_zero_recompiles(base, corpus):
+    x, attrs, queries = corpus
+    d = x.shape[1]
+    cap = 40
+    mi = MutableIndex(base, cfg=CFG, shape=ShapePolicy(min_rows=1024, delta_cap=cap))
+    pm = CompassParams(k=10, ef=32, backend="ref")
+    pred = stacked(P.Pred.range(1, 0.1, 0.9), 8)
+    mi.search(queries, pred, pm).ids.block_until_ready()  # warmup compile
+    rng = np.random.default_rng(5)
+    live = list(range(x.shape[0]))
+    next_gid = x.shape[0]
+    c0 = mutable_search._cache_size()
+    while mi.epoch < 3:
+        next_gid = churn([mi], rng, 1, cap // 2, d, next_gid, live)
+        mi.search(queries, pred, pm).ids.block_until_ready()
+    assert mi.epoch >= 3
+    assert mutable_search._cache_size() - c0 == 0
+
+
+# ---------------------------------------------------------------------------
+# serving: executable-cache keys stable across compactions
+# ---------------------------------------------------------------------------
+
+
+def test_service_cache_hits_across_compactions(base, corpus):
+    x, attrs, queries = corpus
+    cap = 40
+    pol = ShapePolicy(min_rows=1024, delta_cap=cap)
+    mi = MutableIndex(base, cfg=CFG, shape=pol)
+    svc = SearchService(
+        mi,
+        CompassParams(k=10, ef=32, backend="ref", shape=pol),
+        batch_size=4,
+        max_wait_s=0.0,
+    )
+    rng = np.random.default_rng(9)
+    pred = P.Pred.range(0, 0.1, 0.9)
+    d = x.shape[1]
+    live = list(range(x.shape[0]))
+    next_gid = x.shape[0]
+    epochs_seen = set()
+    for _ in range(6):
+        for q in queries[:4]:
+            svc.submit(q, pred)
+        results = svc.run_until_idle()
+        epochs_seen.update(r.epoch for r in results)
+        next_gid = churn([mi], rng, 1, cap, d, next_gid, live)
+    for q in queries[:4]:
+        svc.submit(q, pred)
+    epochs_seen.update(r.epoch for r in svc.run_until_idle())
+    st = svc.stats()
+    assert mi.epoch >= 3 and len(epochs_seen) >= 3
+    # ONE mutable snapshot shape across every served epoch: compiles ==
+    # occupied buckets, zero recompiles across the compaction swaps
+    assert st["compiles"] == st["occupied_buckets"] == 1
+    assert st["shape_policy"]["bucket_rows"] is True
+
+
+def test_service_rejects_mismatched_policy(base):
+    mi = MutableIndex(base, cfg=CFG, shape=ShapePolicy(min_rows=1024))
+    with pytest.raises(ValueError, match="ShapePolicy"):
+        SearchService(
+            mi, CompassParams(shape=ShapePolicy(bucket_rows=False)), batch_size=4
+        )
+    # construction-time ef override is normalized out of the comparison
+    SearchService(
+        mi, CompassParams(shape=ShapePolicy(min_rows=1024, ef=48)), batch_size=4
+    )
+
+
+# ---------------------------------------------------------------------------
+# public surface
+# ---------------------------------------------------------------------------
+
+
+def test_compass_surface_exports_everything():
+    import repro.compass as compass
+
+    for name in compass.__all__:
+        assert getattr(compass, name, None) is not None, name
+    assert compass.build is compass.build_index
+    assert compass.search is compass.compass_search
+
+
+def test_legacy_shim_warns_deprecation():
+    sys.modules.pop("repro.core.search", None)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        shim = importlib.import_module("repro.core.search")
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+    assert shim.compass_search is compass_search
+    assert shim.CompassParams is CompassParams
