@@ -1,0 +1,164 @@
+"""Observability overhead bench: obs-on vs obs-off serving QPS.
+
+The tentpole claim of repro.obs is that it is *free when off and cheap
+when on*: registry recording happens only at sync points that already
+exist (the service's ``block_until_ready``), kernel scopes are pure
+metadata, and nothing obs does can enter the traced program.  This bench
+measures the claim instead of asserting it:
+
+  * one ``SearchService`` is built and warmed ONCE (so both arms run the
+    identical compiled executables — the comparison is pure dispatch +
+    recording cost, not compilation noise),
+  * trials alternate obs-off / obs-on (interleaving absorbs drift from
+    CPU frequency scaling and allocator state),
+  * each arm reports best-of-trials wall time (the standard
+    microbenchmark noise floor), plus an ``explain`` arm showing what the
+    opt-in trace build costs on top.
+
+``--selfcheck`` is the blocking CI gate: enabled QPS must be within 5% of
+disabled QPS, results must stay bitwise identical across arms, and the
+registry export must pass schema validation.  Exit 1 on any failure.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from repro.compass import (
+    BuildConfig,
+    CompassParams,
+    Pred,
+    SearchService,
+    build_index,
+)
+from repro.obs import registry as obs_reg
+
+from . import common as C
+
+N_REQUESTS = 64  # per trial
+TRIALS = 5  # per arm, interleaved
+TOLERANCE = 0.05  # enabled QPS must be >= (1 - this) * disabled QPS
+
+
+def _build_service(n: int, d: int, n_attrs: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    at = rng.uniform(size=(n, n_attrs)).astype(np.float32)
+    index = build_index(x, at, BuildConfig(m=8, nlist=16, kmeans_iters=4))
+    pm = CompassParams(k=10, ef=32, planner=True, backend=C.BACKEND)
+    svc = SearchService(index, pm, batch_size=8, max_wait_s=0.0)
+    queries = rng.normal(size=(N_REQUESTS, d)).astype(np.float32)
+    preds = [
+        Pred.range(i % n_attrs, 0.1, 0.7).tensor(n_attrs) for i in range(N_REQUESTS)
+    ]
+    return svc, queries, preds
+
+
+def _trial(svc, queries, preds) -> tuple[float, list]:
+    """Submit the fixed request set and drain it; returns (wall_s, results
+    sorted by rid) — the result list is the bitwise-parity probe."""
+    t0 = time.perf_counter()
+    for q, p in zip(queries, preds):
+        svc.submit(q, p)
+    done = svc.run_until_idle()
+    wall = time.perf_counter() - t0
+    return wall, sorted(done, key=lambda r: r.rid)
+
+
+def measure(n: int = 2000, d: int = 16, n_attrs: int = 4, out=print):
+    """Interleaved obs-off/obs-on trials over one warmed service."""
+    svc, queries, preds = _build_service(n, d, n_attrs)
+    prev = obs_reg.set_enabled(False)
+    try:
+        _trial(svc, queries, preds)  # warmup: compiles the occupied buckets
+        walls = {"off": [], "on": []}
+        results = {}
+        for t in range(TRIALS):
+            for arm in ("off", "on"):
+                obs_reg.set_enabled(arm == "on")
+                wall, res = _trial(svc, queries, preds)
+                walls[arm].append(wall)
+                results[arm] = res
+        obs_reg.set_enabled(True)
+        wall_explain, _ = _trial(svc, queries, preds)
+    finally:
+        obs_reg.set_enabled(prev)
+    best = {arm: min(w) for arm, w in walls.items()}
+    qps = {arm: N_REQUESTS / w for arm, w in best.items()}
+    # rids increment globally across trials; submission order (rid order
+    # within a trial) is the stable alignment for the parity probe
+    mismatch = any(
+        not (np.array_equal(a.ids, b.ids) and np.array_equal(a.dists, b.dists))
+        for a, b in zip(results["off"], results["on"])
+    )
+    overhead = best["on"] / best["off"] - 1.0
+    out(
+        f"obs overhead: off={qps['off']:.0f} qps on={qps['on']:.0f} qps "
+        f"({overhead * 100:+.1f}%), bitwise={'FAIL' if mismatch else 'ok'}"
+    )
+    return {
+        "n": n,
+        "n_requests": N_REQUESTS,
+        "trials": TRIALS,
+        "qps_off": qps["off"],
+        "qps_on": qps["on"],
+        "qps_explain_arm": N_REQUESTS / wall_explain,
+        "overhead_frac": overhead,
+        "bitwise_identical": not mismatch,
+        "service_stats": svc.stats(),
+    }
+
+
+def run(dataset: str = "SYN-EASY", out=print):
+    summary = measure(out=out)
+    rows = [
+        {"arm": "off", "qps": summary["qps_off"], "n_requests": N_REQUESTS},
+        {"arm": "on", "qps": summary["qps_on"], "n_requests": N_REQUESTS},
+        {"arm": "explain", "qps": summary["qps_explain_arm"], "n_requests": N_REQUESTS},
+        {"arm": "summary", "qps": summary["qps_on"], **summary},
+    ]
+    return rows
+
+
+def selfcheck(out=print) -> int:
+    """Blocking CI gate: obs-on serving QPS within 5% of obs-off, bitwise
+    result parity across arms, and a schema-valid registry export."""
+    failures = []
+    summary = measure(n=800, out=out)
+    if not summary["bitwise_identical"]:
+        failures.append("obs on/off results differ bitwise")
+    if summary["qps_on"] < (1.0 - TOLERANCE) * summary["qps_off"]:
+        failures.append(
+            f"obs-on QPS {summary['qps_on']:.0f} < "
+            f"{(1 - TOLERANCE) * summary['qps_off']:.0f} "
+            f"(95% of obs-off {summary['qps_off']:.0f})"
+        )
+    # the measure() run recorded with obs on — the export must validate
+    payload = obs_reg.registry().to_json()
+    if not payload["metrics"]:
+        failures.append("registry export empty after an obs-on run")
+    errs = obs_reg.validate_export(payload)
+    failures.extend(f"metrics export: {e}" for e in errs)
+    if failures:
+        for f in failures:
+            out(f"FAIL bench_obs selfcheck: {f}")
+        return 1
+    out(
+        f"ok bench_obs selfcheck: overhead {summary['overhead_frac'] * 100:+.1f}% "
+        f"(tolerance {TOLERANCE * 100:.0f}%), bitwise parity, "
+        f"{len(payload['metrics'])} metrics schema-valid"
+    )
+    return 0
+
+
+def main(argv: list[str] | None = None):
+    args = sys.argv[1:] if argv is None else argv
+    if "--selfcheck" in args:
+        sys.exit(selfcheck())
+    run()
+
+
+if __name__ == "__main__":
+    main()

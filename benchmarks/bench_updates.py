@@ -42,8 +42,10 @@ import numpy as np
 
 from repro.compass import CompassParams, MutableIndex, ShapePolicy, compass_search
 from repro.core.baselines import brute_force, recall
+from repro.core.engine import compass_search_jit
 from repro.core.index import BuildConfig, build_index
 from repro.core.mutable import mutable_search
+from repro.obs import registry as obs_reg
 
 from . import common as C
 
@@ -65,8 +67,21 @@ def _cache_entries() -> int:
 
     Deltas of this figure around a phase are that phase's compile count:
     each entry is one (shapes, static params) trace, i.e. one XLA compile.
+    (``compass_search`` is a host wrapper now; the jit cache lives on
+    ``compass_search_jit``.)
     """
-    return int(mutable_search._cache_size()) + int(compass_search._cache_size())
+    return int(mutable_search._cache_size()) + int(compass_search_jit._cache_size())
+
+
+def _registry_value(kind: str, name: str, default: float = 0.0) -> float:
+    """Sum a registry metric across its label series (0 if unregistered)."""
+    m = obs_reg.registry().get(name)
+    if m is None:
+        return default
+    if kind == "gauge":  # report the most recent series value
+        vals = list(m._series.values())
+        return float(vals[-1]) if vals else default
+    return float(sum(m._series.values()))
 
 
 def _recall_gids(res_ids, truth, table_gids, n_table) -> float:
@@ -82,6 +97,17 @@ def _recall_gids(res_ids, truth, table_gids, n_table) -> float:
 
 
 def run(dataset: str = "SYN-EASY", out=print):
+    # churn is where the lifecycle metrics live (compactions, drift, write
+    # errors): run with the registry on so the rows can report them, and
+    # restore the caller's setting on the way out
+    _obs_prev = obs_reg.set_enabled(True)
+    try:
+        return _run(dataset, out)
+    finally:
+        obs_reg.set_enabled(_obs_prev)
+
+
+def _run(dataset: str, out):
     x, attrs, queries = C.get_dataset(dataset)
     qj = jnp.asarray(queries)
     rng = np.random.default_rng(0)
@@ -264,6 +290,17 @@ def run(dataset: str = "SYN-EASY", out=print):
             "speedup_vs_rebuild_per_write": speedup,
             "final_epoch": mi.epoch,
             "n_live": mi.n_live,
+            # registry-sourced lifecycle figures (satellite: quant drift
+            # and write errors flow through repro.obs, not ad-hoc attrs);
+            # drift falls back to the index's own log when the registry
+            # never saw a quantized compaction (exact-mode workloads)
+            "n_write_errors": int(_registry_value("counter", "compass_write_errors_total")),
+            "obs_compactions": int(_registry_value("counter", "compass_compactions_total")),
+            "quant_drift_mse": (
+                _registry_value("gauge", "compass_quant_drift_mse")
+                if obs_reg.registry().get("compass_quant_drift_mse") is not None
+                else (mi.quant_drift_log[-1] if mi.quant_drift_log else None)
+            ),
         }
     )
     out(

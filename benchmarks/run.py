@@ -10,6 +10,7 @@
   bench_updates       -> mutable-index churn: QPS/recall/compaction (ours)
   bench_quant         -> PQ tier: recall/QPS/bytes-per-vector sweep (ours)
   bench_kernels       -> fused-visit / pq / ivf kernel microbench (ours)
+  bench_obs           -> observability overhead: obs-on vs obs-off QPS (ours)
 
 ``python -m benchmarks.run [--only name] [--quick] [--json-dir DIR]``
 
@@ -18,6 +19,12 @@ file (or under ``--json-dir``), wrapped with a provenance block (engine
 version, scoring backend, platform, corpus scale — see
 ``common.bench_metadata``) so benchmark trajectories across PRs are
 attributable to the code that produced them.
+
+The driver additionally exports the process-global metrics registry as
+``METRICS.json`` (schema ``repro.obs.metrics/v1``; empty-but-valid when
+``REPRO_OBS`` is off) and, when ``REPRO_OBS_PROFILE`` is set, wraps the
+whole run in a ``jax.profiler`` capture whose XPlane/perfetto artifacts
+land in the named directory.
 """
 from __future__ import annotations
 
@@ -39,7 +46,24 @@ ALL = (
     "bench_updates",
     "bench_quant",
     "bench_kernels",
+    "bench_obs",
 )
+
+
+def write_metrics_json(json_dir: str) -> str:
+    """Export the global metrics registry next to the BENCH artifacts.
+
+    Always written: a run with obs disabled exports an empty-but-valid
+    payload, so the CI schema gate (``python -m repro.obs.validate``) can
+    run unconditionally.
+    """
+    from repro.obs import registry as obs_reg
+
+    os.makedirs(json_dir, exist_ok=True)
+    path = os.path.join(json_dir, "METRICS.json")
+    with open(path, "w") as f:
+        json.dump(obs_reg.registry().to_json(), f, indent=1)
+    return path
 
 
 def _jsonable(obj):
@@ -89,14 +113,21 @@ def main() -> None:
         os.environ.setdefault("REPRO_BENCH_N", "20000")
         os.environ.setdefault("REPRO_BENCH_Q", "32")
     names = [args.only] if args.only else list(ALL)
-    for name in names:
-        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
-        t0 = time.time()
-        print(f"==== {name} ====", flush=True)
-        rows = mod.run()
-        wall = time.time() - t0
-        path = write_json(name, rows, wall, args.json_dir)
-        print(f"==== {name} done in {wall:.0f}s -> {path} ====", flush=True)
+    from repro.obs import profiling as obs_prof
+
+    with obs_prof.profile_capture() as prof_dir:  # no-op without REPRO_OBS_PROFILE
+        for name in names:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            t0 = time.time()
+            print(f"==== {name} ====", flush=True)
+            rows = mod.run()
+            wall = time.time() - t0
+            path = write_json(name, rows, wall, args.json_dir)
+            print(f"==== {name} done in {wall:.0f}s -> {path} ====", flush=True)
+    mpath = write_metrics_json(args.json_dir)
+    print(f"==== metrics registry -> {mpath} ====", flush=True)
+    if prof_dir:
+        print(f"==== profiler capture -> {prof_dir} ====", flush=True)
 
 
 if __name__ == "__main__":

@@ -36,6 +36,8 @@ ROW_REQUIRED = {
     # visit_step rows add fused/unfused qps arms, pq/ivf rows pallas/ref
     # arms; the trailing autotune_table row carries the measured block table
     "bench_kernels": ("kernel", "metric", "d", "v"),
+    # off/on/explain arms plus a summary row with the overhead fraction
+    "bench_obs": ("arm", "qps"),
 }
 
 
@@ -95,7 +97,22 @@ def main(argv: list[str] | None = None) -> int:
                 print(f"FAIL {os.path.basename(path)}: {e}")
         else:
             print(f"ok   {os.path.basename(path)}")
-    print(f"{len(paths) - bad}/{len(paths)} artifacts valid")
+    # the metrics-registry export rides next to the bench artifacts and has
+    # its own schema (repro.obs.metrics/v1) — validate it when present
+    mpath = os.path.join(bench_dir, "METRICS.json")
+    n_extra = 0
+    if os.path.exists(mpath):
+        from repro.obs import registry as obs_reg
+
+        n_extra = 1
+        errs = obs_reg.validate_file(mpath)
+        if errs:
+            bad += 1
+            for e in errs:
+                print(f"FAIL METRICS.json: {e}")
+        else:
+            print("ok   METRICS.json")
+    print(f"{len(paths) + n_extra - bad}/{len(paths) + n_extra} artifacts valid")
     return 1 if bad else 0
 
 

@@ -1,0 +1,97 @@
+"""Observability walkthrough: explain traces, the metrics registry, and
+the event log — the quickstart's ad-hoc ``res.stats`` prints, redone
+through ``repro.obs``.
+
+Where quickstart.py reads raw counter arrays off one result
+(``res.stats.n_dist.mean()``), this example asks the engine to explain
+itself: ``compass_search(..., explain=True)`` returns one
+:class:`QueryTrace` per query (planner estimate vs. measured selectivity,
+chosen mode, kernel route, work counters), the process-global metrics
+registry accumulates the same counters across *every* search for
+Prometheus/JSON export, and the event log records index lifecycle
+(compactions, epoch swaps) as structured JSONL.
+
+Everything here is opt-in and bitwise-free: with ``REPRO_OBS`` unset and
+no ``explain=True``, none of this code runs and results are unchanged.
+
+  PYTHONPATH=src python examples/observability.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.compass import CompassParams, compass_search, explain
+from repro.core import predicate as P
+from repro.core.index import BuildConfig, build_index
+from repro.core.mutable import MutableIndex
+from repro.data.synthetic import make_vector_corpus
+from repro.obs import EVENTS, registry as obs_registry
+from repro.obs.registry import registry, set_enabled
+
+
+def main():
+    n, d, a = 20000, 32, 4
+    x, attrs, queries = make_vector_corpus(n, d, a, n_modes=64, seed=0)
+    queries = queries[:8]
+    index = build_index(x, attrs, BuildConfig(m=16, nlist=64))
+
+    # -- 1. explain traces: per-query "what did the planner do and why" ----
+    # a selective conjunction next to a near-vacuous filter: the traces
+    # show the planner routing them differently, and why (estimate, run
+    # budget)
+    selective = P.Pred.and_(P.Pred.range(0, 0.2, 0.25), P.Pred.ge(1, 0.9))
+    vacuous = P.Pred.range(0, 0.0, 1.0)
+    pred = P.stack_predicates(
+        [selective.tensor(a)] * 4 + [vacuous.tensor(a)] * 4
+    )
+    pm = CompassParams(k=10, ef=96, planner=True)
+    res, traces = compass_search(index, jnp.asarray(queries), pred, pm, explain=True)
+    print("== explain: selective conjunction vs. vacuous filter ==")
+    print(explain(traces[0]))  # one trace ...
+    print(explain(traces[4]))
+    modes = [t.mode for t in traces]
+    print(f"modes across the batch: {modes}")
+    # the planner's estimate vs. what the search measured, side by side
+    for t in traces[:1] + traces[4:5]:
+        print(
+            f"  query[{t.query}]: est_selectivity={t.est_selectivity:.3f} "
+            f"actual={t.actual_selectivity:.3f} route={t.kernel_route}"
+        )
+
+    # -- 2. the metrics registry: fleet-level accumulation ------------------
+    # (quickstart printed res.stats.n_dist.mean() for ONE result; the
+    # registry folds every recorded search into process-global counters)
+    prev = set_enabled(True)  # or REPRO_OBS=1 in the environment
+    try:
+        obs_registry.record_search_stats(res.stats)  # fold the batch above
+        res2 = compass_search(index, jnp.asarray(queries), pred, pm)
+        obs_registry.record_search_stats(res2.stats)
+        reg = registry()
+        q_total = reg.get("compass_queries_total")
+        d_total = reg.get("compass_dist_total")
+        print("\n== registry: counters across both searches ==")
+        print(f"queries folded: {q_total.value(bucket='', shard=''):.0f}")
+        nd = d_total.value(bucket="", shard="")
+        nq = q_total.value(bucket="", shard="")
+        print(f"distance computations: {nd:.0f} ({nd / nq:.0f}/query, "
+              f"{100 * nd / nq / n:.2f}% of corpus)")
+        print("\nPrometheus exposition (first lines):")
+        print("\n".join(reg.to_prometheus().splitlines()[:6]))
+
+        # -- 3. the event log: index lifecycle as structured records --------
+        mut = MutableIndex(index, delta_cap=64)
+        rng = np.random.default_rng(1)
+        for i in range(80):  # overflow the delta -> auto-compaction
+            mut.upsert(n + i, rng.normal(size=d).astype(np.float32),
+                       rng.uniform(size=a).astype(np.float32))
+        print("\n== events: what the mutable index did ==")
+        print(f"counts: {EVENTS.counts()}")
+        for e in EVENTS.tail(2, kind="compaction"):
+            print(f"  compaction: epoch={e['epoch']} rows={e['n_rows']} "
+                  f"wall={e['wall_s']:.2f}s")
+        # EVENTS.configure("events.jsonl") would mirror these to disk
+    finally:
+        set_enabled(prev)
+
+
+if __name__ == "__main__":
+    main()

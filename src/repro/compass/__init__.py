@@ -32,6 +32,11 @@ Layer map (each name re-exported from its implementation module):
 * **distributed** — ``DistributedMutableIndex`` (owner-routed mutable
   shards), ``build_sharded_index`` / ``make_distributed_search`` (static
   shard_map fan-out).
+* **observability** — ``search(..., explain=True)`` returns ``(result,
+  traces)`` where each :class:`QueryTrace` carries the planner's estimate
+  vs the measured selectivity, the chosen mode, work counters and the
+  kernel route; ``explain`` renders them.  The metrics registry, event
+  log and profiling hooks live in :mod:`repro.obs`.
 
 Engine internals (queues, iterators, backends) intentionally stay out:
 import them from :mod:`repro.core.engine`.  The legacy
@@ -58,6 +63,7 @@ from repro.core.mutable import MutableIndex, Snapshot
 from repro.core.predicate import Pred, Predicate, stack_predicates
 from repro.core.quant import QuantConfig, QuantParams
 from repro.core.quant.encode import quantize_index
+from repro.obs import QueryTrace, explain
 from repro.serving.search_service import SearchService, ServiceResult
 
 # the canonical short names; the long forms stay available for callers
@@ -76,6 +82,7 @@ __all__ = [
     "Predicate",
     "QuantConfig",
     "QuantParams",
+    "QueryTrace",
     "SearchResult",
     "SearchService",
     "SearchStats",
@@ -86,6 +93,7 @@ __all__ = [
     "build_index",
     "build_sharded_index",
     "compass_search",
+    "explain",
     "make_distributed_search",
     "quantize_index",
     "search",

@@ -159,8 +159,14 @@ def postfilter_search(
         n_clusters_ranked=jnp.zeros((bsz,), jnp.int32),
         n_adc=jnp.zeros((bsz,), jnp.int32),
         n_rerank=jnp.zeros((bsz,), jnp.int32),
+        # the vacuous-predicate rounds admit everything they score; the
+        # host-side re-filter above is not a scored pass, so the engine's
+        # n_pass (all scored rows) is the honest figure to carry over
+        n_pass=last.stats.n_pass,
         mode=jnp.full((bsz,), POSTFILTER, jnp.int32),
         efs_final=last.stats.efs_final,
+        est_sel=jnp.full((bsz,), -1.0, jnp.float32),
+        run_total=jnp.full((bsz,), -1, jnp.int32),
     )
     return SearchResult(jnp.asarray(out_ids), jnp.asarray(out_dists), stats)
 

@@ -35,7 +35,7 @@ from .index import BuildConfig, CompassIndex, build_index
 from .planner.stats import AttrStats
 from .quant.encode import QuantizedVectors, quantize_index
 from .quant.params import QuantConfig
-from .engine import CompassParams, compass_search
+from .engine import CompassParams, SearchStats, compass_search
 
 
 class ShardedIndex(NamedTuple):
@@ -218,6 +218,59 @@ def make_distributed_search(mesh, pm: CompassParams):
 
 
 # ---------------------------------------------------------------------------
+# Cross-shard stats aggregation
+# ---------------------------------------------------------------------------
+
+#: How each SearchStats field composes across shards.  SUM fields are work
+#: counters — every shard genuinely did that work, so the cluster-wide
+#: figure is the total.  MAX fields are *latency-like*: shards run
+#: concurrently in a real deployment, so the batch takes as long as the
+#: slowest shard's step count, and summing would overstate the critical
+#: path S-fold.  FIRST fields are per-shard *decisions* (planner mode,
+#: final ef, selectivity estimates) that have no meaningful cross-shard
+#: reduction — each shard plans against its own attribute statistics —
+#: so the aggregate reports shard 0 and the per-shard values are exposed
+#: through the registry's ``shard`` label instead (see
+#: :meth:`DistributedMutableIndex.search`).
+STATS_SUM_FIELDS = (
+    "n_dist", "n_cdist", "n_bcalls", "n_clusters_ranked",
+    "n_adc", "n_rerank", "n_pass",
+)
+STATS_MAX_FIELDS = ("n_steps",)
+STATS_FIRST_FIELDS = ("mode", "efs_final", "est_sel", "run_total")
+
+_classified = set(STATS_SUM_FIELDS) | set(STATS_MAX_FIELDS) | set(STATS_FIRST_FIELDS)
+_unclassified = set(SearchStats._fields) - _classified
+assert not _unclassified, (
+    "SearchStats grew fields with no distributed aggregation rule: "
+    f"{sorted(_unclassified)} — classify them in core/distributed.py "
+    "(STATS_SUM_FIELDS / STATS_MAX_FIELDS / STATS_FIRST_FIELDS)"
+)
+
+
+def aggregate_shard_stats(parts: list) -> SearchStats:
+    """Fold per-shard SearchStats into one cluster-wide SearchStats.
+
+    Field semantics are data-driven from the STATS_*_FIELDS tables above;
+    the import-time assert guarantees every SearchStats field has exactly
+    one rule, so adding an engine stat without deciding its distributed
+    semantics fails loudly here instead of silently inheriting shard 0's
+    value through ``_replace``.
+    """
+    first = parts[0]
+    out = {}
+    for f in SearchStats._fields:
+        vals = [getattr(p, f) for p in parts]
+        if f in STATS_SUM_FIELDS:
+            out[f] = functools.reduce(lambda a, b: a + b, vals)
+        elif f in STATS_MAX_FIELDS:
+            out[f] = functools.reduce(jnp.maximum, vals)
+        else:
+            out[f] = getattr(first, f)
+    return SearchStats(**out)
+
+
+# ---------------------------------------------------------------------------
 # Mutable sharded index: per-shard deltas + independent compaction
 # ---------------------------------------------------------------------------
 
@@ -247,6 +300,9 @@ class DistributedMutableIndex:
         self.shards = list(shards)
         self._owner: dict[int, int] = {}
         for s, sh in enumerate(self.shards):
+            # stamp each shard's obs identity: its compaction/epoch events
+            # and registry series carry a shard label from here on
+            sh.obs_labels = {**getattr(sh, "obs_labels", {}), "shard": str(s)}
             for g in sh.gids:
                 self._owner[int(g)] = s
 
@@ -331,24 +387,26 @@ class DistributedMutableIndex:
     def search(self, queries, pred: PR.Predicate, pm: CompassParams):
         """Scatter-gather over all shards; global top-k merge on gids.
 
-        Work counters in the returned stats are summed across shards;
-        ``n_steps`` is the max (shards run concurrently in a real
-        deployment) and ``mode``/``efs_final`` are per-shard quantities
-        reported from shard 0.
+        Stats compose per :func:`aggregate_shard_stats`: work counters
+        (``n_dist``/``n_cdist``/``n_bcalls``/``n_clusters_ranked``/
+        ``n_adc``/``n_rerank``/``n_pass``) are SUMMED — every shard did
+        that work; ``n_steps`` is the MAX — shards run concurrently, so
+        the critical path is the slowest shard; and per-shard planner
+        decisions (``mode``/``efs_final``/``est_sel``/``run_total``) are
+        reported from shard 0, with the full per-shard breakdown flowing
+        into the metrics registry under a ``shard`` label when obs is
+        enabled.
         """
         parts = [sh.search(queries, pred, pm) for sh in self.shards]
         all_d = jnp.concatenate([p.dists for p in parts], axis=1)
         all_g = jnp.concatenate([p.ids for p in parts], axis=1)
         neg, sel = jax.lax.top_k(-all_d, pm.k)
-        stats = parts[0].stats._replace(
-            n_dist=sum(p.stats.n_dist for p in parts),
-            n_cdist=sum(p.stats.n_cdist for p in parts),
-            n_bcalls=sum(p.stats.n_bcalls for p in parts),
-            n_clusters_ranked=sum(p.stats.n_clusters_ranked for p in parts),
-            n_adc=sum(p.stats.n_adc for p in parts),
-            n_rerank=sum(p.stats.n_rerank for p in parts),
-            n_steps=functools.reduce(jnp.maximum, [p.stats.n_steps for p in parts]),
-        )
+        stats = aggregate_shard_stats([p.stats for p in parts])
+        from repro.obs import registry as obs_reg
+
+        if obs_reg.enabled():
+            for s, p in enumerate(parts):
+                obs_reg.record_search_stats(p.stats, labels={"shard": str(s)})
         from .engine.state import SearchResult
 
         return SearchResult(jnp.take_along_axis(all_g, sel, axis=1), -neg, stats)

@@ -17,7 +17,13 @@ coordinated layers behind one public entry point.
 ``DeprecationWarning``).
 """
 from .backend import PallasBackend, RefBackend, VisitBackend, resolve_backend
-from .driver import ENGINE_VERSION, CompassParams, ShapePolicy, compass_search
+from .driver import (
+    ENGINE_VERSION,
+    CompassParams,
+    ShapePolicy,
+    compass_search,
+    compass_search_jit,
+)
 from .state import EngineState, FixedQueue, SearchResult, SearchStats
 
 __all__ = [
@@ -32,5 +38,6 @@ __all__ = [
     "SearchStats",
     "VisitBackend",
     "compass_search",
+    "compass_search_jit",
     "resolve_backend",
 ]

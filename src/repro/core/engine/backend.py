@@ -213,15 +213,24 @@ class PallasBackend:
     the centroid ranking through ``kernels.ivf_score`` (blocked MXU
     distance matrix).  Every kernel implements squared L2 and negated
     inner product (static ``metric``); only genuinely unknown metrics fall
-    back to the reference math.
+    back to the reference math, and each such fallback bumps
+    ``compass_kernel_fallback_total{kernel,reason="metric:<m>"}`` so a
+    silently-ref-routed deployment is visible in the registry.
     """
 
     name = "pallas"
 
     _KERNEL_METRICS = ("l2", "ip")
 
+    @staticmethod
+    def _metric_fallback(kernel: str, metric: str) -> None:
+        from repro.obs import profiling as prof
+
+        prof.count_fallback(kernel, f"metric:{metric}")
+
     def visit_scores(self, index, q, pred, safe_ids, mask, metric):
         if metric not in self._KERNEL_METRICS:
+            self._metric_fallback("filter_distance", metric)
             return RefBackend().visit_scores(index, q, pred, safe_ids, mask, metric)
         from ...kernels import ops
 
@@ -235,6 +244,10 @@ class PallasBackend:
         self, index, q, pred, safe_ids, mask, metric, fused=True, rows_per_step=None
     ):
         if not fused or metric not in self._KERNEL_METRICS:
+            if metric not in self._KERNEL_METRICS:
+                self._metric_fallback("visit_step", metric)
+            else:
+                self._metric_fallback("visit_step", "fused_visit=False")
             # unfused: the pre-fusion kernel sequence (filter_distance
             # kernel + jnp live gather + admission select)
             dist, passing = self.visit_scores(index, q, pred, safe_ids, mask, metric)
@@ -250,6 +263,7 @@ class PallasBackend:
 
     def centroid_scores(self, index, queries, metric):
         if metric not in self._KERNEL_METRICS:
+            self._metric_fallback("ivf_score", metric)
             return RefBackend().centroid_scores(index, queries, metric)
         from ...kernels import ops
 
@@ -257,6 +271,7 @@ class PallasBackend:
 
     def scan_scores(self, index, queries, pred, ids, mask, metric):
         if metric not in self._KERNEL_METRICS:
+            self._metric_fallback("filter_distance", metric)
             return RefBackend().scan_scores(index, queries, pred, ids, mask, metric)
         from ...kernels import ops
 
@@ -270,6 +285,7 @@ class PallasBackend:
         # the pq_score kernel builds the LUT in-kernel from q_resid (the
         # fused path); precomputed tables only feed the jnp path
         if metric not in self._KERNEL_METRICS:
+            self._metric_fallback("pq_score", metric)
             return RefBackend().adc_scores(index, q_resid, lut, pred, safe_ids, mask, metric)
         from ...kernels import ops
 
@@ -282,6 +298,7 @@ class PallasBackend:
 
     def scan_scores_quantized(self, index, q_resid, luts, pred, ids, mask, metric):
         if metric not in self._KERNEL_METRICS:
+            self._metric_fallback("pq_score", metric)
             return RefBackend().scan_scores_quantized(
                 index, q_resid, luts, pred, ids, mask, metric
             )

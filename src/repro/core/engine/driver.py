@@ -251,8 +251,14 @@ def _search_one(
         n_clusters_ranked=zero,
         n_adc=zero,
         n_rerank=zero,
+        n_pass=zero,
         mode=mode,
         efs_final=jnp.int32(pm.efs0),
+        # planner provenance rides in the stats so an explain trace can
+        # compare estimate vs. measurement without re-running the planner
+        # (obs/trace.py); -1 marks "planner off, no estimate"
+        est_sel=jnp.float32(-1.0) if plan is None else plan.est_sel,
+        run_total=jnp.int32(-1) if plan is None else plan.run_total,
     )
     st = EngineState(
         cand=FixedQueue.full(pm.cand_cap, n),
@@ -284,10 +290,15 @@ def _search_one(
             if index.live is not None:  # tombstoned rows stay out of results
                 passing = passing & index.live[safe]
             res = s.res.merge(jnp.where(passing, plan.dist, S.INF), safe)
+            n_pass = s.stats.n_pass + jnp.sum(passing).astype(jnp.int32)
             if lut is not None:  # the planner scan scored through ADC tables
-                stats2 = s.stats._replace(n_adc=s.stats.n_adc + jnp.sum(plan.mask))
+                stats2 = s.stats._replace(
+                    n_adc=s.stats.n_adc + jnp.sum(plan.mask), n_pass=n_pass
+                )
             else:
-                stats2 = s.stats._replace(n_dist=s.stats.n_dist + jnp.sum(plan.mask))
+                stats2 = s.stats._replace(
+                    n_dist=s.stats.n_dist + jnp.sum(plan.mask), n_pass=n_pass
+                )
             return s._replace(
                 res=res,
                 visited=visited,
@@ -340,7 +351,7 @@ def _search_one(
 
 
 @functools.partial(jax.jit, static_argnames=("pm",))
-def compass_search(
+def compass_search_jit(
     index: CompassIndex,
     queries: jax.Array,
     pred: P.Predicate,
@@ -348,7 +359,9 @@ def compass_search(
     luts: jax.Array | None = None,
     q_resids: jax.Array | None = None,
 ) -> SearchResult:
-    """Batched filtered search. queries: (B, d); pred arrays: (B, T, A).
+    """The jitted search program behind :func:`compass_search` — use it
+    directly for AOT paths (``.lower(...).compile()``, the serving
+    executable cache) and jit-cache accounting (``._cache_size()``).
 
     With ``pm.quant`` set (and a quantized index), this is the two-stage
     quantized search: stage one runs the ordinary loop at
@@ -420,3 +433,39 @@ def compass_search(
             index, queries, pred, res, k_out, pm.metric, backend, pm.quant.rerank
         )
     return res
+
+
+def compass_search(
+    index: CompassIndex,
+    queries: jax.Array,
+    pred: P.Predicate,
+    pm: CompassParams,
+    luts: jax.Array | None = None,
+    q_resids: jax.Array | None = None,
+    *,
+    explain: bool = False,
+):
+    """Batched filtered search. queries: (B, d); pred arrays: (B, T, A).
+
+    The public entry point: runs :func:`compass_search_jit` (see its
+    docstring for the quantized two-stage semantics) and, with
+    ``explain=True``, additionally returns one
+    :class:`~repro.obs.trace.QueryTrace` per query::
+
+        res, traces = compass_search(index, q, pred, pm, explain=True)
+        print(repro.compass.explain(traces))
+
+    Explain is bitwise-free: every field a trace needs already rides in
+    the device-side ``SearchStats``, so the traced program — and thus the
+    jit/executable cache key and every result bit — is identical with and
+    without the flag; ``explain=True`` merely materializes the stats
+    host-side afterwards.  The flag is host-only and must not be used
+    under an outer ``jax.jit`` (the default ``False`` path is
+    transparent to tracing — ``mutable_search`` relies on that).
+    """
+    res = compass_search_jit(index, queries, pred, pm, luts, q_resids)
+    if not explain:
+        return res
+    from repro.obs.trace import build_traces  # lazy: obs sits above the engine
+
+    return res, build_traces(res, pm)

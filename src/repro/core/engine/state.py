@@ -87,9 +87,17 @@ class SearchStats(NamedTuple):
     n_adc: jax.Array  # quantized (ADC table-lookup) scores — stage one of
     # the quantized tier; 0 whenever CompassParams.quant is off
     n_rerank: jax.Array  # stage-two exact distances of the quantized tier
+    n_pass: jax.Array  # predicate-passing AND live rows among the scored
+    # ones (visit admissions + prefilter adoptions + delta scan passes);
+    # n_pass / rows-examined is the *measured* selectivity an explain
+    # trace reports next to the planner's estimate (obs/trace.py)
     mode: jax.Array  # planner execution mode (planner.plan.MODE_NAMES index);
     # COOPERATIVE when the planner is off
     efs_final: jax.Array
+    est_sel: jax.Array  # f32 planner-estimated selectivity; -1.0 when the
+    # planner is off (explain renders that as "no estimate")
+    run_total: jax.Array  # int32 planner-estimated candidate run rows (the
+    # cost-model input behind the mode choice); -1 when the planner is off
 
 
 class SearchResult(NamedTuple):
@@ -150,10 +158,18 @@ def visit(index, q, pred, st: EngineState, ids, mask, pm, backend) -> EngineStat
     # A quant-adapted backend (backend.QuantAdapter) scores visits through
     # the ADC tables, so the work lands in n_adc, not the full-precision
     # #Comp counter.  Trace-time branch: counts_as is a plain attribute.
+    # `admit` is finite exactly for valid, predicate-passing, live rows —
+    # summing its finite count measures the passrate the planner estimated
     if getattr(backend, "counts_as", "dist") == "adc":
-        stats = st.stats._replace(n_adc=st.stats.n_adc + jnp.sum(mask))
+        stats = st.stats._replace(
+            n_adc=st.stats.n_adc + jnp.sum(mask),
+            n_pass=st.stats.n_pass + jnp.sum(jnp.isfinite(admit)).astype(jnp.int32),
+        )
     else:
-        stats = st.stats._replace(n_dist=st.stats.n_dist + jnp.sum(mask))
+        stats = st.stats._replace(
+            n_dist=st.stats.n_dist + jnp.sum(mask),
+            n_pass=st.stats.n_pass + jnp.sum(jnp.isfinite(admit)).astype(jnp.int32),
+        )
     return st._replace(
         cand=cand,
         gtop=gtop,

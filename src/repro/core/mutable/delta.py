@@ -55,7 +55,8 @@ def delta_topk(delta: DeltaView, queries, pred, k: int, metric: str, backend):
     """Exact top-k over the delta segment for a query batch.
 
     Returns (gids (B, k') int32 with -1 padding, dists (B, k') f32 with
-    +inf padding, n_scanned () int32) where k' = min(k, cap).
+    +inf padding, n_scanned () int32, n_pass (B,) int32 predicate-passing
+    rows per query) where k' = min(k, cap).
     """
     b = queries.shape[0]
     cap = delta.cap
@@ -67,7 +68,8 @@ def delta_topk(delta: DeltaView, queries, pred, k: int, metric: str, backend):
     neg, sel = jax.lax.top_k(-dist, kk)
     top_d = -neg
     top_g = jnp.where(jnp.isfinite(top_d), jnp.take(delta.gids, sel), jnp.int32(-1))
-    return top_g, top_d, jnp.sum(delta.valid).astype(jnp.int32)
+    n_pass = jnp.sum(passing, axis=1).astype(jnp.int32)
+    return top_g, top_d, jnp.sum(delta.valid).astype(jnp.int32), n_pass
 
 
 def delta_topk_quantized(
@@ -90,7 +92,8 @@ def delta_topk_quantized(
 
     Returns (gids (B, k') int32 with -1 padding, dists (B, k') f32 with
     +inf padding, n_adc (B,) int32 stage-one table scores, n_rerank (B,)
-    int32 stage-two exact distances) with k' = min(k, cap).
+    int32 stage-two exact distances, n_pass (B,) int32 predicate-passing
+    rows per query) with k' = min(k, cap).
     """
     from ..quant import encode as Q
     from ..quant.rerank import rerank_candidates
@@ -116,4 +119,5 @@ def delta_topk_quantized(
     )
     slots = jnp.take_along_axis(sel1, sel2, axis=1)
     top_g = jnp.where(jnp.isfinite(top_d), jnp.take(delta.gids, slots), jnp.int32(-1))
-    return top_g, top_d, n_adc, n_rerank
+    n_pass = jnp.sum(passing, axis=1).astype(jnp.int32)
+    return top_g, top_d, n_adc, n_rerank, n_pass

@@ -40,6 +40,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import events as obs_events
+from repro.obs import registry as obs_registry
+
 from .. import predicate as P
 from ..engine.backend import resolve_backend
 from ..engine.driver import ShapePolicy
@@ -100,18 +103,25 @@ def mutable_search(
     bg = jnp.take(base_gids, jnp.clip(base.ids, 0, index.n_records), axis=0)
     bg = jnp.where(jnp.isfinite(base.dists), bg, jnp.int32(GID_SENTINEL))
     if quant_delta:
-        dg, dd, n_adc, n_rr = delta_topk_quantized(
+        dg, dd, n_adc, n_rr, n_pass = delta_topk_quantized(
             delta, queries, pred, pmr.k, pmr.metric, backend, pm.quant,
             luts, q_resids,
         )
         stats = base.stats._replace(
-            n_adc=base.stats.n_adc + n_adc, n_rerank=base.stats.n_rerank + n_rr
+            n_adc=base.stats.n_adc + n_adc,
+            n_rerank=base.stats.n_rerank + n_rr,
+            n_pass=base.stats.n_pass + n_pass,
         )
         if pm.quant.rerank == "full":  # stage two read float32 delta rows
             stats = stats._replace(n_dist=stats.n_dist + n_rr)
     else:
-        dg, dd, n_scanned = delta_topk(delta, queries, pred, pmr.k, pmr.metric, backend)
-        stats = base.stats._replace(n_dist=base.stats.n_dist + n_scanned)
+        dg, dd, n_scanned, n_pass = delta_topk(
+            delta, queries, pred, pmr.k, pmr.metric, backend
+        )
+        stats = base.stats._replace(
+            n_dist=base.stats.n_dist + n_scanned,
+            n_pass=base.stats.n_pass + n_pass,
+        )
     all_d = jnp.concatenate([base.dists, dd], axis=1)
     all_g = jnp.concatenate([bg, dg], axis=1)
     neg, sel = jax.lax.top_k(-all_d, pmr.k)
@@ -181,6 +191,10 @@ class MutableIndex:
         # base.qvecs.train_mse to decide when to retrain — DESIGN.md
         # §Quantization on codebook staleness)
         self.quant_drift_log: list[float] = []
+        # registry labels this index's metrics/events carry (e.g.
+        # DistributedMutableIndex sets {"shard": "3"} per shard so the
+        # per-shard breakdowns are separable series, not pre-summed)
+        self.obs_labels: dict[str, str] = {}
         self._epoch = 0
         self._snap: Snapshot | None = None
         n_real = base.n_records
@@ -310,6 +324,12 @@ class MutableIndex:
                     raise RuntimeError(
                         f"delta segment full ({self.delta_cap}); call compact()"
                     )
+                obs_events.emit(
+                    "delta_overflow",
+                    delta_cap=self.delta_cap,
+                    epoch=self._epoch,
+                    **self.obs_labels,
+                )
                 self.compact()
             old_slot = self._gid2slot.pop(g, None)
             if old_slot is not None:  # superseded within the delta
@@ -381,12 +401,23 @@ class MutableIndex:
             self._snap = Snapshot(index, base_gids, delta, self._epoch)
         return self._snap
 
-    def search(self, queries, pred: P.Predicate, pm) -> SearchResult:
-        """Batched filtered search over base+delta; ids are global ids."""
+    def search(self, queries, pred: P.Predicate, pm, *, explain: bool = False):
+        """Batched filtered search over base+delta; ids are global ids.
+
+        ``explain=True`` additionally returns per-query
+        :class:`~repro.obs.trace.QueryTrace` records (stamped with this
+        snapshot's epoch) — same contract as ``compass_search``: the
+        traced program is identical either way.
+        """
         snap = self.snapshot()
-        return mutable_search(
+        res = mutable_search(
             snap.index, snap.base_gids, snap.delta, jnp.asarray(queries), pred, pm
         )
+        if not explain:
+            return res
+        from repro.obs.trace import build_traces  # lazy: obs sits above core
+
+        return res, build_traces(res, pm, epoch=snap.epoch)
 
     def materialize(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         """The equivalent immutable table: (vectors, attrs, gids) in
@@ -471,4 +502,42 @@ class MutableIndex:
         self._reset_delta()
         self._epoch += 1
         self._snap = None
-        self.compaction_log.append(time.perf_counter() - t0)
+        wall = time.perf_counter() - t0
+        self.compaction_log.append(wall)
+        lab = self.obs_labels
+        obs_events.emit(
+            "compaction",
+            epoch=self._epoch,
+            wall_s=wall,
+            n_rows=vec.shape[0],
+            row_bucket=index.n_records,
+            retrained=bool(retrain_codebooks and index.qvecs is not None),
+            quant_drift_mse=self.quant_drift_log[-1] if index.qvecs is not None else None,
+            **lab,
+        )
+        obs_events.emit("epoch_swap", epoch=self._epoch, **lab)
+        if retrain_codebooks and index.qvecs is not None:
+            obs_events.emit("codebook_retrain", epoch=self._epoch, **lab)
+        if obs_registry.enabled():
+            r = obs_registry.registry()
+            lnames = tuple(sorted(lab))
+            r.counter(
+                "compass_compactions_total", "delta folds completed", lnames
+            ).inc(1, **lab)
+            r.histogram(
+                "compass_compaction_seconds", "compaction fold wall time", lnames
+            ).observe(wall, **lab)
+            r.gauge("compass_epoch", "current snapshot epoch", lnames).set(
+                self._epoch, **lab
+            )
+            if retrain_codebooks and index.qvecs is not None:
+                r.counter(
+                    "compass_codebook_retrains_total", "explicit codebook retrains",
+                    lnames,
+                ).inc(1, **lab)
+            if index.qvecs is not None:
+                r.gauge(
+                    "compass_quant_drift_mse",
+                    "decode MSE of the folded table vs frozen codebooks",
+                    lnames,
+                ).set(self.quant_drift_log[-1], **lab)

@@ -77,15 +77,25 @@ def choose(
 
     ``measure_fn`` runs one candidate end-to-end on dummy data of the real
     shape and blocks until done (the wrapper supplies it); candidates that
-    raise are skipped.  ``candidates[0]`` is the built-in default."""
+    raise are skipped.  ``candidates[0]`` is the built-in default.
+
+    Every resolution bumps ``compass_autotune_total{kernel,source}`` with
+    the outcome (``pin``/``table``/``measured``/``default`` — see
+    obs/profiling.py), so the decision that produced a given block config
+    is visible at runtime without re-deriving the resolution order.
+    """
+    from repro.obs import profiling as prof
+
     pinned = block_override(kernel)
     if pinned:
         cfg = dict(candidates[0])
         cfg.update(pinned)
+        prof.count_autotune(kernel, "pin")
         return cfg
     key = (kernel, tuple(shape_key))
     hit = _TABLE.get(key)
     if hit is not None:
+        prof.count_autotune(kernel, "table")
         return dict(hit)
     cfg = dict(candidates[0])
     if measure_fn is not None and autotune_measurement_enabled():
@@ -98,5 +108,8 @@ def choose(
                 continue
             if t < best_t:
                 best_t, cfg = t, dict(cand)
+        prof.count_autotune(kernel, "measured")
+    else:
+        prof.count_autotune(kernel, "default")
     _TABLE[key] = dict(cfg)
     return cfg

@@ -1,0 +1,82 @@
+"""repro.obs — end-to-end observability for the Compass stack.
+
+Four surfaces (DESIGN.md §Observability), all off by default and all
+bitwise-invariant to search results:
+
+* **registry** — host-side counters/gauges/fixed-bucket histograms with
+  Prometheus-text + JSON exporters and a validateable schema; device
+  ``SearchStats`` fold in only at existing sync points
+  (:func:`record_search_stats`).  Enable with ``REPRO_OBS=1`` or
+  :func:`set_enabled`.
+* **trace** — per-query explain traces: ``compass_search(...,
+  explain=True)`` returns :class:`QueryTrace` records rendered by
+  :func:`explain` (re-exported as ``repro.compass.explain``).
+* **profiling** — ``jax.named_scope``/``TraceAnnotation`` wrappers around
+  every Pallas kernel and the serving micro-batch, an
+  ``REPRO_OBS_PROFILE`` XPlane capture helper, and trace-time
+  kernel/fallback/autotune counters that stay on even when the registry
+  is disabled (one dict add per *compile*).
+* **events** — a structured lifecycle log (compactions, epoch swaps,
+  delta overflows, write errors, codebook retrains, executable compiles)
+  with an optional JSONL sink (``REPRO_OBS_EVENTS=<path>``).
+"""
+from . import events, profiling, registry, trace  # noqa: F401 — keep the
+# submodules addressable as attributes: the convenience re-exports below
+# must NOT shadow them (``repro.obs.registry`` stays the module; the
+# accessor for the global MetricsRegistry is :func:`get_registry`)
+from .events import EVENTS, EventLog, emit
+from .profiling import (
+    KERNELS,
+    annotate,
+    kernel_scope,
+    profile_capture,
+)
+from .registry import (
+    LATENCY_BUCKETS_S,
+    RECALL_BUCKETS,
+    SCHEMA,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    enabled,
+    record_search_stats,
+    reset,
+    set_enabled,
+    validate_export,
+    validate_file,
+)
+from .registry import registry as get_registry
+from .trace import QueryTrace, build_traces, explain, format_trace
+
+__all__ = [
+    "Counter",
+    "EVENTS",
+    "EventLog",
+    "Gauge",
+    "Histogram",
+    "KERNELS",
+    "LATENCY_BUCKETS_S",
+    "MetricsRegistry",
+    "QueryTrace",
+    "RECALL_BUCKETS",
+    "SCHEMA",
+    "annotate",
+    "build_traces",
+    "emit",
+    "enabled",
+    "events",
+    "explain",
+    "format_trace",
+    "get_registry",
+    "kernel_scope",
+    "profile_capture",
+    "profiling",
+    "record_search_stats",
+    "registry",
+    "reset",
+    "set_enabled",
+    "trace",
+    "validate_export",
+    "validate_file",
+]

@@ -1,0 +1,121 @@
+"""Kernel profiling hooks: named scopes, trace capture, route counters.
+
+Three layers, all result-invariant:
+
+* :func:`kernel_scope` wraps each Pallas kernel wrapper (kernels/ops.py)
+  in ``jax.named_scope`` (HLO metadata — the kernel shows up under
+  ``compass/<name>`` in a device trace) plus ``jax.profiler
+  .TraceAnnotation`` (host timeline), and bumps the per-kernel wrapper
+  counter.  named_scope only decorates metadata on ops traced inside it,
+  so the compiled program is identical with or without the scope.
+* :func:`annotate` is the host-phase sibling (no HLO scope) used around
+  the serving micro-batch dispatch.
+* :func:`profile_capture` drives ``jax.profiler.start_trace`` /
+  ``stop_trace`` and dumps an XPlane trace dir (load it in TensorBoard or
+  convert to perfetto) when ``REPRO_OBS_PROFILE`` is set — either ``1``
+  (default dir ``./obs-profile``) or a target directory path.
+
+Counter semantics: the kernel/fallback/autotune counters record at
+**wrapper-call time**, which inside a jit means *trace time* — once per
+compiled program, not per execution (exactly the semantics of the
+``visit_step.TRACE_COUNT`` tripwire they generalize).  They record even
+when observability is disabled: a silent ref fallback during a disabled
+trace would otherwise be invisible forever, the cost is a dict add per
+*compile*, and steady-state dispatch never re-enters the wrapper.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+
+import jax
+
+from . import registry as R
+
+#: every Pallas kernel the repo ships (the five wrapped in kernels/ops.py)
+KERNELS = (
+    "filter_distance",
+    "visit_step",
+    "ivf_score",
+    "pq_score",
+    "flash_attention",
+)
+
+
+def count_kernel(kernel: str) -> None:
+    """One kernel-wrapper entry (trace time inside jit)."""
+    R.registry().counter(
+        "compass_kernel_traces_total",
+        "kernel wrapper entries (trace-time inside jit)",
+        ("kernel",),
+    ).inc(1, kernel=kernel)
+
+
+def count_fallback(kernel: str, reason: str) -> None:
+    """A kernel wrapper routed to the jnp reference path instead of the
+    Pallas kernel — the silent fallback the CI tripwire hunts, now a
+    runtime-visible counter."""
+    R.registry().counter(
+        "compass_kernel_fallback_total",
+        "kernel calls routed to the jnp reference path",
+        ("kernel", "reason"),
+    ).inc(1, kernel=kernel, reason=reason)
+
+
+def count_autotune(kernel: str, source: str) -> None:
+    """One autotune block-config resolution, labeled by where the config
+    came from: ``pin`` (env override), ``table`` (measured cache hit),
+    ``measured`` (fresh probe), ``default`` (candidates[0])."""
+    R.registry().counter(
+        "compass_autotune_total",
+        "autotune block-config resolutions by source",
+        ("kernel", "source"),
+    ).inc(1, kernel=kernel, source=source)
+
+
+@contextlib.contextmanager
+def kernel_scope(name: str):
+    """Wrap one kernel launch: named_scope + TraceAnnotation + counter."""
+    count_kernel(name)
+    with jax.named_scope(f"compass/{name}"), jax.profiler.TraceAnnotation(
+        f"compass/{name}"
+    ):
+        yield
+
+
+@contextlib.contextmanager
+def annotate(name: str):
+    """Host-phase timeline annotation (serving micro-batch path)."""
+    with jax.profiler.TraceAnnotation(name):
+        yield
+
+
+def profile_dir() -> str | None:
+    """The capture target from ``REPRO_OBS_PROFILE`` (None = capture off)."""
+    v = os.environ.get("REPRO_OBS_PROFILE", "")
+    if v in ("", "0"):
+        return None
+    return "obs-profile" if v == "1" else v
+
+
+@contextlib.contextmanager
+def profile_capture(out_dir: str | None = None, force: bool = False):
+    """Capture an XPlane/perfetto trace dir around the with-body.
+
+    Gated on ``REPRO_OBS_PROFILE`` unless ``force=True`` (tests); yields
+    the trace directory, or None when capture is off.  The profiler
+    writes TensorBoard-loadable XPlane protos plus a ``perfetto`` trace
+    under ``<dir>/plugins/profile/<run>/``.
+    """
+    target = out_dir if out_dir is not None else profile_dir()
+    if target is None and force:
+        target = "obs-profile"
+    if target is None:
+        yield None
+        return
+    os.makedirs(target, exist_ok=True)
+    jax.profiler.start_trace(target)
+    try:
+        yield target
+    finally:
+        jax.profiler.stop_trace()

@@ -1,0 +1,433 @@
+"""The metrics registry — host-side counters/gauges/histograms with
+Prometheus-text and JSON exporters (DESIGN.md §Observability).
+
+Design constraints, in order:
+
+1. **Bitwise invariance.**  Nothing here ever touches a traced value: the
+   registry is plain host Python, and every instrumentation site either
+   runs at trace time (kernel wrappers — once per compile, constant work)
+   or at an *existing* host sync point (``block_until_ready`` in serving,
+   ``np.asarray`` in benchmarks).  Observability can change wall-clock by
+   nanoseconds per batch; it cannot change a single result bit, because it
+   never adds a device op or a sync.
+2. **Off by default.**  ``enabled()`` gates every per-batch recording;
+   the steady-state cost of a disabled registry is one module-level bool
+   read per sync point.  ``REPRO_OBS=1`` (read at import) or
+   ``set_enabled(True)`` turns it on; the bench_obs CI tripwire asserts
+   the *enabled* overhead stays within 5% of disabled QPS.
+3. **Fixed-bucket histograms.**  Latency/recall distributions use
+   fixed, declared bucket edges (Prometheus ``le`` convention: cumulative
+   counts at export, per-bucket counts internally, one overflow slot for
+   ``+Inf``) — no dynamic resizing, so ``observe`` is one bisect + two
+   adds.
+
+Series are keyed by label values; metric names and label names follow the
+Prometheus data model (validated at creation).  ``to_json`` emits the
+``repro.obs.metrics/v1`` schema that :func:`validate_export` (and the CI
+step ``python -m repro.obs.validate``) checks.
+"""
+from __future__ import annotations
+
+import bisect
+import json
+import math
+import os
+import re
+import threading
+
+SCHEMA = "repro.obs.metrics/v1"
+METRIC_TYPES = ("counter", "gauge", "histogram")
+
+_NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+_LABEL_RE = re.compile(r"^[a-zA-Z_][a-zA-Z0-9_]*$")
+
+#: fixed bucket edges (seconds) for serving latency histograms — spans the
+#: CI interpret-mode tail (seconds) down to native-TPU micro-batches
+LATENCY_BUCKETS_S = (
+    0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0,
+    2.5, 5.0,
+)
+#: fixed bucket edges for recall@k histograms (cumulative `le` semantics)
+RECALL_BUCKETS = (0.5, 0.8, 0.9, 0.95, 0.99, 0.999, 1.0)
+
+_ENABLED = os.environ.get("REPRO_OBS", "0") not in ("", "0")
+
+
+def enabled() -> bool:
+    """Is per-batch metric recording on?  One bool read — the entire cost
+    of a disabled registry at a sync point."""
+    return _ENABLED
+
+
+def set_enabled(flag: bool) -> bool:
+    """Flip recording on/off; returns the previous value (so callers can
+    restore — see benchmarks/bench_obs.py)."""
+    global _ENABLED
+    prev = _ENABLED
+    _ENABLED = bool(flag)
+    return prev
+
+
+class _Metric:
+    """One named metric = a family of label-keyed series."""
+
+    kind = "untyped"
+
+    def __init__(self, name: str, help: str, labelnames: tuple[str, ...]):
+        if not _NAME_RE.match(name):
+            raise ValueError(f"invalid metric name {name!r}")
+        for ln in labelnames:
+            if not _LABEL_RE.match(ln):
+                raise ValueError(f"invalid label name {ln!r} on {name}")
+        self.name = name
+        self.help = help
+        self.labelnames = tuple(labelnames)
+        self._series: dict[tuple[str, ...], float | list] = {}
+
+    def _key(self, labels: dict) -> tuple[str, ...]:
+        if set(labels) != set(self.labelnames):
+            raise ValueError(
+                f"{self.name}: labels {sorted(labels)} != declared "
+                f"{sorted(self.labelnames)}"
+            )
+        return tuple(str(labels[ln]) for ln in self.labelnames)
+
+    def _labels_of(self, key: tuple[str, ...]) -> dict[str, str]:
+        return dict(zip(self.labelnames, key))
+
+    def samples(self) -> list[dict]:
+        return [
+            {"labels": self._labels_of(k), "value": v}
+            for k, v in sorted(self._series.items())
+        ]
+
+    def to_json(self) -> dict:
+        return {
+            "name": self.name,
+            "type": self.kind,
+            "help": self.help,
+            "labelnames": list(self.labelnames),
+            "samples": self.samples(),
+        }
+
+
+class Counter(_Metric):
+    kind = "counter"
+
+    def inc(self, value: float = 1.0, **labels) -> None:
+        if value < 0:
+            raise ValueError(f"{self.name}: counters only go up (got {value})")
+        k = self._key(labels)
+        self._series[k] = self._series.get(k, 0.0) + float(value)
+
+    def value(self, **labels) -> float:
+        return float(self._series.get(self._key(labels), 0.0))
+
+
+class Gauge(_Metric):
+    kind = "gauge"
+
+    def set(self, value: float, **labels) -> None:
+        self._series[self._key(labels)] = float(value)
+
+    def value(self, **labels) -> float:
+        return float(self._series.get(self._key(labels), 0.0))
+
+
+class Histogram(_Metric):
+    """Fixed-bucket histogram.  Internally each series is
+    ``[counts (len(buckets)+1 with the +Inf overflow slot), sum, count]``;
+    the exporters emit the Prometheus cumulative-``le`` view."""
+
+    kind = "histogram"
+
+    def __init__(self, name, help, labelnames, buckets):
+        super().__init__(name, help, labelnames)
+        b = tuple(float(x) for x in buckets)
+        if not b or list(b) != sorted(b) or len(set(b)) != len(b):
+            raise ValueError(f"{name}: buckets must be non-empty ascending, got {b}")
+        self.buckets = b
+
+    def observe(self, value: float, **labels) -> None:
+        k = self._key(labels)
+        s = self._series.get(k)
+        if s is None:
+            s = self._series[k] = [[0] * (len(self.buckets) + 1), 0.0, 0]
+        v = float(value)
+        s[0][bisect.bisect_left(self.buckets, v)] += 1
+        s[1] += v
+        s[2] += 1
+
+    def series(self, **labels):
+        """(per-bucket counts incl. +Inf slot, sum, count) for one series."""
+        s = self._series.get(self._key(labels))
+        if s is None:
+            return [0] * (len(self.buckets) + 1), 0.0, 0
+        return list(s[0]), float(s[1]), int(s[2])
+
+    def samples(self) -> list[dict]:
+        return [
+            {
+                "labels": self._labels_of(k),
+                "buckets": list(self.buckets),
+                "counts": list(s[0]),
+                "sum": float(s[1]),
+                "count": int(s[2]),
+            }
+            for k, s in sorted(self._series.items())
+        ]
+
+
+class MetricsRegistry:
+    """A namespace of metrics; get-or-create with type/label checking."""
+
+    def __init__(self):
+        self._metrics: dict[str, _Metric] = {}
+        self._lock = threading.Lock()
+
+    def _get(self, cls, name, help, labelnames, **kw) -> _Metric:
+        with self._lock:
+            m = self._metrics.get(name)
+            if m is None:
+                m = self._metrics[name] = cls(name, help, tuple(labelnames), **kw)
+            elif type(m) is not cls or m.labelnames != tuple(labelnames):
+                raise ValueError(
+                    f"metric {name!r} re-declared as {cls.kind} with labels "
+                    f"{tuple(labelnames)} (was {m.kind} / {m.labelnames})"
+                )
+            return m
+
+    def counter(self, name: str, help: str = "", labelnames=()) -> Counter:
+        return self._get(Counter, name, help, labelnames)
+
+    def gauge(self, name: str, help: str = "", labelnames=()) -> Gauge:
+        return self._get(Gauge, name, help, labelnames)
+
+    def histogram(
+        self, name: str, help: str = "", labelnames=(), buckets=LATENCY_BUCKETS_S
+    ) -> Histogram:
+        return self._get(Histogram, name, help, labelnames, buckets=buckets)
+
+    def get(self, name: str) -> _Metric | None:
+        return self._metrics.get(name)
+
+    def clear(self) -> None:
+        """Drop every metric (tests / bench isolation)."""
+        with self._lock:
+            self._metrics.clear()
+
+    # -- exporters ---------------------------------------------------------
+
+    def to_json(self) -> dict:
+        """The ``repro.obs.metrics/v1`` export (what METRICS.json holds)."""
+        return {
+            "schema": SCHEMA,
+            "metrics": [
+                m.to_json() for _, m in sorted(self._metrics.items())
+            ],
+        }
+
+    def to_prometheus(self) -> str:
+        """Prometheus text exposition format (one scrape body)."""
+        out = []
+        for name, m in sorted(self._metrics.items()):
+            if m.help:
+                out.append(f"# HELP {name} {m.help}")
+            out.append(f"# TYPE {name} {m.kind}")
+            if m.kind == "histogram":
+                for s in m.samples():
+                    base = dict(s["labels"])
+                    cum = 0
+                    for edge, c in zip(s["buckets"], s["counts"]):
+                        cum += c
+                        out.append(
+                            f"{name}_bucket{_fmt_labels({**base, 'le': _fmt_edge(edge)})} {cum}"
+                        )
+                    cum += s["counts"][-1]
+                    out.append(f"{name}_bucket{_fmt_labels({**base, 'le': '+Inf'})} {cum}")
+                    out.append(f"{name}_sum{_fmt_labels(base)} {_fmt_val(s['sum'])}")
+                    out.append(f"{name}_count{_fmt_labels(base)} {s['count']}")
+            else:
+                for s in m.samples():
+                    out.append(f"{name}{_fmt_labels(s['labels'])} {_fmt_val(s['value'])}")
+        return "\n".join(out) + "\n"
+
+
+def _escape(v: str) -> str:
+    return v.replace("\\", "\\\\").replace('"', '\\"').replace("\n", "\\n")
+
+
+def _fmt_labels(labels: dict) -> str:
+    if not labels:
+        return ""
+    body = ",".join(f'{k}="{_escape(str(v))}"' for k, v in sorted(labels.items()))
+    return "{" + body + "}"
+
+
+def _fmt_edge(edge: float) -> str:
+    return repr(edge) if edge != int(edge) else str(int(edge))
+
+
+def _fmt_val(v: float) -> str:
+    return repr(float(v)) if v != int(v) else str(int(v))
+
+
+# -- the process-global registry --------------------------------------------
+
+_REGISTRY = MetricsRegistry()
+
+
+def registry() -> MetricsRegistry:
+    """The process-global registry every subsystem records into."""
+    return _REGISTRY
+
+
+def reset() -> None:
+    """Clear the global registry's series (tests / bench isolation)."""
+    _REGISTRY.clear()
+
+
+# -- SearchStats aggregation --------------------------------------------------
+
+
+def record_search_stats(stats, *, labels: dict | None = None, reg=None) -> None:
+    """Fold one device-side ``SearchStats`` pytree into host counters.
+
+    Call ONLY at an existing sync point (after ``block_until_ready`` or an
+    ``np.asarray`` of the results): the ``np.asarray`` here then reads
+    already-transferred buffers instead of forcing a new device sync —
+    that is the whole sync-point-aggregation contract (DESIGN.md
+    §Observability).  No-ops when disabled.
+
+    The search counters share one canonical label schema —
+    ``(bucket, shard)`` — whatever subset the caller supplies; absent
+    dimensions record as ``""`` (Prometheus treats an empty label value
+    as unset).  A fixed schema is what lets the serving layer (bucket
+    labels) and the distributed layer (shard labels) fold into the same
+    series family in one process without a labelname redeclaration
+    conflict.
+    """
+    if not _ENABLED:
+        return
+    import numpy as np
+
+    r = reg or _REGISTRY
+    lnames = ("bucket", "shard")
+    given = dict(labels or {})
+    unknown = set(given) - set(lnames)
+    if unknown:
+        raise ValueError(
+            f"record_search_stats labels {sorted(unknown)} outside the "
+            f"canonical schema {lnames}"
+        )
+    lab = {k: str(given.get(k, "")) for k in lnames}
+
+    def tot(x) -> float:
+        return float(np.asarray(x).sum())
+
+    n_queries = int(np.asarray(stats.mode).size)
+    r.counter(
+        "compass_queries_total", "queries folded into the registry", lnames
+    ).inc(n_queries, **lab)
+    for metric, field, help in (
+        ("compass_dist_total", stats.n_dist, "full-precision distance computations (paper #Comp)"),
+        ("compass_cdist_total", stats.n_cdist, "centroid distance computations"),
+        ("compass_steps_total", stats.n_steps, "driver loop iterations"),
+        ("compass_bcalls_total", stats.n_bcalls, "relational (B.NEXT) injections"),
+        ("compass_clusters_ranked_total", stats.n_clusters_ranked, "clusters opened by B.NEXT"),
+        ("compass_adc_total", stats.n_adc, "quantized ADC table scores"),
+        ("compass_rerank_total", stats.n_rerank, "stage-two exact rerank rows"),
+        ("compass_pass_total", stats.n_pass, "predicate-passing live rows encountered"),
+    ):
+        r.counter(metric, help, lnames).inc(tot(field), **lab)
+    from repro.core.planner.plan import MODE_NAMES  # lazy: no import cycle
+
+    modes = np.asarray(stats.mode).ravel()
+    c = r.counter(
+        "compass_mode_total", "planner-chosen execution modes", lnames + ("mode",)
+    )
+    for mid, mname in enumerate(MODE_NAMES):
+        n = int((modes == mid).sum())
+        if n:
+            c.inc(n, mode=mname, **lab)
+
+
+# -- export validation --------------------------------------------------------
+
+
+def validate_export(payload) -> list[str]:
+    """Schema-validate a ``to_json()`` export; returns problems (empty ==
+    valid).  This is the CI gate behind METRICS.json — the checks mirror
+    the Prometheus data model: legal names, known types, finite
+    non-negative counters, ascending histogram buckets with
+    ``len(counts) == len(buckets) + 1`` and ``sum(counts) == count``."""
+    errs = []
+    if not isinstance(payload, dict):
+        return [f"top level is {type(payload).__name__}, expected object"]
+    if payload.get("schema") != SCHEMA:
+        errs.append(f"schema is {payload.get('schema')!r}, expected {SCHEMA!r}")
+    metrics = payload.get("metrics")
+    if not isinstance(metrics, list):
+        return errs + ["metrics is not a list"]
+    seen = set()
+    for i, m in enumerate(metrics):
+        if not isinstance(m, dict):
+            errs.append(f"metrics[{i}] is not an object")
+            continue
+        name = m.get("name", f"<metrics[{i}]>")
+        if not isinstance(name, str) or not _NAME_RE.match(name):
+            errs.append(f"metrics[{i}]: invalid name {name!r}")
+        if name in seen:
+            errs.append(f"{name}: duplicate metric name")
+        seen.add(name)
+        kind = m.get("type")
+        if kind not in METRIC_TYPES:
+            errs.append(f"{name}: unknown type {kind!r}")
+        labelnames = m.get("labelnames")
+        if not isinstance(labelnames, list) or any(
+            not isinstance(ln, str) or not _LABEL_RE.match(ln) for ln in labelnames
+        ):
+            errs.append(f"{name}: malformed labelnames {labelnames!r}")
+        samples = m.get("samples")
+        if not isinstance(samples, list):
+            errs.append(f"{name}: samples is not a list")
+            continue
+        for j, s in enumerate(samples):
+            if not isinstance(s, dict) or not isinstance(s.get("labels"), dict):
+                errs.append(f"{name}: sample {j} malformed")
+                continue
+            if isinstance(labelnames, list) and set(s["labels"]) != set(labelnames):
+                errs.append(f"{name}: sample {j} labels != labelnames")
+            if kind == "histogram":
+                b, c = s.get("buckets"), s.get("counts")
+                if not isinstance(b, list) or sorted(b) != b or len(set(b)) != len(b):
+                    errs.append(f"{name}: sample {j} buckets not ascending")
+                elif not isinstance(c, list) or len(c) != len(b) + 1:
+                    errs.append(
+                        f"{name}: sample {j} len(counts) != len(buckets)+1"
+                    )
+                elif any(not isinstance(x, int) or x < 0 for x in c):
+                    errs.append(f"{name}: sample {j} negative/non-int bucket count")
+                elif s.get("count") != sum(c):
+                    errs.append(f"{name}: sample {j} count != sum(counts)")
+                if not isinstance(s.get("sum"), (int, float)) or not math.isfinite(
+                    s.get("sum", math.nan)
+                ):
+                    errs.append(f"{name}: sample {j} non-finite sum")
+            else:
+                v = s.get("value")
+                if not isinstance(v, (int, float)) or not math.isfinite(v):
+                    errs.append(f"{name}: sample {j} non-finite value {v!r}")
+                elif kind == "counter" and v < 0:
+                    errs.append(f"{name}: sample {j} negative counter {v}")
+    return errs
+
+
+def validate_file(path: str) -> list[str]:
+    """``validate_export`` over a file on disk (unreadable == invalid)."""
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"unreadable/malformed JSON: {e}"]
+    return validate_export(payload)

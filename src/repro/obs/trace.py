@@ -1,0 +1,178 @@
+"""Per-query explain traces: ``compass_search(..., explain=True)``.
+
+A :class:`QueryTrace` is the host-side story of one query: what the
+planner *estimated* (selectivity, materialization budget), what it
+*chose* (mode, cost-model inputs), what actually *happened* (distance /
+ADC / rerank / cluster counters, measured selectivity), and *where* it
+ran (backend, fused/unfused kernel route, quant config, snapshot epoch).
+
+The contract that keeps explain free: everything a trace needs already
+rides in the device-side ``SearchStats`` — the traced computation is
+IDENTICAL with and without ``explain=True`` (same jitted program, same
+executable-cache key), and :func:`build_traces` merely reads the result
+arrays host-side.  ``n_pass`` / ``est_sel`` / ``run_total`` were added to
+``SearchStats`` for exactly this (engine/state.py); the kernel route is
+recomputed host-side from the same trace-time facts the backend layer
+branches on, so it names the route the compiled program actually took.
+
+Estimated vs. actual selectivity is the strategy-mistake telemetry the
+filtered-ANN systems analysis calls for (PAPERS.md): PREFILTER chosen off
+an estimate of 0.02 that measures 0.4 is a planner bug you can now see
+per query.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryTrace:
+    """The explain record for one query of a batch (all host scalars)."""
+
+    query: int  # position in the batch
+    # -- planner ----------------------------------------------------------
+    mode: str  # "prefilter" | "cooperative" | "postfilter"
+    planner: bool  # was the cost-based planner on?
+    est_selectivity: Optional[float]  # planner estimate; None when planner off
+    actual_selectivity: Optional[float]  # measured pass-fraction of scored rows
+    run_total: Optional[int]  # estimated candidate run rows (cost-model input)
+    prefilter_cap: int  # PREFILTER materialization budget (cost-model input)
+    # -- work counters (device-measured, summed over the whole search) ----
+    n_dist: int
+    n_adc: int
+    n_rerank: int
+    n_cdist: int
+    n_pass: int
+    n_steps: int
+    n_bcalls: int
+    n_clusters_ranked: int
+    efs_final: int
+    # -- route ------------------------------------------------------------
+    backend: str  # resolved backend name ("ref" | "pallas")
+    kernel_route: str  # e.g. "pallas/visit_step/interpret", "ref"
+    metric: str  # effective metric the engine ran ("cos" rewrites to "ip")
+    ef: int
+    k: int
+    quant: Optional[dict]  # QuantParams as a dict; None for exact search
+    engine_version: str
+    epoch: Optional[int]  # snapshot epoch (mutable indices); None otherwise
+
+
+def kernel_route(pm, *, quant_active: bool, metric: str) -> str:
+    """The scoring route the compiled program takes for VISIT, recomputed
+    from the same trace-time facts backend.py branches on."""
+    from repro.core.engine.backend import resolve_backend
+    from repro.kernels.interpret import default_interpret
+
+    backend = resolve_backend(pm.backend)
+    if backend.name != "pallas":
+        return "ref"
+    if metric not in ("l2", "ip"):  # the PallasBackend metric fallback
+        return f"ref(metric={metric})"
+    if quant_active:
+        kern = "pq_score"
+    elif pm.fused_visit:
+        kern = "visit_step"
+    else:
+        kern = "filter_distance"
+    mode = "interpret" if default_interpret() else "mosaic"
+    return f"pallas/{kern}/{mode}"
+
+
+def build_traces(res, pm, *, epoch: int | None = None) -> list[QueryTrace]:
+    """Materialize one :class:`QueryTrace` per batch lane from a finished
+    :class:`SearchResult`.  Reads (and therefore syncs) the stats arrays —
+    call it after the result is consumed, not on the dispatch hot path."""
+    from repro.core.engine import ENGINE_VERSION, resolve_backend
+    from repro.core.planner.plan import MODE_NAMES
+
+    pmr = pm.resolved()
+    metric = "ip" if pmr.metric == "cos" else pmr.metric
+    quant_active = pmr.quant is not None
+    route = kernel_route(pmr, quant_active=quant_active, metric=metric)
+    backend = resolve_backend(pmr.backend).name
+    quant = dataclasses.asdict(pmr.quant) if quant_active else None
+    st = {f: np.asarray(getattr(res.stats, f)) for f in res.stats._fields}
+    nq = int(st["mode"].size)
+    traces = []
+    for i in range(nq):
+        def g(field, _i=i):
+            a = st[field]
+            return a.ravel()[_i] if a.size == nq else a.ravel()[0]
+
+        n_dist, n_adc, n_rerank = int(g("n_dist")), int(g("n_adc")), int(g("n_rerank"))
+        # unique rows examined: rerank="full" rows land in BOTH n_adc
+        # (stage one) and n_dist (stage two #Comp), so subtract the
+        # double count before dividing the pass count through
+        n_seen = n_dist + n_adc
+        if quant_active and pmr.quant.rerank == "full":
+            n_seen -= n_rerank
+        est = float(g("est_sel"))
+        rt = int(g("run_total"))
+        traces.append(
+            QueryTrace(
+                query=i,
+                mode=MODE_NAMES[int(g("mode"))],
+                planner=bool(pmr.planner),
+                est_selectivity=est if est >= 0.0 else None,
+                actual_selectivity=(int(g("n_pass")) / n_seen) if n_seen > 0 else None,
+                run_total=rt if rt >= 0 else None,
+                prefilter_cap=int(pmr.prefilter_cap),
+                n_dist=n_dist,
+                n_adc=n_adc,
+                n_rerank=n_rerank,
+                n_cdist=int(g("n_cdist")),
+                n_pass=int(g("n_pass")),
+                n_steps=int(g("n_steps")),
+                n_bcalls=int(g("n_bcalls")),
+                n_clusters_ranked=int(g("n_clusters_ranked")),
+                efs_final=int(g("efs_final")),
+                backend=backend,
+                kernel_route=route,
+                metric=metric,
+                ef=int(pmr.ef),
+                k=int(pmr.k),
+                quant=quant,
+                engine_version=ENGINE_VERSION,
+                epoch=epoch,
+            )
+        )
+    return traces
+
+
+def format_trace(t: QueryTrace) -> str:
+    """One query's trace as an aligned, greppable block."""
+    def sel(v):
+        return "-" if v is None else f"{v:.4f}"
+
+    lines = [
+        f"query[{t.query}]  mode={t.mode}  backend={t.backend}  "
+        f"route={t.kernel_route}  metric={t.metric}  {t.engine_version}"
+        + (f"  epoch={t.epoch}" if t.epoch is not None else ""),
+        f"  planner={'on' if t.planner else 'off'}  "
+        f"selectivity est={sel(t.est_selectivity)} actual={sel(t.actual_selectivity)}"
+        + (
+            f"  run_total={t.run_total} prefilter_cap={t.prefilter_cap}"
+            if t.planner
+            else ""
+        ),
+        f"  work: n_dist={t.n_dist} n_adc={t.n_adc} n_rerank={t.n_rerank} "
+        f"n_cdist={t.n_cdist} n_pass={t.n_pass}",
+        f"  loop: n_steps={t.n_steps} n_bcalls={t.n_bcalls} "
+        f"n_clusters_ranked={t.n_clusters_ranked} efs_final={t.efs_final} "
+        f"ef={t.ef} k={t.k}",
+    ]
+    if t.quant is not None:
+        lines.append(f"  quant: {t.quant}")
+    return "\n".join(lines)
+
+
+def explain(traces) -> str:
+    """Pretty-print one trace or a list of traces (``repro.compass
+    .explain``).  Returns the rendering; print it or log it."""
+    if isinstance(traces, QueryTrace):
+        traces = [traces]
+    return "\n".join(format_trace(t) for t in traces)

@@ -1,0 +1,33 @@
+"""CLI gate over the metrics-export schema (the CI bench-smoke step).
+
+  python -m repro.obs.validate <METRICS.json> [...]
+
+Exit 0 iff every named file exists and passes
+:func:`repro.obs.registry.validate_export`.
+"""
+from __future__ import annotations
+
+import sys
+
+from .registry import validate_file
+
+
+def main(argv: list[str] | None = None) -> int:
+    args = sys.argv[1:] if argv is None else argv
+    if not args:
+        print("usage: python -m repro.obs.validate <METRICS.json> [...]")
+        return 2
+    bad = 0
+    for path in args:
+        errs = validate_file(path)
+        if errs:
+            bad += 1
+            for e in errs:
+                print(f"FAIL {path}: {e}")
+        else:
+            print(f"ok   {path}")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -16,7 +16,7 @@ request stream and the engine:
   padded to the fixed ``B`` with unsatisfiable-predicate fillers
   (``predicate.never_true``) whose lanes can never produce a result.
 * **Compiled-executable cache** — one AOT-compiled executable per occupied
-  ``(B, T, A, CompassParams)`` key (``compass_search.lower(...).compile()``);
+  ``(B, T, A, CompassParams)`` key (``compass_search_jit.lower(...).compile()``);
   steady-state traffic runs with a bounded, observable number of
   compilations (``stats()["compiles"]`` == occupied buckets).  For mutable
   services the snapshot shapes enter the key too — and because
@@ -38,6 +38,15 @@ searches at the fixed ``params.k`` and truncates — the response equals the
 The service is single-threaded by design (JAX dispatch is the bottleneck,
 not Python): callers ``submit`` then drive ``step()`` / ``run_until_idle``.
 A ``clock`` injection point makes deadline behaviour testable.
+
+Observability: the service is the system's natural sync point (every batch
+ends in ``block_until_ready``), so per-batch registry recording happens
+here when ``repro.obs`` is enabled — request/batch/filler counters,
+exec/wait latency histograms, and the device-side ``SearchStats`` of the
+real (non-filler) lanes, all labelled by ``bucket="B{B}xT{T}"``.  Compile
+events (both cache families) and write errors flow to the structured event
+log.  All of it is off by default and never touches the traced program —
+results are bitwise identical with obs on or off.
 """
 from __future__ import annotations
 
@@ -52,10 +61,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import predicate as P
-from repro.core.engine import CompassParams, compass_search
+from repro.core.engine import CompassParams, compass_search_jit
 from repro.core.index import CompassIndex
 from repro.core.mutable import MutableIndex, mutable_search
 from repro.core.planner import plan as plan_mod
+from repro.obs import events as obs_events
+from repro.obs import profiling as obs_prof
+from repro.obs import registry as obs_reg
 
 
 @dataclasses.dataclass
@@ -304,6 +316,12 @@ class SearchService:
                     self.n_deletes += 1
                 except KeyError:  # raced by a queued delete of the same gid
                     self.n_write_errors += 1
+                    obs_events.emit("write_error", kind_detail="delete_missing", gid=w.gid)
+                    if obs_reg.enabled():
+                        obs_reg.registry().counter(
+                            "compass_write_errors_total",
+                            "Rejected/raced write operations",
+                        ).inc()
             applied += 1
         return applied
 
@@ -353,6 +371,29 @@ class SearchService:
 
     # -- execution -----------------------------------------------------------
 
+    def _record_compile(self, cache: str, shape: tuple, wall_s: float | None) -> None:
+        """Structured-event + counter trail for executable-cache misses.
+
+        ``cache`` is "aot" (the immutable ``compass_search_jit.lower``
+        cache) or "jit" (the mutable-snapshot shape set, where compilation
+        happens inside the first traced call so no wall time is
+        attributable here).  The bench_updates steady-state-recompile
+        tripwire has a runtime twin now: ``compass_compiles_total`` should
+        stop moving once every served shape is occupied.
+        """
+        obs_events.emit(
+            "compile",
+            cache=cache,
+            shape=list(shape),
+            wall_s=None if wall_s is None else round(wall_s, 6),
+        )
+        if obs_reg.enabled():
+            obs_reg.registry().counter(
+                "compass_compiles_total",
+                "Search executable compilations",
+                labelnames=("cache",),
+            ).inc(cache=cache)
+
     def _executable(self, queries: jax.Array, pred: P.Predicate) -> Callable:
         B, T, A = pred.lo.shape
         # self.params embeds CompassParams.quant (a frozen, hashable
@@ -363,9 +404,13 @@ class SearchService:
         st = self._stats.setdefault((B, T), BucketStats())
         exe = self._executables.get(key)
         if exe is None:
-            exe = compass_search.lower(self.index, queries, pred, self.params).compile()
+            t0 = self.clock()
+            exe = compass_search_jit.lower(
+                self.index, queries, pred, self.params
+            ).compile()
             self._executables[key] = exe
             st.n_compiles += 1
+            self._record_compile("aot", (B, T, A), self.clock() - t0)
         else:
             st.n_cache_hits += 1
         return exe
@@ -400,13 +445,22 @@ class SearchService:
             else:
                 self._mutable_shapes.add(key)
                 st.n_compiles += 1
-            res = mutable_search(
-                snap.index, snap.base_gids, snap.delta, qj, pred, self.params
-            )
+                self._record_compile(
+                    "jit",
+                    (B, t_bucket, pred.lo.shape[-1],
+                     snap.index.n_records, snap.delta.cap),
+                    None,
+                )
+            with obs_prof.annotate(f"compass/serve_batch/B{B}xT{t_bucket}"):
+                res = mutable_search(
+                    snap.index, snap.base_gids, snap.delta, qj, pred, self.params
+                )
+                res.ids.block_until_ready()
         else:
             exe = self._executable(qj, pred)
-            res = exe(self.index, qj, pred)
-        res.ids.block_until_ready()
+            with obs_prof.annotate(f"compass/serve_batch/B{B}xT{t_bucket}"):
+                res = exe(self.index, qj, pred)
+                res.ids.block_until_ready()
         exec_s = self.clock() - t0
 
         st = self._stats[(B, t_bucket)]
@@ -422,6 +476,43 @@ class SearchService:
         st.n_mode_prefilter += int(np.sum(modes == plan_mod.PREFILTER))
         st.n_mode_cooperative += int(np.sum(modes == plan_mod.COOPERATIVE))
         st.n_mode_postfilter += int(np.sum(modes == plan_mod.POSTFILTER))
+
+        if obs_reg.enabled():
+            # we are already at the batch's sync point (block_until_ready
+            # above), so folding device stats into host counters adds no
+            # extra synchronization.  Filler lanes are the service's
+            # padding, not traffic: slice them off before recording, same
+            # rule as the mode counters above.
+            bname = f"B{B}xT{t_bucket}"
+            lanes = len(jobs)
+            sliced = jax.tree_util.tree_map(
+                lambda a: np.asarray(a)[:lanes], res.stats
+            )
+            obs_reg.record_search_stats(sliced, labels={"bucket": bname})
+            R = obs_reg.registry()
+            R.counter(
+                "compass_serve_requests_total", "Real requests served",
+                labelnames=("bucket",),
+            ).inc(lanes, bucket=bname)
+            R.counter(
+                "compass_serve_batches_total", "Micro-batches dispatched",
+                labelnames=("bucket",),
+            ).inc(bucket=bname)
+            if n_fill:
+                R.counter(
+                    "compass_serve_fillers_total", "Padded filler lanes dispatched",
+                    labelnames=("bucket",),
+                ).inc(n_fill, bucket=bname)
+            R.histogram(
+                "compass_serve_exec_seconds", "Micro-batch execution wall time",
+                labelnames=("bucket",), buckets=obs_reg.LATENCY_BUCKETS_S,
+            ).observe(exec_s, bucket=bname)
+            wait_h = R.histogram(
+                "compass_serve_wait_seconds", "Per-request queue wait",
+                labelnames=("bucket",), buckets=obs_reg.LATENCY_BUCKETS_S,
+            )
+            for job in jobs:
+                wait_h.observe(t0 - job.t_submit, bucket=bname)
 
         ids = np.asarray(res.ids)
         dists = np.asarray(res.dists)
@@ -505,5 +596,10 @@ class SearchService:
                 "cooperative": sum(s.n_mode_cooperative for s in self._stats.values()),
                 "postfilter": sum(s.n_mode_postfilter for s in self._stats.values()),
             },
+            # structured-event tallies (compaction / epoch_swap / compile /
+            # write_error / ...) — zeros unless obs is enabled or a JSONL
+            # sink is configured (REPRO_OBS_EVENTS)
+            "obs_events": dict(obs_events.EVENTS.counts()),
+            "obs_enabled": obs_reg.enabled(),
             "buckets": buckets,
         }

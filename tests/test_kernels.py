@@ -1,5 +1,7 @@
 """Per-kernel validation: shape/dtype sweeps, interpret-mode Pallas vs the
 pure-jnp oracle in ref.py, plus hypothesis property tests."""
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -305,8 +307,11 @@ def test_autotune_measures_each_shape_once(monkeypatch):
     calls = []
 
     def fake_measure(cand):
+        # _measure wall-clocks the call, so the cost difference must be
+        # real time, not a return value — equal-cost fakes made the
+        # winner timing noise (flaky under a loaded suite)
         calls.append(dict(cand))
-        return 1.0 if cand["rb"] == 4 else 0.5
+        time.sleep(0.02 if cand["rb"] == 4 else 0.001)
 
     cands = [{"rb": 4}, {"rb": 2}]
     got1 = autotune.choose("visit_step", ("shape_a",), cands, fake_measure)
