@@ -17,7 +17,13 @@ measures the claim instead of asserting it:
 
 ``--selfcheck`` is the blocking CI gate: enabled QPS must be within 5% of
 disabled QPS, results must stay bitwise identical across arms, and the
-registry export must pass schema validation.  Exit 1 on any failure.
+registry export must pass schema validation.  Since PR 9 the service
+runs with the full continuous-monitoring stack attached — a Monitor
+ticking a timeseries snapshot, SLO burn-rate evaluation and every health
+watchdog on each scheduling round — so the 5% budget and the bitwise
+parity probe now cover the whole layer, and the selfcheck additionally
+requires a populated snapshot ring, a health report, and a schema-valid
+``repro.obs.timeseries/v1`` export.  Exit 1 on any failure.
 """
 from __future__ import annotations
 
@@ -49,6 +55,12 @@ def _build_service(n: int, d: int, n_attrs: int, seed: int = 0):
     index = build_index(x, at, BuildConfig(m=8, nlist=16, kmeans_iters=4))
     pm = CompassParams(k=10, ef=32, planner=True, backend=C.BACKEND)
     svc = SearchService(index, pm, batch_size=8, max_wait_s=0.0)
+    # the continuous-monitoring layer rides inside the measured arms:
+    # interval_s=0 makes every step() snapshot the registry and run SLO +
+    # watchdog evaluation (the most expensive cadence), all inside the 5%
+    # budget.  Ticks are no-ops in the obs-off arm (Monitor.tick gates on
+    # registry.enabled()), so the off arm stays the clean baseline.
+    svc.enable_monitoring(interval_s=0.0)
     queries = rng.normal(size=(N_REQUESTS, d)).astype(np.float32)
     preds = [
         Pred.range(i % n_attrs, 0.1, 0.7).tensor(n_attrs) for i in range(N_REQUESTS)
@@ -68,7 +80,11 @@ def _trial(svc, queries, preds) -> tuple[float, list]:
 
 
 def measure(n: int = 2000, d: int = 16, n_attrs: int = 4, out=print):
-    """Interleaved obs-off/obs-on trials over one warmed service."""
+    """Interleaved obs-off/obs-on trials over one warmed service.
+
+    Returns ``(summary, service)`` — the service rides along so the
+    selfcheck can interrogate its Monitor (snapshot ring, health report,
+    timeseries export) after the measured arms finish."""
     svc, queries, preds = _build_service(n, d, n_attrs)
     prev = obs_reg.set_enabled(False)
     try:
@@ -107,12 +123,13 @@ def measure(n: int = 2000, d: int = 16, n_attrs: int = 4, out=print):
         "qps_explain_arm": N_REQUESTS / wall_explain,
         "overhead_frac": overhead,
         "bitwise_identical": not mismatch,
+        "monitor_snapshots": len(svc.monitor.ring),
         "service_stats": svc.stats(),
-    }
+    }, svc
 
 
 def run(dataset: str = "SYN-EASY", out=print):
-    summary = measure(out=out)
+    summary, _svc = measure(out=out)
     rows = [
         {"arm": "off", "qps": summary["qps_off"], "n_requests": N_REQUESTS},
         {"arm": "on", "qps": summary["qps_on"], "n_requests": N_REQUESTS},
@@ -123,10 +140,15 @@ def run(dataset: str = "SYN-EASY", out=print):
 
 
 def selfcheck(out=print) -> int:
-    """Blocking CI gate: obs-on serving QPS within 5% of obs-off, bitwise
-    result parity across arms, and a schema-valid registry export."""
+    """Blocking CI gate: obs-on serving QPS within 5% of obs-off (with
+    timeseries snapshotting, SLO evaluation and health watchdogs ticking
+    in the on arm), bitwise result parity across arms, a populated
+    snapshot ring + health report, and schema-valid metrics AND
+    timeseries exports."""
+    from repro.obs import timeseries as obs_ts
+
     failures = []
-    summary = measure(n=800, out=out)
+    summary, svc = measure(n=800, out=out)
     if not summary["bitwise_identical"]:
         failures.append("obs on/off results differ bitwise")
     if summary["qps_on"] < (1.0 - TOLERANCE) * summary["qps_off"]:
@@ -141,14 +163,31 @@ def selfcheck(out=print) -> int:
         failures.append("registry export empty after an obs-on run")
     errs = obs_reg.validate_export(payload)
     failures.extend(f"metrics export: {e}" for e in errs)
+    # the continuous-monitoring layer must have actually run in the on
+    # arms: snapshots in the ring, a health report, a valid ts export
+    if len(svc.monitor.ring) < 2:
+        failures.append(
+            f"monitor ring holds {len(svc.monitor.ring)} snapshots (< 2) "
+            "after the obs-on arms"
+        )
+    if svc.monitor.last_report is None:
+        failures.append("monitor produced no health report")
+    ts_payload = svc.monitor.ring.to_json()
+    if not ts_payload["series"]:
+        failures.append("timeseries export has no derived series")
+    ts_errs = obs_ts.validate_timeseries_export(ts_payload)
+    failures.extend(f"timeseries export: {e}" for e in ts_errs)
     if failures:
         for f in failures:
             out(f"FAIL bench_obs selfcheck: {f}")
         return 1
+    health = svc.monitor.last_report
     out(
         f"ok bench_obs selfcheck: overhead {summary['overhead_frac'] * 100:+.1f}% "
         f"(tolerance {TOLERANCE * 100:.0f}%), bitwise parity, "
-        f"{len(payload['metrics'])} metrics schema-valid"
+        f"{len(payload['metrics'])} metrics schema-valid, "
+        f"{len(svc.monitor.ring)} snapshots / {len(ts_payload['series'])} "
+        f"derived series, health={health.status}"
     )
     return 0
 

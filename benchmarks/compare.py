@@ -2,6 +2,7 @@
 regressions — the advisory trajectory gate behind bench-smoke.
 
   python -m benchmarks.compare BASE_DIR NEW_DIR [--threshold 0.2]
+  python -m benchmarks.compare BASE_DIR --history BENCH_HISTORY.jsonl
 
 Every ``qps`` figure is extracted from both artifacts by a recursive walk
 (rows are bench-specific shapes: tuples of RunResults, planner sweep
@@ -64,13 +65,11 @@ def extract_qps(payload: dict) -> dict[str, float]:
     return out
 
 
-def compare_file(base_path: str, new_path: str, threshold: float) -> list[str]:
-    """Returns a list of regression messages (empty == ok)."""
-    with open(base_path) as f:
-        base = extract_qps(json.load(f))
-    with open(new_path) as f:
-        new = extract_qps(json.load(f))
-    name = os.path.basename(new_path)
+def diff_labels(
+    name: str, base: dict[str, float], new: dict[str, float], threshold: float
+) -> list[str]:
+    """Diff two {label: qps} maps; returns regression messages (empty ==
+    ok).  Shared by the directory diff and the history-row diff."""
     regressions = []
     for label in sorted(base):
         if label not in new:
@@ -89,15 +88,81 @@ def compare_file(base_path: str, new_path: str, threshold: float) -> list[str]:
     return regressions
 
 
+def compare_file(base_path: str, new_path: str, threshold: float) -> list[str]:
+    """Returns a list of regression messages (empty == ok)."""
+    with open(base_path) as f:
+        base = extract_qps(json.load(f))
+    with open(new_path) as f:
+        new = extract_qps(json.load(f))
+    return diff_labels(os.path.basename(new_path), base, new, threshold)
+
+
+def compare_history(base_dir: str, history_path: str, threshold: float) -> int:
+    """Diff the *latest* BENCH_HISTORY.jsonl row against the committed
+    baselines: each bench's qps label map (extracted at run time by
+    ``run.py --history``) against ``extract_qps`` of the matching
+    ``BENCH_*.json`` under ``base_dir``."""
+    try:
+        with open(history_path) as f:
+            lines = [ln for ln in f.read().splitlines() if ln.strip()]
+    except OSError as e:
+        print(f"FAIL: unreadable history {history_path}: {e}")
+        return 1
+    if not lines:
+        print(f"FAIL: {history_path} holds no rows")
+        return 1
+    latest = json.loads(lines[-1])
+    meta = latest.get("meta", {})
+    print(
+        f"history row {len(lines) - 1}: {meta.get('engine_version', '?')} "
+        f"backend={meta.get('backend', '?')} n={meta.get('n', '?')}"
+    )
+    all_regressions, compared = [], 0
+    for bench, info in sorted(latest.get("benches", {}).items()):
+        fname = f"BENCH_{bench.removeprefix('bench_')}.json"
+        base_path = os.path.join(base_dir, fname)
+        if not os.path.exists(base_path):
+            print(f"note: {fname} has no committed baseline")
+            continue
+        with open(base_path) as f:
+            base = extract_qps(json.load(f))
+        compared += 1
+        all_regressions.extend(
+            diff_labels(fname, base, dict(info.get("qps", {})), threshold)
+        )
+    if not compared:
+        print(f"FAIL: no bench in the latest row has a baseline under {base_dir}")
+        return 1
+    if all_regressions:
+        print(f"\n{len(all_regressions)} QPS regression(s) > {threshold:.0%}:")
+        for r in all_regressions:
+            print(f"  {r}")
+        return 1
+    print(f"\nlatest history row within {threshold:.0%} on {compared} bench(es)")
+    return 0
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("base_dir", help="baseline BENCH_*.json directory")
-    ap.add_argument("new_dir", help="candidate BENCH_*.json directory")
+    ap.add_argument(
+        "new_dir", nargs="?", default=None,
+        help="candidate BENCH_*.json directory (omit with --history)",
+    )
+    ap.add_argument(
+        "--history", default=None, metavar="JSONL",
+        help="diff the latest BENCH_HISTORY.jsonl row against base_dir "
+        "instead of a candidate directory",
+    )
     ap.add_argument(
         "--threshold", type=float, default=0.2,
         help="max tolerated fractional QPS drop (default 0.2 == 20%%)",
     )
     args = ap.parse_args(argv)
+    if (args.new_dir is None) == (args.history is None):
+        ap.error("provide exactly one of new_dir or --history")
+    if args.history is not None:
+        return compare_history(args.base_dir, args.history, args.threshold)
     base_files = {
         os.path.basename(p): p
         for p in glob.glob(os.path.join(args.base_dir, "BENCH_*.json"))

@@ -18,6 +18,69 @@ import sys
 REQUIRED = ("bench", "meta", "wall_s", "rows")
 META_REQUIRED = ("engine_version", "backend", "platform", "jax_version", "n")
 
+#: the perf-trajectory row schema appended by ``run.py`` to
+#: BENCH_HISTORY.jsonl — one row per bench run, carrying the same
+#: provenance block as the per-run artifacts plus per-bench wall time and
+#: the extract_qps label map the baseline diff consumes
+HISTORY_SCHEMA = "repro.bench.history/v1"
+
+
+def validate_history_row(row) -> list[str]:
+    """Schema-check one BENCH_HISTORY.jsonl row (empty == valid)."""
+    if not isinstance(row, dict):
+        return [f"history row is {type(row).__name__}, expected object"]
+    errs = []
+    if row.get("schema") != HISTORY_SCHEMA:
+        errs.append(f"schema is {row.get('schema')!r}, expected {HISTORY_SCHEMA!r}")
+    if not isinstance(row.get("ts"), (int, float)):
+        errs.append("ts is not numeric")
+    meta = row.get("meta")
+    if not isinstance(meta, dict):
+        errs.append("meta is not an object")
+    else:
+        errs.extend(f"meta missing {k!r}" for k in META_REQUIRED if k not in meta)
+    benches = row.get("benches")
+    if not isinstance(benches, dict) or not benches:
+        errs.append("benches is not a non-empty object")
+        return errs
+    for name, info in benches.items():
+        if not isinstance(info, dict):
+            errs.append(f"benches[{name}] is not an object")
+            continue
+        if not isinstance(info.get("wall_s"), (int, float)):
+            errs.append(f"benches[{name}].wall_s is not numeric")
+        qps = info.get("qps")
+        if not isinstance(qps, dict) or any(
+            not isinstance(k, str)
+            or not isinstance(v, (int, float))
+            or isinstance(v, bool)
+            for k, v in qps.items()
+        ):
+            errs.append(f"benches[{name}].qps is not a str->number map")
+    return errs
+
+
+def validate_history_file(path: str) -> list[str]:
+    """Every row of a BENCH_HISTORY.jsonl must parse and pass the row
+    schema; an empty file is invalid (the trajectory must be non-empty
+    once the file exists)."""
+    try:
+        with open(path) as f:
+            lines = [ln for ln in f.read().splitlines() if ln.strip()]
+    except OSError as e:
+        return [f"unreadable: {e}"]
+    if not lines:
+        return ["history file exists but holds no rows"]
+    errs = []
+    for i, ln in enumerate(lines):
+        try:
+            row = json.loads(ln)
+        except json.JSONDecodeError as e:
+            errs.append(f"row {i}: malformed JSON: {e}")
+            continue
+        errs.extend(f"row {i}: {e}" for e in validate_history_row(row))
+    return errs
+
 # Per-bench row schemas: every row of the named bench must be an object
 # carrying these keys (benches whose rows are positional tuples are not
 # listed — their shape is covered by the envelope check alone).
@@ -97,21 +160,34 @@ def main(argv: list[str] | None = None) -> int:
                 print(f"FAIL {os.path.basename(path)}: {e}")
         else:
             print(f"ok   {os.path.basename(path)}")
-    # the metrics-registry export rides next to the bench artifacts and has
-    # its own schema (repro.obs.metrics/v1) — validate it when present
-    mpath = os.path.join(bench_dir, "METRICS.json")
+    # the observability exports ride next to the bench artifacts with
+    # their own schemas (repro.obs.metrics/v1, repro.obs.timeseries/v1) —
+    # validate them when present, schema-dispatched
     n_extra = 0
-    if os.path.exists(mpath):
-        from repro.obs import registry as obs_reg
+    from repro.obs.validate import validate_any_file
 
-        n_extra = 1
-        errs = obs_reg.validate_file(mpath)
+    for extra in ("METRICS.json", "TIMESERIES.json"):
+        epath = os.path.join(bench_dir, extra)
+        if not os.path.exists(epath):
+            continue
+        n_extra += 1
+        errs = validate_any_file(epath)
         if errs:
             bad += 1
             for e in errs:
-                print(f"FAIL METRICS.json: {e}")
+                print(f"FAIL {extra}: {e}")
         else:
-            print("ok   METRICS.json")
+            print(f"ok   {extra}")
+    hpath = os.path.join(bench_dir, "BENCH_HISTORY.jsonl")
+    if os.path.exists(hpath):
+        n_extra += 1
+        errs = validate_history_file(hpath)
+        if errs:
+            bad += 1
+            for e in errs:
+                print(f"FAIL BENCH_HISTORY.jsonl: {e}")
+        else:
+            print("ok   BENCH_HISTORY.jsonl")
     print(f"{len(paths) + n_extra - bad}/{len(paths) + n_extra} artifacts valid")
     return 1 if bad else 0
 

@@ -35,8 +35,13 @@ Layer map (each name re-exported from its implementation module):
 * **observability** — ``search(..., explain=True)`` returns ``(result,
   traces)`` where each :class:`QueryTrace` carries the planner's estimate
   vs the measured selectivity, the chosen mode, work counters and the
-  kernel route; ``explain`` renders them.  The metrics registry, event
-  log and profiling hooks live in :mod:`repro.obs`.
+  kernel route; ``DistributedMutableIndex.search(..., explain=True)``
+  returns :class:`ShardedQueryTrace` records adding the per-shard
+  breakdown; ``explain`` renders either.  The metrics registry, event
+  log, profiling hooks and the continuous-monitoring layer (timeseries
+  ring, SLO burn rates, health watchdogs, ``python -m repro.obs.report``)
+  live in :mod:`repro.obs`; ``SearchService.health()`` surfaces the
+  watchdog verdicts for a live service.
 
 Engine internals (queues, iterators, backends) intentionally stay out:
 import them from :mod:`repro.core.engine`.  The legacy
@@ -63,7 +68,7 @@ from repro.core.mutable import MutableIndex, Snapshot
 from repro.core.predicate import Pred, Predicate, stack_predicates
 from repro.core.quant import QuantConfig, QuantParams
 from repro.core.quant.encode import quantize_index
-from repro.obs import QueryTrace, explain
+from repro.obs import QueryTrace, ShardedQueryTrace, explain
 from repro.serving.search_service import SearchService, ServiceResult
 
 # the canonical short names; the long forms stay available for callers
@@ -88,6 +93,7 @@ __all__ = [
     "SearchStats",
     "ServiceResult",
     "ShapePolicy",
+    "ShardedQueryTrace",
     "Snapshot",
     "build",
     "build_index",

@@ -384,7 +384,9 @@ class DistributedMutableIndex:
         for sh in self.shards:
             sh.compact()
 
-    def search(self, queries, pred: PR.Predicate, pm: CompassParams):
+    def search(
+        self, queries, pred: PR.Predicate, pm: CompassParams, *, explain: bool = False
+    ):
         """Scatter-gather over all shards; global top-k merge on gids.
 
         Stats compose per :func:`aggregate_shard_stats`: work counters
@@ -396,6 +398,13 @@ class DistributedMutableIndex:
         reported from shard 0, with the full per-shard breakdown flowing
         into the metrics registry under a ``shard`` label when obs is
         enabled.
+
+        ``explain=True`` additionally returns one
+        :class:`~repro.obs.trace.ShardedQueryTrace` per query — the
+        aggregate view built from the merged stats (same FIRST/SUM/MAX
+        semantics) plus per-shard traces stamped with each shard's id and
+        epoch.  Same contract as the single-index paths: the traced
+        programs are identical either way.
         """
         parts = [sh.search(queries, pred, pm) for sh in self.shards]
         all_d = jnp.concatenate([p.dists for p in parts], axis=1)
@@ -409,7 +418,24 @@ class DistributedMutableIndex:
                 obs_reg.record_search_stats(p.stats, labels={"shard": str(s)})
         from .engine.state import SearchResult
 
-        return SearchResult(jnp.take_along_axis(all_g, sel, axis=1), -neg, stats)
+        res = SearchResult(jnp.take_along_axis(all_g, sel, axis=1), -neg, stats)
+        if not explain:
+            return res
+        from repro.obs.trace import ShardedQueryTrace, build_traces
+
+        agg = build_traces(res, pm)
+        per_shard = [
+            build_traces(p, pm, epoch=self.shards[s].epoch, shard=s)
+            for s, p in enumerate(parts)
+        ]
+        traces = [
+            ShardedQueryTrace(
+                aggregate=agg[i],
+                shards=tuple(per_shard[s][i] for s in range(len(parts))),
+            )
+            for i in range(len(agg))
+        ]
+        return res, traces
 
 
 # ---------------------------------------------------------------------------

@@ -345,6 +345,7 @@ class MutableIndex:
             self._gid2slot[g] = slot
             self._dcount += 1
         self._snap = None
+        self._record_debt()
 
     def delete(self, gids) -> None:
         """Delete records by global id; KeyError on unknown/already-deleted."""
@@ -359,6 +360,32 @@ class MutableIndex:
                 raise KeyError(f"unknown or already-deleted id {g}")
             self._live[pos] = False
         self._snap = None
+        self._record_debt()
+
+    def _record_debt(self) -> None:
+        """Compaction-debt gauges for the health watchdogs (obs/health.py):
+        delta occupancy vs capacity and the tombstone fraction of real base
+        rows.  Canonical ``("shard",)`` labels — ``""`` for a standalone
+        index — so standalone and sharded indices fold into one series
+        family regardless of ``obs_labels``.  Host-side dict writes; no-op
+        when observability is off."""
+        if not obs_registry.enabled():
+            return
+        r = obs_registry.registry()
+        lab = {"shard": str(self.obs_labels.get("shard", ""))}
+        lnames = ("shard",)
+        r.gauge(
+            "compass_delta_fill", "occupied delta-segment slots", lnames
+        ).set(self._dcount, **lab)
+        r.gauge(
+            "compass_delta_cap", "delta-segment capacity", lnames
+        ).set(self.delta_cap, **lab)
+        live = self._live[: self._n_base_real]
+        r.gauge(
+            "compass_tombstone_fraction",
+            "dead fraction of real (non-padding) base rows",
+            lnames,
+        ).set(1.0 - float(live.sum()) / max(1, live.size), **lab)
 
     # -- reads -------------------------------------------------------------
 
@@ -541,3 +568,11 @@ class MutableIndex:
                     "decode MSE of the folded table vs frozen codebooks",
                     lnames,
                 ).set(self.quant_drift_log[-1], **lab)
+                # same labelnames as the drift gauge so the quant-staleness
+                # watchdog (obs/health.py) can pair the two series by key
+                r.gauge(
+                    "compass_quant_train_mse",
+                    "decode MSE baseline at codebook training time",
+                    lnames,
+                ).set(float(index.qvecs.train_mse), **lab)
+        self._record_debt()

@@ -19,12 +19,24 @@ bitwise-invariant to search results:
 * **events** — a structured lifecycle log (compactions, epoch swaps,
   delta overflows, write errors, codebook retrains, executable compiles)
   with an optional JSONL sink (``REPRO_OBS_EVENTS=<path>``).
+
+PR 9 adds the *continuous* layer on top — point-in-time becomes
+over-time:
+
+* **timeseries** — a bounded ring of registry snapshots with windowed
+  delta/rate/quantile reads and the ``repro.obs.timeseries/v1`` export.
+* **slo** — declarative objectives evaluated as multi-window burn rates
+  (``SloSpec``, ``evaluate_slos``) publishing ``compass_slo_*`` gauges.
+* **health** — drift/debt/skew watchdogs and the :class:`Monitor` that
+  ``SearchService.step()`` ticks; ``python -m repro.obs.report`` renders
+  any of it as a text dashboard.
 """
-from . import events, profiling, registry, trace  # noqa: F401 — keep the
+from . import events, health, profiling, registry, slo, timeseries, trace  # noqa: F401 — keep the
 # submodules addressable as attributes: the convenience re-exports below
 # must NOT shadow them (``repro.obs.registry`` stays the module; the
 # accessor for the global MetricsRegistry is :func:`get_registry`)
 from .events import EVENTS, EventLog, emit
+from .health import DEFAULT_WATCHDOGS, HealthCheck, HealthReport, Monitor
 from .profiling import (
     KERNELS,
     annotate,
@@ -47,36 +59,59 @@ from .registry import (
     validate_file,
 )
 from .registry import registry as get_registry
-from .trace import QueryTrace, build_traces, explain, format_trace
+from .slo import SloSpec, SloWindow, default_slos, evaluate_slos
+from .timeseries import (
+    Snapshotter,
+    TimeSeriesRing,
+    quantile_from_counts,
+    validate_timeseries_export,
+)
+from .trace import QueryTrace, ShardedQueryTrace, build_traces, explain, format_trace
 
 __all__ = [
     "Counter",
+    "DEFAULT_WATCHDOGS",
     "EVENTS",
     "EventLog",
     "Gauge",
+    "HealthCheck",
+    "HealthReport",
     "Histogram",
     "KERNELS",
     "LATENCY_BUCKETS_S",
     "MetricsRegistry",
+    "Monitor",
     "QueryTrace",
     "RECALL_BUCKETS",
     "SCHEMA",
+    "ShardedQueryTrace",
+    "SloSpec",
+    "SloWindow",
+    "Snapshotter",
+    "TimeSeriesRing",
     "annotate",
     "build_traces",
+    "default_slos",
     "emit",
     "enabled",
+    "evaluate_slos",
     "events",
     "explain",
     "format_trace",
     "get_registry",
+    "health",
     "kernel_scope",
     "profile_capture",
     "profiling",
+    "quantile_from_counts",
     "record_search_stats",
     "registry",
     "reset",
     "set_enabled",
+    "slo",
+    "timeseries",
     "trace",
     "validate_export",
     "validate_file",
+    "validate_timeseries_export",
 ]

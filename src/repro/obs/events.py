@@ -10,6 +10,8 @@ points (never from traced code):
   * ``codebook_retrain`` — an explicit compact(retrain_codebooks=True)
   * ``write_error``      — a raced delete counted as a no-op (serving)
   * ``compile``          — an executable-cache miss (serving AOT / jit)
+  * ``slo_burn``         — an SloSpec's burn rate crossed every window
+  * ``health``           — a watchdog check changed status (obs/health.py)
 
 Events land in a bounded in-memory ring (``tail()`` for tests and
 ``SearchService.stats()``) and optionally stream to a JSONL sink — one
@@ -39,6 +41,8 @@ EVENT_KINDS = (
     "codebook_retrain",
     "write_error",
     "compile",
+    "slo_burn",
+    "health",
 )
 
 

@@ -1,0 +1,384 @@
+"""Health watchdogs + the Monitor that drives continuous observability
+(DESIGN.md §Observability, continuous monitoring).
+
+A *watchdog* is a pure function ``(reg, ring, now) -> HealthCheck`` that
+turns signals the system already records into an OK/WARN/CRIT verdict
+with a concrete remediation — the operational question ("should I
+rebuild attr stats? compact? retrain codebooks?") answered from data,
+not vibes:
+
+* **planner_calibration** — rolling mean |est_sel − n_pass/n_seen| from
+  the windowed ``compass_sel_abs_err_sum`` / ``compass_sel_obs_total``
+  deltas.  Compass's mode choice (and the cooperative strategies the
+  systems-analysis paper stresses) is only as good as the selectivity
+  estimate; sustained misestimation means the attribute distribution
+  moved under the stats → rebuild ``astats``.
+* **quant_staleness** — latest ``compass_quant_drift_mse`` over its
+  training-time baseline ``compass_quant_train_mse`` (paired by series
+  labels).  Drift ratio growing means the folded table no longer looks
+  like the corpus the codebooks were trained on →
+  ``compact(retrain_codebooks=True)``.
+* **delta_occupancy / tombstone_debt** — compaction debt from the
+  ``compass_delta_fill``/``_cap``/``compass_tombstone_fraction`` gauges:
+  a near-full delta is one burst from a forced fold; a tombstone-heavy
+  base routes through dead rows → ``compact()``.
+* **recompile_churn** — compiles still accruing *after* warmup
+  (``compass_compiles_total`` moved in the window and was already
+  nonzero at its start).  Steady-state recompiles are the failure mode
+  ShapePolicy exists to prevent.
+* **shard_skew** — max/mean of windowed per-shard ``compass_dist_total``
+  / ``compass_steps_total`` deltas.  Fan-out latency is the *slowest*
+  shard; skew means one shard does multiples of the average work
+  (straggler, hot shard, bad placement).
+
+:class:`Monitor` owns the snapshot cadence: ``tick()`` (called from
+``SearchService.step()``) snapshots at most once per ``interval_s`` and
+then evaluates SLOs + watchdogs, publishing ``compass_health_status``
+gauges and emitting a ``health`` event on every status transition.
+Everything is host-side dict work gated on ``registry.enabled()`` — the
+disabled cost at the serving loop is one attribute check.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+from . import events as E
+from . import registry as R
+from .slo import default_slos, evaluate_slos
+from .timeseries import Snapshotter, TimeSeriesRing, _delta_scalar
+
+STATUS_LEVELS = {"ok": 0, "warn": 1, "crit": 2}
+
+# watchdog thresholds (documented in DESIGN.md §Observability; tests
+# reference these constants rather than re-hardcoding)
+PLANNER_DRIFT_WARN = 0.15  # mean |est_sel - actual| over the window
+PLANNER_DRIFT_CRIT = 0.30
+QUANT_DRIFT_WARN = 1.5  # drift_mse / train_mse ratio
+QUANT_DRIFT_CRIT = 3.0
+DELTA_FILL_WARN = 0.80  # occupied fraction of delta_cap
+DELTA_FILL_CRIT = 0.95
+TOMBSTONE_WARN = 0.25  # dead fraction of real base rows
+TOMBSTONE_CRIT = 0.50
+SKEW_WARN = 2.0  # max/mean windowed per-shard work
+SKEW_CRIT = 4.0
+#: default lookback for windowed watchdogs — long enough that a ring at
+#: any realistic cadence resolves it as "the whole ring" in tests
+WATCH_WINDOW_S = 600.0
+
+
+@dataclass(frozen=True)
+class HealthCheck:
+    """One watchdog verdict."""
+
+    name: str
+    status: str  # "ok" | "warn" | "crit"
+    value: Optional[float] = None  # the signal that drove the verdict
+    detail: str = ""
+    remediation: str = ""  # what an operator should do about it
+
+    def to_dict(self) -> dict:
+        return {
+            "name": self.name,
+            "status": self.status,
+            "value": self.value,
+            "detail": self.detail,
+            "remediation": self.remediation,
+        }
+
+
+@dataclass(frozen=True)
+class HealthReport:
+    """All checks from one evaluation; ``status`` is the worst of them."""
+
+    ts: float
+    status: str
+    checks: tuple
+
+    def to_dict(self) -> dict:
+        return {
+            "ts": self.ts,
+            "status": self.status,
+            "checks": [c.to_dict() for c in self.checks],
+        }
+
+    def check(self, name: str) -> Optional[HealthCheck]:
+        for c in self.checks:
+            if c.name == name:
+                return c
+        return None
+
+
+def _grade(value: float, warn: float, crit: float) -> str:
+    if value >= crit:
+        return "crit"
+    if value >= warn:
+        return "warn"
+    return "ok"
+
+
+def planner_calibration(
+    reg: R.MetricsRegistry, ring: TimeSeriesRing, now: Optional[float] = None
+) -> HealthCheck:
+    err = ring.delta("compass_sel_abs_err_sum", window_s=WATCH_WINDOW_S, now=now)
+    n = ring.delta("compass_sel_obs_total", window_s=WATCH_WINDOW_S, now=now)
+    if err is None or not n:
+        return HealthCheck("planner_calibration", "ok", detail="no observations in window")
+    mae = err / n
+    return HealthCheck(
+        "planner_calibration",
+        _grade(mae, PLANNER_DRIFT_WARN, PLANNER_DRIFT_CRIT),
+        value=mae,
+        detail=f"mean |est_sel - actual| = {mae:.3f} over {int(n)} queries",
+        remediation="rebuild attr stats (core.planner.stats.build_attr_stats)",
+    )
+
+
+def quant_staleness(
+    reg: R.MetricsRegistry, ring: TimeSeriesRing, now: Optional[float] = None
+) -> HealthCheck:
+    drift = reg.get("compass_quant_drift_mse")
+    train = reg.get("compass_quant_train_mse")
+    if drift is None or train is None:
+        return HealthCheck("quant_staleness", "ok", detail="no quantized tier folded yet")
+    base = {
+        frozenset(s["labels"].items()): s["value"] for s in train.samples()
+    }
+    worst = None
+    for s in drift.samples():
+        t = base.get(frozenset(s["labels"].items()))
+        if t and t > 0:
+            ratio = s["value"] / t
+            if worst is None or ratio > worst:
+                worst = ratio
+    if worst is None:
+        return HealthCheck("quant_staleness", "ok", detail="no train-MSE baseline")
+    return HealthCheck(
+        "quant_staleness",
+        _grade(worst, QUANT_DRIFT_WARN, QUANT_DRIFT_CRIT),
+        value=worst,
+        detail=f"worst drift_mse/train_mse = {worst:.2f}x",
+        remediation="compact(retrain_codebooks=True)",
+    )
+
+
+def delta_occupancy(
+    reg: R.MetricsRegistry, ring: TimeSeriesRing, now: Optional[float] = None
+) -> HealthCheck:
+    fill = reg.get("compass_delta_fill")
+    cap = reg.get("compass_delta_cap")
+    if fill is None or cap is None:
+        return HealthCheck("delta_occupancy", "ok", detail="no mutable index")
+    caps = {frozenset(s["labels"].items()): s["value"] for s in cap.samples()}
+    worst = 0.0
+    for s in fill.samples():
+        c = caps.get(frozenset(s["labels"].items()))
+        if c:
+            worst = max(worst, s["value"] / c)
+    return HealthCheck(
+        "delta_occupancy",
+        _grade(worst, DELTA_FILL_WARN, DELTA_FILL_CRIT),
+        value=worst,
+        detail=f"fullest delta segment at {worst:.0%} of capacity",
+        remediation="compact() before the next write burst forces a fold",
+    )
+
+
+def tombstone_debt(
+    reg: R.MetricsRegistry, ring: TimeSeriesRing, now: Optional[float] = None
+) -> HealthCheck:
+    g = reg.get("compass_tombstone_fraction")
+    if g is None:
+        return HealthCheck("tombstone_debt", "ok", detail="no mutable index")
+    worst = max((s["value"] for s in g.samples()), default=0.0)
+    return HealthCheck(
+        "tombstone_debt",
+        _grade(worst, TOMBSTONE_WARN, TOMBSTONE_CRIT),
+        value=worst,
+        detail=f"worst base is {worst:.0%} tombstoned",
+        remediation="compact() to fold dead rows out of the routing graph",
+    )
+
+
+def recompile_churn(
+    reg: R.MetricsRegistry, ring: TimeSeriesRing, now: Optional[float] = None
+) -> HealthCheck:
+    pair = ring.window(WATCH_WINDOW_S, now)
+    if pair is None:
+        return HealthCheck("recompile_churn", "ok", detail="not enough snapshots")
+    old, new = pair
+    name = "compass_compiles_total"
+    warm = sum(old.counters.get(name, {}).values())
+    total_new = new.counters.get(name, {})
+    fresh = sum(
+        _delta_scalar(v, old.counters.get(name, {}).get(k))
+        for k, v in total_new.items()
+    )
+    # compiles during warmup (counter was zero at window start) are the
+    # expected cost of occupying shape buckets; compiles after that are
+    # churn — exactly what ShapePolicy's bucketing is supposed to prevent
+    if warm <= 0 or fresh <= 0:
+        return HealthCheck(
+            "recompile_churn", "ok", value=fresh,
+            detail="no steady-state recompiles in window",
+        )
+    return HealthCheck(
+        "recompile_churn",
+        "warn",
+        value=fresh,
+        detail=f"{int(fresh)} recompiles after warmup in the window",
+        remediation="check ShapePolicy row bucketing / delta_cap stability",
+    )
+
+
+def shard_skew(
+    reg: R.MetricsRegistry, ring: TimeSeriesRing, now: Optional[float] = None
+) -> HealthCheck:
+    pair = ring.window(WATCH_WINDOW_S, now)
+    if pair is None:
+        return HealthCheck("shard_skew", "ok", detail="not enough snapshots")
+    old, new = pair
+    worst, worst_detail = 0.0, ""
+    for name in ("compass_dist_total", "compass_steps_total"):
+        fam = new.counters.get(name)
+        lnames = new.labelnames.get(name, ())
+        if fam is None or "shard" not in lnames:
+            continue
+        si = lnames.index("shard")
+        olds = old.counters.get(name, {})
+        per_shard: dict[str, float] = {}
+        for k, v in fam.items():
+            if k[si] == "":  # unsharded series — not fan-out traffic
+                continue
+            per_shard[k[si]] = per_shard.get(k[si], 0.0) + _delta_scalar(v, olds.get(k))
+        if len(per_shard) < 2:
+            continue
+        mean = sum(per_shard.values()) / len(per_shard)
+        if mean <= 0:
+            continue
+        hot = max(per_shard, key=per_shard.get)
+        skew = per_shard[hot] / mean
+        if skew > worst:
+            worst = skew
+            worst_detail = f"shard {hot} at {skew:.1f}x mean {name.split('_')[1]} work"
+    if worst == 0.0:
+        return HealthCheck("shard_skew", "ok", detail="fewer than 2 active shards")
+    return HealthCheck(
+        "shard_skew",
+        _grade(worst, SKEW_WARN, SKEW_CRIT),
+        value=worst,
+        detail=worst_detail,
+        remediation="rebalance shard assignment / investigate straggler",
+    )
+
+
+DEFAULT_WATCHDOGS: tuple[Callable, ...] = (
+    planner_calibration,
+    quant_staleness,
+    delta_occupancy,
+    tombstone_debt,
+    recompile_churn,
+    shard_skew,
+)
+
+
+class Monitor:
+    """Cadenced snapshots + SLO evaluation + watchdogs, in one object.
+
+    ``tick()`` is the serving-loop entry point: cheap no-op when
+    observability is disabled, snapshot-and-evaluate at most once per
+    ``interval_s`` otherwise.  ``evaluate()`` forces an immediate report
+    (``SearchService.health()``).
+    """
+
+    def __init__(
+        self,
+        reg: Optional[R.MetricsRegistry] = None,
+        *,
+        capacity: int = 128,
+        interval_s: float = 1.0,
+        clock: Callable[[], float] = time.monotonic,
+        slos=None,
+        watchdogs=None,
+    ):
+        self.snapshotter = Snapshotter(
+            reg, capacity=capacity, interval_s=interval_s, clock=clock
+        )
+        self.slos = tuple(default_slos() if slos is None else slos)
+        self.watchdogs = tuple(DEFAULT_WATCHDOGS if watchdogs is None else watchdogs)
+        self._last_status: dict[str, str] = {}
+        self.last_report: Optional[HealthReport] = None
+
+    @property
+    def ring(self) -> TimeSeriesRing:
+        return self.snapshotter.ring
+
+    @property
+    def reg(self) -> R.MetricsRegistry:
+        return self.snapshotter.reg
+
+    def tick(self, now: Optional[float] = None) -> Optional[HealthReport]:
+        """Snapshot + evaluate if the cadence says so; None otherwise."""
+        if not R.enabled():
+            return None
+        now = self.snapshotter.clock() if now is None else now
+        if not self.snapshotter.maybe_snapshot(now):
+            return None
+        return self.evaluate(now, snapshot=False)
+
+    def evaluate(
+        self, now: Optional[float] = None, *, snapshot: bool = True
+    ) -> HealthReport:
+        """Run SLOs + watchdogs against the current ring and registry.
+
+        Publishes ``compass_health_status{check=...}`` gauges (0/1/2) and
+        emits a ``health`` event for every check whose status changed
+        since the previous evaluation.
+        """
+        now = self.snapshotter.clock() if now is None else now
+        if snapshot and len(self.ring) == 0:
+            self.ring.snapshot(self.reg, now)
+        checks: list[HealthCheck] = []
+        slo_results = evaluate_slos(self.slos, self.ring, now=now, reg=self.reg)
+        for name, res in slo_results.items():
+            burns = {
+                f"{w:g}s": round(b, 3)
+                for w, b in res["burns"].items()
+                if b is not None
+            }
+            checks.append(
+                HealthCheck(
+                    name=f"slo:{name}",
+                    status="crit" if res["breaching"] else "ok",
+                    value=max(burns.values(), default=None),
+                    detail=f"burn rates {burns}" if burns else "no observations",
+                    remediation="shed load / raise capacity until burn < 1",
+                )
+            )
+        for wd in self.watchdogs:
+            checks.append(wd(self.reg, self.ring, now))
+        worst = max(checks, key=lambda c: STATUS_LEVELS[c.status], default=None)
+        report = HealthReport(
+            ts=now,
+            status=worst.status if worst else "ok",
+            checks=tuple(checks),
+        )
+        g = self.reg.gauge(
+            "compass_health_status", "0=ok 1=warn 2=crit per check", ("check",)
+        )
+        for c in checks:
+            g.set(STATUS_LEVELS[c.status], check=c.name)
+            prev = self._last_status.get(c.name)
+            if prev is not None and prev != c.status:
+                E.emit(
+                    "health",
+                    check=c.name,
+                    status=c.status,
+                    prev=prev,
+                    value=c.value,
+                    detail=c.detail,
+                )
+            self._last_status[c.name] = c.status
+        self.last_report = report
+        return report

@@ -211,6 +211,39 @@ class MetricsRegistry:
     def get(self, name: str) -> _Metric | None:
         return self._metrics.get(name)
 
+    def all_metrics(self) -> list[_Metric]:
+        """Stable-ordered view of every metric family (the timeseries ring
+        walks this when snapshotting; copied under the lock so concurrent
+        creates are safe)."""
+        with self._lock:
+            return [m for _, m in sorted(self._metrics.items())]
+
+    @classmethod
+    def from_json(cls, payload) -> "MetricsRegistry":
+        """Reconstruct a registry from a ``to_json()`` export — how the
+        report CLI renders an on-disk METRICS.json as if it were live.
+        Rejects payloads that fail :func:`validate_export`."""
+        errs = validate_export(payload)
+        if errs:
+            raise ValueError(f"invalid metrics export: {errs[0]}")
+        reg = cls()
+        for m in payload["metrics"]:
+            lnames = tuple(m["labelnames"])
+            samples = m["samples"]
+            if m["type"] == "histogram":
+                buckets = tuple(samples[0]["buckets"]) if samples else LATENCY_BUCKETS_S
+                met = reg.histogram(m["name"], m.get("help", ""), lnames, buckets=buckets)
+                for s in samples:
+                    k = tuple(str(s["labels"][ln]) for ln in lnames)
+                    met._series[k] = [list(s["counts"]), float(s["sum"]), int(s["count"])]
+            else:
+                mk = reg.counter if m["type"] == "counter" else reg.gauge
+                met = mk(m["name"], m.get("help", ""), lnames)
+                for s in samples:
+                    k = tuple(str(s["labels"][ln]) for ln in lnames)
+                    met._series[k] = float(s["value"])
+        return reg
+
     def clear(self) -> None:
         """Drop every metric (tests / bench isolation)."""
         with self._lock:
@@ -340,6 +373,37 @@ def record_search_stats(stats, *, labels: dict | None = None, reg=None) -> None:
         ("compass_pass_total", stats.n_pass, "predicate-passing live rows encountered"),
     ):
         r.counter(metric, help, lnames).inc(tot(field), **lab)
+    # Planner-calibration drift: per-query |est_sel - n_pass/n_seen|
+    # accumulated as (sum, count) counters so windowed deltas recover the
+    # rolling mean absolute error (obs/health.py's planner watchdog).
+    # n_seen counts candidate rows scored (full-precision + ADC); with
+    # quantized full rerank the reranked rows are scored twice — a small
+    # downward bias on `actual`, acceptable against the coarse WARN/CRIT
+    # thresholds.  Queries with no estimate (est_sel < 0) or no seen rows
+    # contribute nothing.
+    def per_q(x):
+        a = np.asarray(x, dtype=np.float64).ravel()
+        if a.size == n_queries:
+            return a
+        return np.full(n_queries, float(a[0]) if a.size else 0.0)
+
+    est = per_q(stats.est_sel)
+    n_seen = per_q(stats.n_dist) + per_q(stats.n_adc)
+    obs_mask = (est >= 0.0) & (n_seen > 0)
+    if obs_mask.any():
+        actual = np.clip(per_q(stats.n_pass)[obs_mask] / n_seen[obs_mask], 0.0, 1.0)
+        err = np.abs(np.clip(est[obs_mask], 0.0, 1.0) - actual)
+        r.counter(
+            "compass_sel_abs_err_sum",
+            "summed |estimated - observed| selectivity per query",
+            lnames,
+        ).inc(float(err.sum()), **lab)
+        r.counter(
+            "compass_sel_obs_total",
+            "queries contributing a selectivity calibration observation",
+            lnames,
+        ).inc(int(obs_mask.sum()), **lab)
+
     from repro.core.planner.plan import MODE_NAMES  # lazy: no import cycle
 
     modes = np.asarray(stats.mode).ravel()

@@ -1,0 +1,183 @@
+"""Text dashboard over the observability surfaces.
+
+  python -m repro.obs.report                      # the live global registry
+  python -m repro.obs.report --from METRICS.json  # an exported registry
+  python -m repro.obs.report --from TIMESERIES.json
+
+One renderer, three sources: a live :class:`MetricsRegistry`, a
+``repro.obs.metrics/v1`` export (reconstructed via
+``MetricsRegistry.from_json`` so file and live render identically), or a
+``repro.obs.timeseries/v1`` export (derived series with min/last/max and
+a unicode sparkline).  Histogram rows show count/mean plus p50/p99 read
+from the cumulative bucket counts — the same
+:func:`~repro.obs.timeseries.quantile_from_counts` math the monitoring
+layer uses, so the dashboard and the watchdogs can never disagree about
+what a quantile is.
+
+Everything here is read-only formatting; it is safe to run against a
+registry being written by a live service.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Optional
+
+from . import registry as R
+from . import timeseries as TS
+
+_SPARK = "▁▂▃▄▅▆▇█"
+
+
+def _fmt(v: Optional[float]) -> str:
+    if v is None:
+        return "-"
+    if v == int(v) and abs(v) < 1e15:
+        return str(int(v))
+    return f"{v:.4g}"
+
+
+def _labstr(labels: dict) -> str:
+    if not any(v for v in labels.values()):
+        return ""
+    body = ",".join(f"{k}={v}" for k, v in sorted(labels.items()) if v)
+    return "{" + body + "}"
+
+
+def sparkline(values: list[float], width: int = 24) -> str:
+    """Downsampled unicode sparkline (empty string for < 2 points)."""
+    if len(values) < 2:
+        return ""
+    if len(values) > width:
+        step = len(values) / width
+        values = [values[int(i * step)] for i in range(width)]
+    lo, hi = min(values), max(values)
+    if hi <= lo:
+        return _SPARK[0] * len(values)
+    return "".join(
+        _SPARK[int((v - lo) / (hi - lo) * (len(_SPARK) - 1))] for v in values
+    )
+
+
+def render_registry(reg: R.MetricsRegistry, *, limit: int = 0) -> str:
+    """The live/METRICS.json view: one section per metric kind."""
+    counters, gauges, hists = [], [], []
+    for m in reg.all_metrics():
+        for s in m.samples():
+            row = f"  {m.name}{_labstr(s['labels'])}"
+            if m.kind == "histogram":
+                p50 = TS.quantile_from_counts(s["buckets"], s["counts"], 0.5)
+                p99 = TS.quantile_from_counts(s["buckets"], s["counts"], 0.99)
+                mean = s["sum"] / s["count"] if s["count"] else None
+                hists.append(
+                    f"{row}  count={s['count']} mean={_fmt(mean)} "
+                    f"p50={_fmt(p50)} p99={_fmt(p99)}"
+                )
+            elif m.kind == "counter":
+                counters.append((s["value"], f"{row}  {_fmt(s['value'])}"))
+            else:
+                gauges.append(f"{row}  {_fmt(s['value'])}")
+    counters.sort(key=lambda t: -t[0])
+    rows = [r for _, r in counters]
+    if limit:
+        rows = rows[:limit]
+    out = []
+    for title, body in (
+        ("counters", rows),
+        ("gauges", gauges if not limit else gauges[:limit]),
+        ("histograms", hists if not limit else hists[:limit]),
+    ):
+        if body:
+            out.append(f"== {title} ==")
+            out.extend(body)
+    return "\n".join(out) if out else "(registry is empty)"
+
+
+def render_timeseries(payload: dict, *, limit: int = 0) -> str:
+    """The TIMESERIES.json view: derived series with range + sparkline."""
+    errs = TS.validate_timeseries_export(payload)
+    if errs:
+        raise ValueError(f"invalid timeseries export: {errs[0]}")
+    span = None
+    if payload.get("t_first") is not None and payload.get("t_last") is not None:
+        span = payload["t_last"] - payload["t_first"]
+    head = (
+        f"== timeseries: {payload['n_snapshots']} snapshots"
+        + (f" over {span:.1f}s" if span is not None else "")
+        + f" (capacity {payload['capacity']}) =="
+    )
+    rows = []
+    for s in payload["series"]:
+        vals = [p[1] for p in s["points"]]
+        rows.append(
+            f"  {s['name']}{_labstr(s['labels'])}  "
+            f"min={_fmt(min(vals))} last={_fmt(vals[-1])} max={_fmt(max(vals))}  "
+            f"{sparkline(vals)}"
+        )
+    if limit:
+        rows = rows[:limit]
+    if not rows:
+        rows = ["  (no derived series — need at least two snapshots)"]
+    return "\n".join([head] + rows)
+
+
+def render_health(report) -> str:
+    """A :class:`~repro.obs.health.HealthReport` as aligned check rows."""
+    icon = {"ok": "·", "warn": "!", "crit": "✗"}
+    lines = [f"== health: {report.status.upper()} =="]
+    for c in report.checks:
+        line = f"  [{icon.get(c.status, '?')}] {c.name:<24} {c.status:<4}"
+        if c.value is not None:
+            line += f" {_fmt(c.value)}"
+        if c.detail:
+            line += f"  {c.detail}"
+        if c.status != "ok" and c.remediation:
+            line += f"  → {c.remediation}"
+        lines.append(line)
+    return "\n".join(lines)
+
+
+def render_file(path: str, *, limit: int = 0) -> str:
+    with open(path) as f:
+        payload = json.load(f)
+    if isinstance(payload, dict) and payload.get("schema") == TS.SCHEMA:
+        return render_timeseries(payload, limit=limit)
+    return render_registry(R.MetricsRegistry.from_json(payload), limit=limit)
+
+
+def main(argv: list[str] | None = None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.obs.report",
+        description="render a text dashboard from the live registry or an export",
+    )
+    p.add_argument(
+        "--from",
+        dest="paths",
+        action="append",
+        default=[],
+        metavar="PATH",
+        help="METRICS.json or TIMESERIES.json export (repeatable); "
+        "omit to render the live global registry",
+    )
+    p.add_argument(
+        "--limit", type=int, default=0, help="cap rows per section (0 = all)"
+    )
+    args = p.parse_args(argv)
+    try:
+        if not args.paths:
+            print(render_registry(R.registry(), limit=args.limit))
+        else:
+            for i, path in enumerate(args.paths):
+                if i:
+                    print()
+                print(f"# {path}")
+                print(render_file(path, limit=args.limit))
+    except (OSError, json.JSONDecodeError, ValueError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,202 @@
+"""Declarative SLOs with multi-window burn-rate evaluation
+(DESIGN.md §Observability, continuous monitoring).
+
+An :class:`SloSpec` says "over the long run, fraction ``objective`` of
+observations must be good"; *burn rate* is how fast the error budget is
+being spent right now::
+
+    burn = bad_fraction / (1 - objective)
+
+burn == 1 means spending budget exactly as fast as the objective allows;
+burn == 10 exhausts a 30-day budget in 3 days.  Following the SRE
+multi-window pattern, a spec alerts only when **every** configured
+window is burning past its threshold — the long window proves the
+problem is material, the short window proves it is *still happening*
+(no alert for an incident that already ended).  Windows without data
+(no observations in the delta) abstain rather than veto, so a burst
+followed by silence still alerts on the windows that saw it.
+
+Three objective kinds map onto what the registry actually holds:
+
+* ``latency``  — good = histogram observation ≤ ``threshold``; the
+  threshold must be (or is snapped to) a declared bucket edge, since
+  good/bad classification comes from bucket-delta counts.
+* ``recall``   — good = observation in a bucket whose edge ≥
+  ``threshold`` (recall histograms are cumulative-``le`` like any other;
+  an observation in the ``le=0.95`` bucket means recall ∈ (0.9, 0.95],
+  counted good for a 0.9 threshold — a documented half-bucket optimism).
+* ``ratio``    — bad = ``delta(metric)``, total = ``delta(total_metric)``
+  over plain counters (e.g. write errors per request).
+
+:func:`evaluate_slos` reads windows from a :class:`TimeSeriesRing`,
+sets ``compass_slo_burn_rate{slo,window}`` / ``compass_slo_breach{slo}``
+gauges, and emits an ``slo_burn`` event on each breach — all host-side,
+nothing unless observability is enabled and something ticks the ring.
+"""
+from __future__ import annotations
+
+import bisect
+from dataclasses import dataclass, field
+from typing import Optional
+
+from . import events as E
+from . import registry as R
+from .timeseries import TimeSeriesRing
+
+SLO_KINDS = ("latency", "recall", "ratio")
+
+#: default burn thresholds, SRE-workbook shaped for a snapshot-cadence
+#: ring: (window seconds, max burn rate) — the short window is the
+#: "still happening" check, the long window the "material" check.
+DEFAULT_WINDOWS = ((60.0, 14.4), (300.0, 6.0))
+
+
+@dataclass(frozen=True)
+class SloWindow:
+    window_s: float
+    max_burn: float
+
+
+@dataclass(frozen=True)
+class SloSpec:
+    """One objective over one metric family.
+
+    ``objective`` is the long-run good fraction (0.999 = three nines);
+    ``threshold`` classifies histogram observations (latency/recall
+    kinds); ``total_metric`` names the denominator counter (ratio kind).
+    ``labels`` optionally restricts evaluation to matching series.
+    """
+
+    name: str
+    kind: str
+    objective: float
+    metric: str
+    threshold: Optional[float] = None
+    total_metric: Optional[str] = None
+    labels: Optional[dict] = None
+    windows: tuple = field(
+        default_factory=lambda: tuple(SloWindow(w, b) for w, b in DEFAULT_WINDOWS)
+    )
+
+    def __post_init__(self):
+        if self.kind not in SLO_KINDS:
+            raise ValueError(f"{self.name}: unknown SLO kind {self.kind!r}")
+        if not 0.0 < self.objective < 1.0:
+            raise ValueError(f"{self.name}: objective must be in (0, 1)")
+        if self.kind in ("latency", "recall") and self.threshold is None:
+            raise ValueError(f"{self.name}: {self.kind} SLO needs a threshold")
+        if self.kind == "ratio" and not self.total_metric:
+            raise ValueError(f"{self.name}: ratio SLO needs total_metric")
+        if not self.windows:
+            raise ValueError(f"{self.name}: at least one window required")
+
+    def bad_fraction(
+        self, ring: TimeSeriesRing, window_s: float, now: Optional[float] = None
+    ) -> Optional[float]:
+        """Fraction of windowed observations that violate the objective;
+        None when the window holds no observations (abstain)."""
+        if self.kind == "ratio":
+            bad = ring.delta(self.metric, window_s=window_s, now=now, labels=self.labels)
+            total = ring.delta(
+                self.total_metric, window_s=window_s, now=now, labels=self.labels
+            )
+            if bad is None or not total:
+                return None
+            return min(1.0, bad / total)
+        hw = ring.hist_window(
+            self.metric, window_s=window_s, now=now, labels=self.labels
+        )
+        if hw is None:
+            return None
+        buckets, counts, _, total = hw
+        if total <= 0:
+            return None
+        # threshold -> bucket boundary: good counts are the buckets at or
+        # below the edge (latency) / at or above it (recall)
+        cut = bisect.bisect_left(buckets, float(self.threshold))
+        if self.kind == "latency":
+            good = sum(counts[: cut + 1])
+        else:
+            good = sum(counts[cut:-1]) + counts[-1]
+        return max(0.0, 1.0 - good / total)
+
+    def burn_rates(
+        self, ring: TimeSeriesRing, now: Optional[float] = None
+    ) -> dict[float, Optional[float]]:
+        """{window_s: burn rate or None-abstain} for every window."""
+        budget = 1.0 - self.objective
+        out = {}
+        for w in self.windows:
+            bf = self.bad_fraction(ring, w.window_s, now)
+            out[w.window_s] = None if bf is None else bf / budget
+        return out
+
+    def evaluate(
+        self, ring: TimeSeriesRing, now: Optional[float] = None
+    ) -> tuple[bool, dict[float, Optional[float]]]:
+        """(breaching?, per-window burns).  Breaching when every window
+        *with data* exceeds its max_burn — and at least one has data."""
+        burns = self.burn_rates(ring, now)
+        informed = [
+            (w, burns[w.window_s]) for w in self.windows if burns[w.window_s] is not None
+        ]
+        breaching = bool(informed) and all(b > w.max_burn for w, b in informed)
+        return breaching, burns
+
+
+def default_slos() -> tuple[SloSpec, ...]:
+    """The serving-layer objectives the Monitor evaluates out of the box:
+    p-latency on batch execution (250ms — a declared LATENCY_BUCKETS_S
+    edge) and write-error availability against request volume."""
+    return (
+        SloSpec(
+            name="serve_latency",
+            kind="latency",
+            objective=0.99,
+            metric="compass_serve_exec_seconds",
+            threshold=0.25,
+        ),
+        SloSpec(
+            name="write_availability",
+            kind="ratio",
+            objective=0.999,
+            metric="compass_write_errors_total",
+            total_metric="compass_serve_requests_total",
+        ),
+    )
+
+
+def evaluate_slos(
+    specs,
+    ring: TimeSeriesRing,
+    *,
+    now: Optional[float] = None,
+    reg: Optional[R.MetricsRegistry] = None,
+) -> dict[str, dict]:
+    """Evaluate every spec; publish ``compass_slo_burn_rate{slo,window}``
+    and ``compass_slo_breach{slo}`` gauges and emit one ``slo_burn``
+    event per breaching spec.  Returns {name: {breaching, burns}}."""
+    r = reg or R.registry()
+    g_burn = r.gauge(
+        "compass_slo_burn_rate", "error-budget burn rate per window", ("slo", "window")
+    )
+    g_breach = r.gauge(
+        "compass_slo_breach", "1 when all informed windows burn past max", ("slo",)
+    )
+    out: dict[str, dict] = {}
+    for spec in specs:
+        breaching, burns = spec.evaluate(ring, now)
+        for w_s, b in burns.items():
+            if b is not None:
+                g_burn.set(b, slo=spec.name, window=f"{w_s:g}s")
+        g_breach.set(1.0 if breaching else 0.0, slo=spec.name)
+        if breaching:
+            E.emit(
+                "slo_burn",
+                slo=spec.name,
+                slo_kind=spec.kind,
+                objective=spec.objective,
+                burns={f"{w:g}s": b for w, b in burns.items() if b is not None},
+            )
+        out[spec.name] = {"breaching": breaching, "burns": burns}
+    return out

@@ -1,0 +1,407 @@
+"""Time-series monitoring: a fixed-size ring of registry snapshots with
+delta-derived series (DESIGN.md §Observability, continuous monitoring).
+
+PR 8's registry answers "how much since process start"; this module
+answers "how much *lately*, and which way is it trending" — the form
+every continuous consumer (SLO burn rates in slo.py, health watchdogs in
+health.py, admission control and shard pruning on the ROADMAP) actually
+needs.  The design is deliberately Prometheus-shaped:
+
+* **Snapshots, not streams.**  ``TimeSeriesRing.snapshot`` copies the
+  registry's current series values (host dicts — no device access, no
+  sync) into a bounded ``deque``.  Everything derived — windowed rates,
+  bucket-delta quantiles — is computed lazily from snapshot *pairs*, so
+  the steady-state cost of the ring is one dict walk per snapshot and
+  zero per recorded metric.
+* **Counter-reset semantics.**  A counter (or histogram bucket) whose
+  value went *down* between snapshots was reset (``registry.reset()``,
+  tests, bench isolation); the delta is then the new value, exactly like
+  Prometheus ``rate()``.  A series absent from the older snapshot was
+  born in the window and contributes its full value.  Deltas are never
+  negative.
+* **Quantiles from bucket deltas.**  ``quantile_from_counts`` linearly
+  interpolates inside the first bucket whose cumulative *windowed* count
+  reaches the rank (Prometheus ``histogram_quantile``); the +Inf
+  overflow slot clamps to the highest finite edge.  p50/p99 over a
+  window therefore reflect only the observations *in* that window, not
+  the process lifetime.
+
+``to_json()`` emits the ``repro.obs.timeseries/v1`` schema — one point
+series per (metric, label-set, derivation) — validated by
+:func:`validate_timeseries_export` and the CI step
+``python -m repro.obs.validate`` (which dispatches on the ``schema``
+field), landing as TIMESERIES.json next to METRICS.json in bench runs.
+
+Timestamps come from the injected clock (``time.monotonic`` by default;
+tests pass a fake).  Nothing here runs unless something ticks a
+snapshot, so the off-by-default contract of repro.obs is unchanged.
+"""
+from __future__ import annotations
+
+import bisect
+import math
+import time
+from collections import deque
+from typing import Callable, Iterable, Optional
+
+from . import registry as R
+
+SCHEMA = "repro.obs.timeseries/v1"
+
+#: derivations the exporter emits per metric kind
+_DERIVS = ("rate", "value", "p50", "p99")
+
+
+def quantile_from_counts(buckets, counts, q: float) -> Optional[float]:
+    """Prometheus-style quantile over per-bucket counts (len(buckets)+1,
+    +Inf overflow last).  Linear interpolation within the winning bucket
+    (lower edge 0 for the first); the overflow slot clamps to the highest
+    finite edge.  None when the counts are empty."""
+    total = sum(counts)
+    if total <= 0:
+        return None
+    rank = q * total
+    cum = 0.0
+    for i, c in enumerate(counts[:-1]):
+        prev = cum
+        cum += c
+        if cum >= rank and c > 0:
+            lo = buckets[i - 1] if i > 0 else 0.0
+            hi = buckets[i]
+            return lo + (hi - lo) * (rank - prev) / c
+    return float(buckets[-1])
+
+
+def _delta_scalar(new: float, old: Optional[float]) -> float:
+    """Counter delta with reset semantics: missing-before or decreased
+    means the series was (re)born in the window — delta is the new value."""
+    if old is None or new < old:
+        return float(new)
+    return float(new - old)
+
+
+def _delta_counts(new: list, old: Optional[list]) -> list:
+    if old is None or len(old) != len(new) or any(n < o for n, o in zip(new, old)):
+        return [int(c) for c in new]
+    return [int(n - o) for n, o in zip(new, old)]
+
+
+class Snapshot:
+    """One point-in-time copy of a registry's series values."""
+
+    __slots__ = ("ts", "counters", "gauges", "hists", "labelnames", "buckets")
+
+    def __init__(self, ts: float):
+        self.ts = float(ts)
+        self.counters: dict[str, dict[tuple, float]] = {}
+        self.gauges: dict[str, dict[tuple, float]] = {}
+        self.hists: dict[str, dict[tuple, tuple[list, float, int]]] = {}
+        self.labelnames: dict[str, tuple[str, ...]] = {}
+        self.buckets: dict[str, tuple[float, ...]] = {}
+
+    @classmethod
+    def of(cls, reg: R.MetricsRegistry, ts: float) -> "Snapshot":
+        snap = cls(ts)
+        for m in reg.all_metrics():
+            snap.labelnames[m.name] = m.labelnames
+            if m.kind == "counter":
+                snap.counters[m.name] = {k: float(v) for k, v in m._series.items()}
+            elif m.kind == "gauge":
+                snap.gauges[m.name] = {k: float(v) for k, v in m._series.items()}
+            elif m.kind == "histogram":
+                snap.buckets[m.name] = m.buckets
+                snap.hists[m.name] = {
+                    k: (list(s[0]), float(s[1]), int(s[2]))
+                    for k, s in m._series.items()
+                }
+        return snap
+
+
+def _match(key: tuple, lnames: tuple, labels: Optional[dict]) -> bool:
+    """Does a series key satisfy a partial label filter?  None matches
+    everything (aggregate across the family)."""
+    if not labels:
+        return True
+    got = dict(zip(lnames, key))
+    return all(got.get(k) == str(v) for k, v in labels.items())
+
+
+class TimeSeriesRing:
+    """Bounded ring of :class:`Snapshot`\\ s + the delta-derived reads."""
+
+    def __init__(self, capacity: int = 128):
+        if capacity < 2:
+            raise ValueError(f"capacity must be >= 2, got {capacity}")
+        self.capacity = int(capacity)
+        self._snaps: deque[Snapshot] = deque(maxlen=self.capacity)
+
+    def __len__(self) -> int:
+        return len(self._snaps)
+
+    def snapshot(self, reg: Optional[R.MetricsRegistry] = None, ts: Optional[float] = None) -> Snapshot:
+        snap = Snapshot.of(reg or R.registry(), time.monotonic() if ts is None else ts)
+        self._snaps.append(snap)
+        return snap
+
+    def clear(self) -> None:
+        self._snaps.clear()
+
+    @property
+    def t_first(self) -> Optional[float]:
+        return self._snaps[0].ts if self._snaps else None
+
+    @property
+    def t_last(self) -> Optional[float]:
+        return self._snaps[-1].ts if self._snaps else None
+
+    def latest(self) -> Optional[Snapshot]:
+        return self._snaps[-1] if self._snaps else None
+
+    def window(self, window_s: float, now: Optional[float] = None) -> Optional[tuple[Snapshot, Snapshot]]:
+        """(older, newer) snapshot pair spanning ~``window_s`` back from
+        ``now``.  The older end is the newest snapshot at or before
+        ``now - window_s`` — or the oldest held, when the ring does not
+        reach that far (partial window; ``rate`` divides by the actual
+        span).  None with fewer than two snapshots."""
+        if len(self._snaps) < 2:
+            return None
+        newest = self._snaps[-1]
+        now = newest.ts if now is None else now
+        cutoff = now - float(window_s)
+        older = self._snaps[0]
+        for s in self._snaps:
+            if s.ts <= cutoff:
+                older = s
+            else:
+                break
+        if older.ts >= newest.ts:
+            return None
+        return older, newest
+
+    # -- delta-derived reads -----------------------------------------------
+
+    def delta(
+        self, name: str, *, window_s: float, now: Optional[float] = None,
+        labels: Optional[dict] = None,
+    ) -> Optional[float]:
+        """Windowed counter increase summed over matching series (reset-
+        aware).  None without a usable window or when the metric never
+        appeared."""
+        pair = self.window(window_s, now)
+        if pair is None:
+            return None
+        old, new = pair
+        series = new.counters.get(name)
+        if series is None:
+            return None
+        lnames = new.labelnames.get(name, ())
+        olds = old.counters.get(name, {})
+        return sum(
+            _delta_scalar(v, olds.get(k))
+            for k, v in series.items()
+            if _match(k, lnames, labels)
+        )
+
+    def rate(
+        self, name: str, *, window_s: float, now: Optional[float] = None,
+        labels: Optional[dict] = None,
+    ) -> Optional[float]:
+        """Windowed per-second rate (delta over the pair's actual span)."""
+        pair = self.window(window_s, now)
+        if pair is None:
+            return None
+        d = self.delta(name, window_s=window_s, now=now, labels=labels)
+        if d is None:
+            return None
+        span = pair[1].ts - pair[0].ts
+        return d / span if span > 0 else None
+
+    def hist_window(
+        self, name: str, *, window_s: float, now: Optional[float] = None,
+        labels: Optional[dict] = None,
+    ) -> Optional[tuple[tuple[float, ...], list, float, int]]:
+        """(buckets, windowed counts, windowed sum, windowed count) for a
+        histogram family, summed over matching series."""
+        pair = self.window(window_s, now)
+        if pair is None:
+            return None
+        old, new = pair
+        series = new.hists.get(name)
+        if series is None:
+            return None
+        buckets = new.buckets[name]
+        lnames = new.labelnames.get(name, ())
+        olds = old.hists.get(name, {})
+        counts = [0] * (len(buckets) + 1)
+        total_sum, total_n = 0.0, 0
+        for k, (c, s, n) in series.items():
+            if not _match(k, lnames, labels):
+                continue
+            oc = olds.get(k)
+            dc = _delta_counts(c, oc[0] if oc else None)
+            counts = [a + b for a, b in zip(counts, dc)]
+            total_sum += _delta_scalar(s, oc[1] if oc else None)
+            total_n += int(_delta_scalar(n, oc[2] if oc else None))
+        return buckets, counts, total_sum, total_n
+
+    def quantile(
+        self, name: str, q: float, *, window_s: float,
+        now: Optional[float] = None, labels: Optional[dict] = None,
+    ) -> Optional[float]:
+        """Windowed quantile from histogram bucket deltas."""
+        hw = self.hist_window(name, window_s=window_s, now=now, labels=labels)
+        if hw is None:
+            return None
+        buckets, counts, _, _ = hw
+        return quantile_from_counts(buckets, counts, q)
+
+    # -- export -------------------------------------------------------------
+
+    def to_json(self) -> dict:
+        """The ``repro.obs.timeseries/v1`` export: per-(metric, labels)
+        derived point series over every adjacent snapshot pair — counter
+        ``:rate`` points, gauge ``:value`` points, histogram ``:p50`` /
+        ``:p99`` points.  Empty-but-valid with fewer than two snapshots."""
+        series: dict[tuple[str, tuple], list] = {}
+        lnames_of: dict[str, tuple] = {}
+
+        def add(name: str, key: tuple, t: float, v: float) -> None:
+            series.setdefault((name, key), []).append([t, v])
+
+        snaps = list(self._snaps)
+        for old, new in zip(snaps, snaps[1:]):
+            span = new.ts - old.ts
+            for name, fam in new.counters.items():
+                lnames_of[name + ":rate"] = new.labelnames.get(name, ())
+                for k, v in fam.items():
+                    d = _delta_scalar(v, old.counters.get(name, {}).get(k))
+                    if span > 0:
+                        add(name + ":rate", k, new.ts, d / span)
+            for name, fam in new.gauges.items():
+                lnames_of[name + ":value"] = new.labelnames.get(name, ())
+                for k, v in fam.items():
+                    add(name + ":value", k, new.ts, v)
+            for name, fam in new.hists.items():
+                buckets = new.buckets[name]
+                for suffix in (":p50", ":p99"):
+                    lnames_of[name + suffix] = new.labelnames.get(name, ())
+                olds = old.hists.get(name, {})
+                for k, (c, _, _) in fam.items():
+                    oc = olds.get(k)
+                    dc = _delta_counts(c, oc[0] if oc else None)
+                    for suffix, q in ((":p50", 0.5), (":p99", 0.99)):
+                        qv = quantile_from_counts(buckets, dc, q)
+                        if qv is not None:
+                            add(name + suffix, k, new.ts, qv)
+        return {
+            "schema": SCHEMA,
+            "capacity": self.capacity,
+            "n_snapshots": len(self._snaps),
+            "t_first": self.t_first,
+            "t_last": self.t_last,
+            "series": [
+                {
+                    "name": name,
+                    "labels": dict(zip(lnames_of.get(name, ()), key)),
+                    "points": pts,
+                }
+                for (name, key), pts in sorted(series.items())
+            ],
+        }
+
+
+class Snapshotter:
+    """Cadenced snapshots: ``maybe_snapshot`` ticks the ring at most once
+    per ``interval_s`` (0 = every call).  The serving layer calls this at
+    its existing scheduling-round boundary — never from traced code."""
+
+    def __init__(
+        self,
+        reg: Optional[R.MetricsRegistry] = None,
+        *,
+        capacity: int = 128,
+        interval_s: float = 1.0,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        self._reg = reg
+        self.interval_s = float(interval_s)
+        self.clock = clock
+        self.ring = TimeSeriesRing(capacity)
+        self._t_prev: Optional[float] = None
+
+    @property
+    def reg(self) -> R.MetricsRegistry:
+        return self._reg if self._reg is not None else R.registry()
+
+    def maybe_snapshot(self, now: Optional[float] = None) -> bool:
+        now = self.clock() if now is None else now
+        if self._t_prev is not None and now - self._t_prev < self.interval_s:
+            return False
+        self.ring.snapshot(self.reg, now)
+        self._t_prev = now
+        return True
+
+
+# -- export validation --------------------------------------------------------
+
+_DERIV_SUFFIXES = tuple(f":{d}" for d in _DERIVS)
+
+
+def validate_timeseries_export(payload) -> list[str]:
+    """Schema-validate a :meth:`TimeSeriesRing.to_json` export; returns
+    problems (empty == valid).  Mirrors ``registry.validate_export``:
+    legal derived names, string label maps, per-series points with
+    non-decreasing timestamps and finite values."""
+    errs: list[str] = []
+    if not isinstance(payload, dict):
+        return [f"top level is {type(payload).__name__}, expected object"]
+    if payload.get("schema") != SCHEMA:
+        errs.append(f"schema is {payload.get('schema')!r}, expected {SCHEMA!r}")
+    cap = payload.get("capacity")
+    if not isinstance(cap, int) or cap < 2:
+        errs.append(f"capacity {cap!r} is not an int >= 2")
+    n = payload.get("n_snapshots")
+    if not isinstance(n, int) or n < 0 or (isinstance(cap, int) and n > cap):
+        errs.append(f"n_snapshots {n!r} outside [0, capacity]")
+    for tk in ("t_first", "t_last"):
+        tv = payload.get(tk)
+        if tv is not None and (not isinstance(tv, (int, float)) or not math.isfinite(tv)):
+            errs.append(f"{tk} is non-finite")
+    series = payload.get("series")
+    if not isinstance(series, list):
+        return errs + ["series is not a list"]
+    for i, s in enumerate(series):
+        if not isinstance(s, dict):
+            errs.append(f"series[{i}] is not an object")
+            continue
+        name = s.get("name", f"<series[{i}]>")
+        base, _, deriv = str(name).rpartition(":")
+        if (
+            not isinstance(name, str)
+            or not base
+            or deriv not in _DERIVS
+            or not R._NAME_RE.match(base)
+        ):
+            errs.append(f"series[{i}]: invalid derived name {name!r}")
+        labels = s.get("labels")
+        if not isinstance(labels, dict) or any(
+            not isinstance(k, str) or not isinstance(v, str) for k, v in labels.items()
+        ):
+            errs.append(f"{name}: malformed labels {labels!r}")
+        points = s.get("points")
+        if not isinstance(points, list) or not points:
+            errs.append(f"{name}: points must be a non-empty list")
+            continue
+        prev_t = None
+        for j, p in enumerate(points):
+            if (
+                not isinstance(p, list)
+                or len(p) != 2
+                or not all(isinstance(x, (int, float)) and math.isfinite(x) for x in p)
+            ):
+                errs.append(f"{name}: point {j} malformed ({p!r})")
+                continue
+            if prev_t is not None and p[0] < prev_t:
+                errs.append(f"{name}: point {j} timestamp decreases")
+            prev_t = p[0]
+    return errs

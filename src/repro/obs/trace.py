@@ -59,6 +59,24 @@ class QueryTrace:
     quant: Optional[dict]  # QuantParams as a dict; None for exact search
     engine_version: str
     epoch: Optional[int]  # snapshot epoch (mutable indices); None otherwise
+    # which shard produced this trace (distributed fan-out); None for a
+    # single-index search or for the cross-shard aggregate view
+    shard: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedQueryTrace:
+    """One query's explain record across a distributed fan-out.
+
+    ``aggregate`` composes per :func:`~repro.core.distributed
+    .aggregate_shard_stats` (work SUMMED, ``n_steps`` MAXed — the
+    critical path, planner decisions from shard 0); ``shards`` holds the
+    per-shard traces, each stamped with its shard id and its own
+    snapshot epoch, so a skewed or stale shard is visible per query.
+    """
+
+    aggregate: QueryTrace
+    shards: tuple  # (QueryTrace, ...) — one per shard, same query index
 
 
 def kernel_route(pm, *, quant_active: bool, metric: str) -> str:
@@ -82,7 +100,9 @@ def kernel_route(pm, *, quant_active: bool, metric: str) -> str:
     return f"pallas/{kern}/{mode}"
 
 
-def build_traces(res, pm, *, epoch: int | None = None) -> list[QueryTrace]:
+def build_traces(
+    res, pm, *, epoch: int | None = None, shard: int | None = None
+) -> list[QueryTrace]:
     """Materialize one :class:`QueryTrace` per batch lane from a finished
     :class:`SearchResult`.  Reads (and therefore syncs) the stats arrays —
     call it after the result is consumed, not on the dispatch hot path."""
@@ -138,6 +158,7 @@ def build_traces(res, pm, *, epoch: int | None = None) -> list[QueryTrace]:
                 quant=quant,
                 engine_version=ENGINE_VERSION,
                 epoch=epoch,
+                shard=shard,
             )
         )
     return traces
@@ -149,7 +170,9 @@ def format_trace(t: QueryTrace) -> str:
         return "-" if v is None else f"{v:.4f}"
 
     lines = [
-        f"query[{t.query}]  mode={t.mode}  backend={t.backend}  "
+        f"query[{t.query}]"
+        + (f" shard[{t.shard}]" if t.shard is not None else "")
+        + f"  mode={t.mode}  backend={t.backend}  "
         f"route={t.kernel_route}  metric={t.metric}  {t.engine_version}"
         + (f"  epoch={t.epoch}" if t.epoch is not None else ""),
         f"  planner={'on' if t.planner else 'off'}  "
@@ -170,9 +193,32 @@ def format_trace(t: QueryTrace) -> str:
     return "\n".join(lines)
 
 
+def _shard_line(t: QueryTrace) -> str:
+    """One shard's contribution, compressed to a single comparable row."""
+    sel = "-" if t.actual_selectivity is None else f"{t.actual_selectivity:.4f}"
+    return (
+        f"  shard[{t.shard}]"
+        + (f" epoch={t.epoch}" if t.epoch is not None else "")
+        + f"  mode={t.mode}  n_dist={t.n_dist} n_adc={t.n_adc} "
+        f"n_steps={t.n_steps} n_pass={t.n_pass}  sel={sel}"
+    )
+
+
+def format_sharded_trace(t: ShardedQueryTrace) -> str:
+    """Aggregate block + one breakdown row per shard."""
+    lines = [format_trace(t.aggregate)]
+    lines.append(f"  fan-out: {len(t.shards)} shards (work summed, n_steps maxed)")
+    lines.extend(_shard_line(s) for s in t.shards)
+    return "\n".join(lines)
+
+
 def explain(traces) -> str:
     """Pretty-print one trace or a list of traces (``repro.compass
-    .explain``).  Returns the rendering; print it or log it."""
-    if isinstance(traces, QueryTrace):
+    .explain``) — plain :class:`QueryTrace` or distributed
+    :class:`ShardedQueryTrace`.  Returns the rendering; print or log it."""
+    if isinstance(traces, (QueryTrace, ShardedQueryTrace)):
         traces = [traces]
-    return "\n".join(format_trace(t) for t in traces)
+    return "\n".join(
+        format_sharded_trace(t) if isinstance(t, ShardedQueryTrace) else format_trace(t)
+        for t in traces
+    )

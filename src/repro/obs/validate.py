@@ -1,25 +1,48 @@
-"""CLI gate over the metrics-export schema (the CI bench-smoke step).
+"""CLI gate over the observability export schemas (the CI bench-smoke
+step).
 
-  python -m repro.obs.validate <METRICS.json> [...]
+  python -m repro.obs.validate <METRICS.json|TIMESERIES.json> [...]
 
-Exit 0 iff every named file exists and passes
-:func:`repro.obs.registry.validate_export`.
+Dispatches on each payload's ``schema`` field — ``repro.obs.metrics/v1``
+goes through :func:`repro.obs.registry.validate_export`,
+``repro.obs.timeseries/v1`` through
+:func:`repro.obs.timeseries.validate_timeseries_export`.  Exit 0 iff
+every named file exists, parses, and passes its validator.
 """
 from __future__ import annotations
 
+import json
 import sys
 
-from .registry import validate_file
+from . import registry as R
+from . import timeseries as TS
+
+
+def validate_any_file(path: str) -> list[str]:
+    """Schema-dispatched validation of one export file on disk."""
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"unreadable/malformed JSON: {e}"]
+    if not isinstance(payload, dict):
+        return [f"top level is {type(payload).__name__}, expected object"]
+    schema = payload.get("schema")
+    if schema == TS.SCHEMA:
+        return TS.validate_timeseries_export(payload)
+    # default to the metrics validator: it reports an unknown/missing
+    # schema field itself, so unrecognized payloads still fail loudly
+    return R.validate_export(payload)
 
 
 def main(argv: list[str] | None = None) -> int:
     args = sys.argv[1:] if argv is None else argv
     if not args:
-        print("usage: python -m repro.obs.validate <METRICS.json> [...]")
+        print("usage: python -m repro.obs.validate <METRICS.json|TIMESERIES.json> [...]")
         return 2
     bad = 0
     for path in args:
-        errs = validate_file(path)
+        errs = validate_any_file(path)
         if errs:
             bad += 1
             for e in errs:

@@ -66,6 +66,7 @@ from repro.core.index import CompassIndex
 from repro.core.mutable import MutableIndex, mutable_search
 from repro.core.planner import plan as plan_mod
 from repro.obs import events as obs_events
+from repro.obs import health as obs_health
 from repro.obs import profiling as obs_prof
 from repro.obs import registry as obs_reg
 
@@ -191,6 +192,11 @@ class SearchService:
         self.n_upserts = 0
         self.n_deletes = 0
         self.n_write_errors = 0
+        # continuous monitoring (obs/health.py): attached explicitly via
+        # enable_monitoring() or lazily by the first health() call; when
+        # present, step() ticks it — a no-op unless obs is enabled, so the
+        # disabled steady-state cost is one None check per round
+        self.monitor: Optional[obs_health.Monitor] = None
         if params.quant is not None and self.index.qvecs is None:
             raise ValueError(
                 "params.quant requires a quantized index "
@@ -341,6 +347,11 @@ class SearchService:
                 done.extend(self._dispatch(t_bucket, full=True))
             if q and now - q[0].t_submit >= self.max_wait_s:
                 done.extend(self._dispatch(t_bucket, full=False))
+        if self.monitor is not None:
+            # after dispatch so this round's sync-point records are in the
+            # snapshot; Monitor.tick is a no-op when obs is disabled and
+            # rate-limited by its interval_s otherwise
+            self.monitor.tick()
         return done
 
     def flush(self) -> list[ServiceResult]:
@@ -537,6 +548,23 @@ class SearchService:
 
     # -- observability -------------------------------------------------------
 
+    def enable_monitoring(self, **kwargs) -> "obs_health.Monitor":
+        """Attach (or replace) the continuous :class:`~repro.obs.health
+        .Monitor`; ``step()`` ticks it from here on.  kwargs pass through
+        to the Monitor (capacity, interval_s, slos, watchdogs); the
+        service's clock is the default time source so deadline tests and
+        snapshot cadence share one fake clock."""
+        kwargs.setdefault("clock", self.clock)
+        self.monitor = obs_health.Monitor(**kwargs)
+        return self.monitor
+
+    def health(self) -> "obs_health.HealthReport":
+        """Evaluate SLOs + watchdogs now and return the report (attaches
+        a default Monitor on first use)."""
+        if self.monitor is None:
+            self.enable_monitoring()
+        return self.monitor.evaluate()
+
     def pending_writes(self) -> int:
         return len(self._writes)
 
@@ -601,5 +629,12 @@ class SearchService:
             # sink is configured (REPRO_OBS_EVENTS)
             "obs_events": dict(obs_events.EVENTS.counts()),
             "obs_enabled": obs_reg.enabled(),
+            # the last continuous-monitoring report (None until a Monitor
+            # is attached and has evaluated at least once)
+            "health": (
+                None
+                if self.monitor is None or self.monitor.last_report is None
+                else self.monitor.last_report.to_dict()
+            ),
             "buckets": buckets,
         }

@@ -1,0 +1,644 @@
+"""Continuous-monitoring tests: time-series ring math (windows, counter
+resets, wraparound, bucket-delta quantiles), SLO burn rates under a fake
+clock, drift watchdogs flipped by *injected* drift (stale planner stats,
+shifted upserts against frozen codebooks, compaction debt, synthetic
+recompiles and shard skew), Monitor cadence/gating, the serving health
+surface, and the distributed explain fan-out.
+
+The contract mirrors test_obs.py: everything here is host-side dict work
+— enabling the monitor must not change a bit of any search result — and
+nothing runs unless observability is enabled and something ticks a
+snapshot.
+"""
+from __future__ import annotations
+
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import predicate as P
+from repro.core.engine import CompassParams, compass_search
+from repro.obs import events as obs_ev
+from repro.obs import health as obs_h
+from repro.obs import registry as obs_reg
+from repro.obs import slo as obs_slo
+from repro.obs import timeseries as obs_ts
+
+
+@pytest.fixture(autouse=True)
+def _isolated_obs():
+    prev = obs_reg.set_enabled(False)
+    obs_reg.reset()
+    obs_ev.EVENTS.clear()
+    yield
+    obs_reg.set_enabled(prev)
+    obs_reg.reset()
+    obs_ev.EVENTS.clear()
+    obs_ev.EVENTS.configure(None)
+
+
+# -- time-series ring: windows, deltas, resets, wraparound --------------------
+
+
+def test_quantile_from_counts_interpolation_and_overflow():
+    buckets = (1.0, 2.0, 4.0)
+    # all mass in the first bucket: interpolate from lower edge 0
+    assert obs_ts.quantile_from_counts(buckets, [4, 0, 0, 0], 0.5) == pytest.approx(0.5)
+    # mass in an interior bucket: interpolate inside (1, 2]
+    assert obs_ts.quantile_from_counts(buckets, [0, 4, 0, 0], 0.5) == pytest.approx(1.5)
+    # +Inf overflow slot clamps to the highest finite edge
+    assert obs_ts.quantile_from_counts(buckets, [0, 0, 0, 3], 0.99) == pytest.approx(4.0)
+    assert obs_ts.quantile_from_counts(buckets, [0, 0, 0, 0], 0.5) is None
+
+
+def test_ring_window_delta_rate():
+    r = obs_reg.MetricsRegistry()
+    c = r.counter("compass_ticks_total", "t")
+    ring = obs_ts.TimeSeriesRing(capacity=8)
+    ring.snapshot(r, ts=0.0)
+    c.inc(10)
+    ring.snapshot(r, ts=5.0)
+    c.inc(15)
+    ring.snapshot(r, ts=10.0)
+    # full window: both increments
+    assert ring.delta("compass_ticks_total", window_s=10.0, now=10.0) == 25.0
+    assert ring.rate("compass_ticks_total", window_s=10.0, now=10.0) == pytest.approx(2.5)
+    # short window: only the last pair
+    assert ring.delta("compass_ticks_total", window_s=5.0, now=10.0) == 15.0
+    # partial window: ring doesn't reach back 100s — uses the oldest held
+    assert ring.delta("compass_ticks_total", window_s=100.0, now=10.0) == 25.0
+    assert ring.delta("compass_missing_total", window_s=10.0, now=10.0) is None
+
+
+def test_ring_wraparound_keeps_capacity_and_correct_deltas():
+    r = obs_reg.MetricsRegistry()
+    c = r.counter("compass_ticks_total", "t")
+    ring = obs_ts.TimeSeriesRing(capacity=4)
+    for t in range(10):
+        c.inc(1)
+        ring.snapshot(r, ts=float(t))
+    assert len(ring) == 4
+    assert ring.t_first == 6.0 and ring.t_last == 9.0
+    # only the 3 increments between the oldest held snapshot and the newest
+    assert ring.delta("compass_ticks_total", window_s=100.0, now=9.0) == 3.0
+    with pytest.raises(ValueError):
+        obs_ts.TimeSeriesRing(capacity=1)
+
+
+def test_ring_delta_across_registry_reset():
+    """A counter that went *down* between snapshots was reset: the delta is
+    the new value (Prometheus rate() semantics), never negative."""
+    ring = obs_ts.TimeSeriesRing(capacity=8)
+    obs_reg.registry().counter("compass_ticks_total", "t").inc(5)
+    ring.snapshot(obs_reg.registry(), ts=0.0)
+    obs_reg.reset()
+    obs_reg.registry().counter("compass_ticks_total", "t").inc(2)
+    ring.snapshot(obs_reg.registry(), ts=1.0)
+    assert ring.delta("compass_ticks_total", window_s=10.0, now=1.0) == 2.0
+
+
+def test_ring_windowed_quantile_sees_only_window():
+    r = obs_reg.MetricsRegistry()
+    h = r.histogram("compass_lat_seconds", "l", buckets=(0.1, 1.0))
+    for _ in range(100):
+        h.observe(5.0)  # ancient slow traffic, before the window
+    ring = obs_ts.TimeSeriesRing(capacity=8)
+    ring.snapshot(r, ts=0.0)
+    for _ in range(10):
+        h.observe(0.05)  # fast traffic inside the window
+    ring.snapshot(r, ts=1.0)
+    q = ring.quantile("compass_lat_seconds", 0.99, window_s=1.0, now=1.0)
+    # lifetime p99 would be ~+Inf-bucket (clamped 1.0); the window sees
+    # only the 10 fast observations
+    assert q is not None and q <= 0.1
+    _, counts, _, n = ring.hist_window("compass_lat_seconds", window_s=1.0, now=1.0)
+    assert n == 10 and sum(counts) == 10
+
+
+def test_ring_label_filtered_delta():
+    r = obs_reg.MetricsRegistry()
+    c = r.counter("compass_q_total", "q", ("shard",))
+    ring = obs_ts.TimeSeriesRing(capacity=4)
+    ring.snapshot(r, ts=0.0)
+    c.inc(7, shard="0")
+    c.inc(3, shard="1")
+    ring.snapshot(r, ts=1.0)
+    assert ring.delta("compass_q_total", window_s=10.0, now=1.0) == 10.0
+    assert ring.delta(
+        "compass_q_total", window_s=10.0, now=1.0, labels={"shard": "1"}
+    ) == 3.0
+
+
+def test_timeseries_export_valid_and_corruption_detected():
+    r = obs_reg.MetricsRegistry()
+    c = r.counter("compass_q_total", "q", ("mode",))
+    g = r.gauge("compass_epoch", "e")
+    h = r.histogram("compass_lat_seconds", "l", buckets=(0.1, 1.0))
+    ring = obs_ts.TimeSeriesRing(capacity=8)
+    ring.snapshot(r, ts=0.0)
+    c.inc(4, mode="prefilter")
+    g.set(2)
+    h.observe(0.05)
+    ring.snapshot(r, ts=2.0)
+    payload = ring.to_json()
+    assert payload["schema"] == obs_ts.SCHEMA
+    assert obs_ts.validate_timeseries_export(payload) == []
+    names = {s["name"] for s in payload["series"]}
+    assert {"compass_q_total:rate", "compass_epoch:value", "compass_lat_seconds:p50"} <= names
+    rate = next(s for s in payload["series"] if s["name"] == "compass_q_total:rate")
+    assert rate["labels"] == {"mode": "prefilter"}
+    assert rate["points"] == [[2.0, 2.0]]  # 4 increments over a 2s span
+    # corruption must be caught
+    for mutate in (
+        lambda p: p.update(schema="other/v9"),
+        lambda p: p["series"][0].update(name="not a name:rate"),
+        lambda p: p["series"][0].update(name="compass_q_total:median"),
+        lambda p: p["series"][0].update(points=[]),
+        lambda p: p["series"][0].update(points=[[1.0, 2.0], [0.5, 2.0]]),
+        lambda p: p["series"][0].update(points=[[0.0, float("nan")]]),
+    ):
+        bad = json.loads(json.dumps(payload))
+        mutate(bad)
+        assert obs_ts.validate_timeseries_export(bad)
+
+
+def test_empty_ring_exports_valid_payload():
+    payload = obs_ts.TimeSeriesRing(capacity=4).to_json()
+    assert payload["n_snapshots"] == 0 and payload["series"] == []
+    assert obs_ts.validate_timeseries_export(payload) == []
+
+
+def test_snapshotter_cadence():
+    t = {"now": 0.0}
+    snap = obs_ts.Snapshotter(
+        obs_reg.MetricsRegistry(), capacity=8, interval_s=1.0, clock=lambda: t["now"]
+    )
+    assert snap.maybe_snapshot() is True
+    t["now"] = 0.5
+    assert snap.maybe_snapshot() is False  # inside the interval
+    t["now"] = 1.5
+    assert snap.maybe_snapshot() is True
+    assert len(snap.ring) == 2
+
+
+# -- SLO burn rates -----------------------------------------------------------
+
+
+def _ratio_spec(windows):
+    return obs_slo.SloSpec(
+        name="avail",
+        kind="ratio",
+        objective=0.9,
+        metric="compass_err_total",
+        total_metric="compass_req_total",
+        windows=windows,
+    )
+
+
+def test_slo_burn_math_and_multiwindow_semantics():
+    """burn = bad_fraction / error_budget; a breach needs *every* informed
+    window burning — the short window is the 'still happening' check."""
+    r = obs_reg.MetricsRegistry()
+    err = r.counter("compass_err_total", "e")
+    req = r.counter("compass_req_total", "r")
+    ring = obs_ts.TimeSeriesRing(capacity=16)
+    spec = _ratio_spec((obs_slo.SloWindow(10.0, 2.0), obs_slo.SloWindow(120.0, 1.0)))
+    ring.snapshot(r, ts=0.0)
+    req.inc(100)
+    err.inc(30)  # burst: bad_fraction 0.3, budget 0.1 -> burn 3.0
+    ring.snapshot(r, ts=10.0)
+    breaching, burns = spec.evaluate(ring, now=10.0)
+    assert burns[10.0] == pytest.approx(3.0) and burns[120.0] == pytest.approx(3.0)
+    assert breaching
+    # recovery: errors stop, traffic continues; the short window clears
+    # while the long window still remembers the burst
+    req.inc(100)
+    ring.snapshot(r, ts=95.0)
+    breaching2, burns2 = spec.evaluate(ring, now=95.0)
+    assert burns2[10.0] == pytest.approx(0.0)
+    assert burns2[120.0] == pytest.approx((30.0 / 200.0) / 0.1)  # 1.5 > 1.0
+    assert not breaching2  # the incident already ended
+
+
+def test_slo_latency_and_recall_kinds():
+    r = obs_reg.MetricsRegistry()
+    h = r.histogram("compass_lat_seconds", "l", buckets=(0.1, 0.25, 1.0))
+    ring = obs_ts.TimeSeriesRing(capacity=8)
+    ring.snapshot(r, ts=0.0)
+    for _ in range(9):
+        h.observe(0.05)
+    h.observe(0.5)  # the one bad request
+    ring.snapshot(r, ts=1.0)
+    lat = obs_slo.SloSpec(
+        name="lat", kind="latency", objective=0.95,
+        metric="compass_lat_seconds", threshold=0.25,
+        windows=(obs_slo.SloWindow(10.0, 1.0),),
+    )
+    assert lat.bad_fraction(ring, 10.0, now=1.0) == pytest.approx(0.1)
+    _, burns = lat.evaluate(ring, now=1.0)
+    assert burns[10.0] == pytest.approx(0.1 / 0.05)
+
+    hr = r.histogram("compass_recall", "r", buckets=(0.5, 0.9, 0.95, 1.0))
+    ring2 = obs_ts.TimeSeriesRing(capacity=8)
+    ring2.snapshot(r, ts=0.0)
+    hr.observe(0.99)  # good
+    hr.observe(0.3)  # bad: below the 0.9 threshold's bucket
+    ring2.snapshot(r, ts=1.0)
+    rec = obs_slo.SloSpec(
+        name="rec", kind="recall", objective=0.5,
+        metric="compass_recall", threshold=0.9,
+        windows=(obs_slo.SloWindow(10.0, 1.0),),
+    )
+    assert rec.bad_fraction(ring2, 10.0, now=1.0) == pytest.approx(0.5)
+
+
+def test_slo_abstains_without_data():
+    r = obs_reg.MetricsRegistry()
+    ring = obs_ts.TimeSeriesRing(capacity=4)
+    ring.snapshot(r, ts=0.0)
+    ring.snapshot(r, ts=1.0)
+    spec = _ratio_spec((obs_slo.SloWindow(10.0, 1.0),))
+    breaching, burns = spec.evaluate(ring, now=1.0)
+    assert not breaching and burns[10.0] is None
+
+
+def test_slo_spec_validation():
+    with pytest.raises(ValueError):
+        obs_slo.SloSpec(name="x", kind="weird", objective=0.9, metric="m")
+    with pytest.raises(ValueError):
+        obs_slo.SloSpec(name="x", kind="ratio", objective=1.5, metric="m", total_metric="t")
+    with pytest.raises(ValueError):
+        obs_slo.SloSpec(name="x", kind="latency", objective=0.9, metric="m")
+    with pytest.raises(ValueError):
+        obs_slo.SloSpec(name="x", kind="ratio", objective=0.9, metric="m")
+
+
+def test_evaluate_slos_publishes_gauges_and_events():
+    obs_reg.set_enabled(True)
+    r = obs_reg.registry()
+    err = r.counter("compass_err_total", "e")
+    req = r.counter("compass_req_total", "r")
+    err_ring = obs_ts.TimeSeriesRing(capacity=4)
+    err_ring.snapshot(r, ts=0.0)
+    req.inc(100)
+    err.inc(50)
+    err_ring.snapshot(r, ts=5.0)
+    spec = _ratio_spec((obs_slo.SloWindow(10.0, 2.0),))
+    out = obs_slo.evaluate_slos([spec], err_ring, now=5.0, reg=r)
+    assert out["avail"]["breaching"]
+    assert r.get("compass_slo_breach").value(slo="avail") == 1.0
+    assert r.get("compass_slo_burn_rate").value(slo="avail", window="10s") == pytest.approx(5.0)
+    ev = obs_ev.EVENTS.tail(1, kind="slo_burn")[0]
+    assert ev["slo"] == "avail" and ev["burns"]["10s"] == pytest.approx(5.0)
+
+
+# -- watchdogs: injected drift must flip them deterministically ---------------
+
+
+def _drift_phase(index, queries, pred, pm):
+    """Run one search against ``index``, record its stats, and return the
+    planner-calibration verdict over a fresh ring/registry."""
+    obs_reg.reset()
+    ring = obs_ts.TimeSeriesRing(capacity=4)
+    ring.snapshot(obs_reg.registry(), ts=0.0)
+    res = compass_search(index, queries, pred, pm)
+    obs_reg.record_search_stats(res.stats)
+    ring.snapshot(obs_reg.registry(), ts=1.0)
+    return obs_h.planner_calibration(obs_reg.registry(), ring, now=1.0)
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_planner_drift_watchdog_flips_on_stale_stats(built_index, corpus, backend):
+    """Attribute stats built from a *different* distribution than the live
+    attrs (the corpus moved under the planner) must drive the calibration
+    watchdog to CRIT; fresh stats must not."""
+    from repro.core.planner.stats import build_attr_stats
+
+    _, attrs, queries = corpus
+    obs_reg.set_enabled(True)
+    qj = jnp.asarray(queries[:8])
+    n_attrs = attrs.shape[1]
+    # actual pass fraction ~0.6; under attrs**8 the stats estimate ~0.11
+    pred = P.stack_predicates([P.Pred.range(0, 0.4, 1.0).tensor(n_attrs)] * 8)
+    pm = CompassParams(k=10, ef=32, planner=True, backend=backend)
+
+    fresh = _drift_phase(built_index, qj, pred, pm)
+    stale_stats = build_attr_stats(
+        (attrs ** 8).astype(np.float32),
+        np.asarray(built_index.cattrs.assignments),
+        built_index.nlist,
+    )
+    stale = _drift_phase(built_index._replace(astats=stale_stats), qj, pred, pm)
+
+    assert stale.status == "crit"
+    assert stale.value is not None and stale.value >= obs_h.PLANNER_DRIFT_CRIT
+    assert fresh.status != "crit"
+    assert (fresh.value or 0.0) < stale.value
+    assert "rebuild attr stats" in stale.remediation
+
+
+def _quant_mutable(n=400, d=16, a=4, seed=0):
+    from repro.core.index import BuildConfig, build_index
+    from repro.core.mutable import MutableIndex
+    from repro.core.quant import QuantConfig, quantize_index
+
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    at = rng.uniform(size=(n, a)).astype(np.float32)
+    cfg = BuildConfig(m=8, nlist=8, kmeans_iters=3)
+    qcfg = QuantConfig(m=8, ks=16, iters=4)
+    base = quantize_index(build_index(x, at, cfg), qcfg, "l2")
+    mi = MutableIndex(base, delta_cap=64, auto_compact=False, cfg=cfg, quant_cfg=qcfg)
+    return mi, rng, d, a
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_quant_drift_watchdog_flips_on_shifted_upserts(backend):
+    """Upserts from a shifted distribution, folded against frozen
+    codebooks, must drive quant_staleness to CRIT; an explicit retrain
+    must bring it back to OK."""
+    obs_reg.set_enabled(True)
+    mi, rng, d, a = _quant_mutable()
+    q = jnp.asarray(rng.normal(size=(2, d)).astype(np.float32))
+    pred = P.stack_predicates([P.Pred.range(0, 0.0, 0.6).tensor(a)] * 2)
+    mi.search(q, pred, CompassParams(k=5, ef=32, backend=backend))
+    ring = obs_ts.TimeSeriesRing(capacity=4)
+
+    gid0 = mi.base.n_records
+    for i in range(40):  # corpus drifts: new rows live 8 sigma away
+        mi.upsert(
+            gid0 + i,
+            (rng.normal(size=d) + 8.0).astype(np.float32),
+            rng.uniform(size=a).astype(np.float32),
+        )
+    mi.compact()  # fold re-encodes against the FROZEN codebooks
+    stale = obs_h.quant_staleness(obs_reg.registry(), ring)
+    assert stale.status == "crit"
+    assert stale.value is not None and stale.value >= obs_h.QUANT_DRIFT_CRIT
+    assert "retrain" in stale.remediation
+
+    mi.compact(retrain_codebooks=True)  # operator remediation
+    fresh = obs_h.quant_staleness(obs_reg.registry(), ring)
+    assert fresh.status == "ok"
+    assert fresh.value == pytest.approx(1.0)
+    assert obs_reg.registry().get("compass_codebook_retrains_total").value() == 1
+
+
+def test_compaction_debt_watchdogs():
+    from repro.core.index import BuildConfig
+    from repro.core.mutable import MutableIndex
+
+    obs_reg.set_enabled(True)
+    rng = np.random.default_rng(1)
+    n, d, a = 400, 12, 4
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    at = rng.uniform(size=(n, a)).astype(np.float32)
+    mi = MutableIndex.build(
+        x, at, BuildConfig(m=8, nlist=8, kmeans_iters=3),
+        delta_cap=32, auto_compact=False,
+    )
+    ring = obs_ts.TimeSeriesRing(capacity=4)
+    reg = obs_reg.registry()
+    # no writes yet: no debt gauges, both checks OK
+    assert obs_h.delta_occupancy(reg, ring).status == "ok"
+
+    next_gid = [n]
+
+    def burst(k):
+        for _ in range(k):
+            mi.upsert(
+                next_gid[0],
+                rng.normal(size=d).astype(np.float32),
+                rng.uniform(size=a).astype(np.float32),
+            )
+            next_gid[0] += 1
+
+    burst(26)  # 26/32 = 0.8125
+    chk = obs_h.delta_occupancy(reg, ring)
+    assert chk.status == "warn" and chk.value == pytest.approx(26 / 32)
+    burst(5)  # 31/32 = 0.969 >= crit 0.95
+    assert obs_h.delta_occupancy(reg, ring).status == "crit"
+
+    mi.delete(np.arange(250))  # 250/400 dead base rows
+    chk = obs_h.tombstone_debt(reg, ring)
+    assert chk.status == "crit" and chk.value >= obs_h.TOMBSTONE_CRIT
+    mi.compact()  # the remediation clears both debts
+    assert obs_h.delta_occupancy(reg, ring).status == "ok"
+    assert obs_h.tombstone_debt(reg, ring).status == "ok"
+
+
+def test_recompile_churn_watchdog_ignores_warmup():
+    r = obs_reg.MetricsRegistry()
+    ring = obs_ts.TimeSeriesRing(capacity=8)
+    c = r.counter("compass_compiles_total", "c", ("cache",))
+    # warmup window: counter born inside it -> expected compiles, OK
+    ring.snapshot(r, ts=0.0)
+    c.inc(3, cache="aot")
+    ring.snapshot(r, ts=1.0)
+    assert obs_h.recompile_churn(r, ring, now=1.0).status == "ok"
+    # steady-state window: counter was already warm at the window start and
+    # still moves -> WARN.  A fresh ring models the post-warmup regime (a
+    # long-lived ring's oldest snapshot is past warmup once it wraps).
+    ring2 = obs_ts.TimeSeriesRing(capacity=8)
+    ring2.snapshot(r, ts=2.0)
+    c.inc(1, cache="aot")
+    ring2.snapshot(r, ts=3.0)
+    churn = obs_h.recompile_churn(r, ring2, now=3.0)
+    assert churn.status == "warn" and churn.value == 1.0
+    assert "ShapePolicy" in churn.remediation
+
+
+def test_shard_skew_watchdog():
+    r = obs_reg.MetricsRegistry()
+    ring = obs_ts.TimeSeriesRing(capacity=8)
+    c = r.counter("compass_dist_total", "d", ("bucket", "shard"))
+    ring.snapshot(r, ts=0.0)
+    for s, v in (("0", 400.0), ("1", 0.0), ("2", 0.0), ("3", 0.0)):
+        c.inc(v, bucket="", shard=s)
+    c.inc(999, bucket="", shard="")  # unsharded traffic must not count
+    ring.snapshot(r, ts=1.0)
+    chk = obs_h.shard_skew(r, ring, now=1.0)
+    assert chk.status == "crit" and chk.value == pytest.approx(4.0)
+    assert "shard 0" in chk.detail
+    # balanced traffic: OK
+    for s in ("0", "1", "2", "3"):
+        c.inc(100, bucket="", shard=s)
+    ring.snapshot(r, ts=2.0)
+    pair_now = obs_h.shard_skew(r, ring, now=2.0)
+    # window spans both bursts: shard 0 at 500 vs mean 200 -> 2.5x warn
+    assert pair_now.status == "warn"
+
+
+# -- Monitor: gating, cadence, transitions ------------------------------------
+
+
+def test_monitor_tick_gated_on_enablement_and_cadence():
+    t = {"now": 0.0}
+    mon = obs_h.Monitor(interval_s=1.0, clock=lambda: t["now"])
+    assert mon.tick() is None  # obs disabled: no snapshot, no report
+    assert len(mon.ring) == 0
+    obs_reg.set_enabled(True)
+    rep = mon.tick()
+    assert rep is not None and rep.status == "ok"
+    t["now"] = 0.5
+    assert mon.tick() is None  # inside the interval
+    t["now"] = 1.5
+    assert mon.tick() is not None
+    assert len(mon.ring) == 2
+    # every default check published a health-status gauge
+    g = obs_reg.registry().get("compass_health_status")
+    names = {s["labels"]["check"] for s in g.samples()}
+    assert {"slo:serve_latency", "planner_calibration", "shard_skew"} <= names
+
+
+def test_monitor_emits_health_event_on_transition():
+    obs_reg.set_enabled(True)
+    state = {"status": "ok"}
+
+    def flappy(reg, ring, now=None):
+        return obs_h.HealthCheck("flappy", state["status"], value=1.0)
+
+    t = {"now": 0.0}
+    mon = obs_h.Monitor(
+        interval_s=0.0, clock=lambda: t["now"], slos=(), watchdogs=(flappy,)
+    )
+    assert mon.evaluate().status == "ok"
+    assert obs_ev.EVENTS.counts().get("health") is None  # first sighting: no event
+    state["status"] = "crit"
+    t["now"] = 1.0
+    rep = mon.evaluate()
+    assert rep.status == "crit" and rep.check("flappy").status == "crit"
+    ev = obs_ev.EVENTS.tail(1, kind="health")[0]
+    assert ev["check"] == "flappy" and ev["prev"] == "ok" and ev["status"] == "crit"
+    assert obs_reg.registry().get("compass_health_status").value(check="flappy") == 2.0
+
+
+# -- serving surface ----------------------------------------------------------
+
+
+def _service(mutable: bool):
+    from repro.core.index import BuildConfig, build_index
+    from repro.core.mutable import MutableIndex
+    from repro.serving.search_service import SearchService
+
+    rng = np.random.default_rng(12)
+    n, d, a = 400, 12, 4
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    at = rng.uniform(size=(n, a)).astype(np.float32)
+    cfg = BuildConfig(m=8, nlist=8, kmeans_iters=3)
+    idx = MutableIndex.build(x, at, cfg, delta_cap=32) if mutable else build_index(x, at, cfg)
+    pm = CompassParams(k=5, ef=32, backend="ref")
+    svc = SearchService(idx, pm, batch_size=4, max_wait_s=0.0)
+    return svc, rng, d, a
+
+
+def test_service_health_and_stats_surface():
+    obs_reg.set_enabled(True)
+    svc, rng, d, a = _service(mutable=True)
+    assert svc.stats()["health"] is None  # monitoring not attached yet
+    for _ in range(4):
+        svc.submit(rng.normal(size=d).astype(np.float32), P.Pred.range(0, 0.0, 0.6))
+    svc.run_until_idle()
+    rep = svc.health()  # lazily attaches a default Monitor
+    assert rep.status in ("ok", "warn", "crit")
+    assert rep.check("slo:serve_latency") is not None
+    assert rep.check("delta_occupancy") is not None
+    got = svc.stats()["health"]
+    assert got["status"] == rep.status
+    assert {c["name"] for c in got["checks"]} == {c.name for c in rep.checks}
+
+
+def test_service_step_ticks_monitor():
+    obs_reg.set_enabled(True)
+    svc, rng, d, a = _service(mutable=False)
+    svc.enable_monitoring(interval_s=0.0)
+    for _ in range(2):  # two scheduling rounds -> two monitor ticks
+        for _ in range(4):
+            svc.submit(rng.normal(size=d).astype(np.float32), P.Pred.range(0, 0.0, 0.6))
+        svc.run_until_idle()
+    assert len(svc.monitor.ring) >= 2  # step() snapshotted each round
+    assert svc.monitor.last_report is not None
+    payload = svc.monitor.ring.to_json()
+    assert obs_ts.validate_timeseries_export(payload) == []
+    assert any(s["name"] == "compass_serve_requests_total:rate" for s in payload["series"])
+
+
+def test_service_monitoring_is_bitwise_invariant():
+    """The full monitoring stack (snapshots + SLOs + watchdogs every
+    round) must not change a bit of any result."""
+    def run(monitored: bool):
+        svc, rng, d, a = _service(mutable=False)
+        if monitored:
+            obs_reg.set_enabled(True)
+            svc.enable_monitoring(interval_s=0.0)
+        else:
+            obs_reg.set_enabled(False)
+        for _ in range(6):
+            svc.submit(rng.normal(size=d).astype(np.float32), P.Pred.range(0, 0.0, 0.6))
+        return sorted(svc.run_until_idle(), key=lambda r: r.rid)
+
+    plain, monitored = run(False), run(True)
+    assert len(plain) == len(monitored) == 6
+    for a_, b in zip(plain, monitored):
+        np.testing.assert_array_equal(np.asarray(a_.ids), np.asarray(b.ids))
+        np.testing.assert_array_equal(np.asarray(a_.dists), np.asarray(b.dists))
+
+
+# -- distributed explain fan-out ----------------------------------------------
+
+
+def test_distributed_explain_sharded_traces():
+    from repro.core.distributed import DistributedMutableIndex
+    from repro.core.index import BuildConfig
+    from repro.obs import ShardedQueryTrace, explain
+
+    rng = np.random.default_rng(21)
+    n, d, a = 400, 12, 4
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    at = rng.uniform(size=(n, a)).astype(np.float32)
+    dmi = DistributedMutableIndex.build(
+        x, at, 2, BuildConfig(m=8, nlist=8, kmeans_iters=3), delta_cap=32
+    )
+    q = jnp.asarray(rng.normal(size=(3, d)).astype(np.float32))
+    pred = P.stack_predicates([P.Pred.range(0, 0.0, 0.6).tensor(a)] * 3)
+    pm = CompassParams(k=5, ef=32, backend="ref")
+    plain = dmi.search(q, pred, pm)
+    res, traces = dmi.search(q, pred, pm, explain=True)
+    np.testing.assert_array_equal(np.asarray(plain.ids), np.asarray(res.ids))
+    np.testing.assert_array_equal(np.asarray(plain.dists), np.asarray(res.dists))
+    assert len(traces) == 3 and all(isinstance(t, ShardedQueryTrace) for t in traces)
+    for t in traces:
+        assert len(t.shards) == 2
+        assert [s.shard for s in t.shards] == [0, 1]
+        assert all(s.epoch == dmi.shards[i].epoch for i, s in enumerate(t.shards))
+        # aggregate semantics: work sums, critical path maxes
+        assert t.aggregate.n_dist == sum(s.n_dist for s in t.shards)
+        assert t.aggregate.n_steps == max(s.n_steps for s in t.shards)
+    rendered = explain(traces)
+    assert "fan-out: 2 shards" in rendered and "shard[1]" in rendered
+    # single sharded trace renders too
+    assert "fan-out" in explain(traces[0])
+
+
+# -- registry reconstruction (report CLI path) --------------------------------
+
+
+def test_registry_from_json_roundtrip():
+    obs_reg.set_enabled(True)
+    r = obs_reg.registry()
+    r.counter("compass_q_total", "queries", ("mode",)).inc(3, mode="prefilter")
+    r.gauge("compass_epoch", "epoch").set(2)
+    h = r.histogram("compass_lat_seconds", "latency", buckets=(0.01, 0.1))
+    h.observe(0.05)
+    h.observe(5.0)
+    payload = r.to_json()
+    r2 = obs_reg.MetricsRegistry.from_json(payload)
+    assert r2.get("compass_q_total").value(mode="prefilter") == 3.0
+    assert r2.get("compass_epoch").value() == 2.0
+    counts, total, n = r2.get("compass_lat_seconds").series()
+    assert list(counts) == [0, 1, 1] and n == 2 and total == pytest.approx(5.05)
+    assert obs_reg.validate_export(r2.to_json()) == []
+    with pytest.raises(ValueError):
+        obs_reg.MetricsRegistry.from_json({"schema": "wrong/v0", "metrics": []})

@@ -102,6 +102,76 @@ def test_export_json_and_prometheus_validate():
     assert "compass_lat_seconds_count" in text
 
 
+def test_prometheus_hist_inf_sum_count_consistency():
+    """The text exposition's histogram lines must be internally consistent:
+    cumulative ``le`` counts non-decreasing, the +Inf bucket equal to
+    ``_count``, and ``_sum`` present — the invariants a Prometheus scraper
+    relies on."""
+    r = obs_reg.MetricsRegistry()
+    h = r.histogram("compass_lat_seconds", "latency", buckets=(0.1, 1.0))
+    for v in (0.05, 0.5, 0.5, 7.0):
+        h.observe(v)
+    lines = [ln for ln in r.to_prometheus().splitlines() if not ln.startswith("#")]
+    bucket_lines = [ln for ln in lines if ln.startswith("compass_lat_seconds_bucket")]
+    cum = [float(ln.rsplit(" ", 1)[1]) for ln in bucket_lines]
+    assert cum == sorted(cum)  # cumulative counts never decrease
+    assert 'le="+Inf"' in bucket_lines[-1]
+    count = next(
+        float(ln.rsplit(" ", 1)[1])
+        for ln in lines
+        if ln.startswith("compass_lat_seconds_count")
+    )
+    total = next(
+        float(ln.rsplit(" ", 1)[1])
+        for ln in lines
+        if ln.startswith("compass_lat_seconds_sum")
+    )
+    assert cum[-1] == count == 4
+    assert total == pytest.approx(8.05)
+
+
+def test_label_escaping_roundtrip():
+    r"""Label values carrying backslashes, quotes and newlines must escape
+    in the text exposition and survive a JSON export -> from_json
+    reconstruction byte-for-byte."""
+    nasty = 'a"b\\c\nd'
+    r = obs_reg.MetricsRegistry()
+    r.counter("compass_q_total", "q", ("tag",)).inc(2, tag=nasty)
+    text = r.to_prometheus()
+    assert 'tag="a\\"b\\\\c\\nd"' in text
+    assert "\n" not in text.split("compass_q_total{", 1)[1].split("}", 1)[0]
+    payload = r.to_json()
+    assert obs_reg.validate_export(payload) == []
+    r2 = obs_reg.MetricsRegistry.from_json(json.loads(json.dumps(payload)))
+    assert r2.get("compass_q_total").value(tag=nasty) == 2.0
+    assert r2.to_prometheus() == text
+
+
+def test_truncated_metrics_json_rejected(tmp_path):
+    """A METRICS.json cut off mid-write (partial disk flush, killed run)
+    must fail validation loudly, not parse as a smaller registry."""
+    from repro.obs.validate import validate_any_file
+
+    r = obs_reg.MetricsRegistry()
+    r.counter("compass_q_total", "q").inc(3)
+    r.histogram("compass_lat_seconds", "l", buckets=(0.1,)).observe(0.05)
+    blob = json.dumps(r.to_json(), indent=1)
+    good = tmp_path / "METRICS.json"
+    good.write_text(blob)
+    assert validate_any_file(str(good)) == []
+    truncated = tmp_path / "TRUNC.json"
+    truncated.write_text(blob[: len(blob) // 2])
+    errs = validate_any_file(str(truncated))
+    assert errs and "malformed JSON" in errs[0]
+    # histogram invariants: count must equal the bucket-count sum
+    bad = json.loads(blob)
+    for m in bad["metrics"]:
+        if m["type"] == "histogram":
+            m["samples"][0]["count"] += 1
+    (tmp_path / "BADSUM.json").write_text(json.dumps(bad))
+    assert validate_any_file(str(tmp_path / "BADSUM.json"))
+
+
 def test_validate_export_catches_corruption():
     r = obs_reg.MetricsRegistry()
     r.counter("compass_ok_total").inc()
