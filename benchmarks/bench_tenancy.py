@@ -1,0 +1,340 @@
+"""Multi-tenant serving bench: zipfian hot/cold collections behind one
+CollectionService.
+
+The tenancy layer's three load-bearing claims, measured:
+
+  * **Executable sharing** — N collections sharing one ShapePolicy
+    occupy shape buckets, not tenants x buckets: total compiles (and the
+    global ``mutable_search`` jit cache delta) equals the number of
+    distinct ``(B, T, A, params, rows, delta_cap)`` keys the traffic
+    touched, regardless of how many tenants touched them.
+  * **QoS under skew** — a zipfian tenant mix (one hot collection takes
+    most of the traffic) still yields per-tenant p50/p99 in the same
+    regime, because weighted-fair scheduling charges the hot tenant for
+    its extra batches instead of letting it starve the cold ones.
+  * **Semantic result cache** — repeated (query, pred, k) traffic is
+    answered from the exact tier without touching the engine; the bench
+    reports per-tenant hit rates alongside the latency quantiles so the
+    cache's contribution is attributable.
+
+``--selfcheck`` is the blocking CI gate (ISSUE 10 acceptance): >= 3
+collections sharing one ShapePolicy must compile exactly once per
+occupied shape bucket; overload must produce typed ``Rejected`` results
+with ``compass_shed_total`` incremented; exact-tier cache hits must be
+bitwise-identical to an uncached search and invalidated by the owning
+collection's epoch swap (and only that collection's).  Exit 1 on any
+failure.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import numpy as np
+
+from repro.compass import (
+    BuildConfig,
+    CollectionService,
+    CompassParams,
+    MutableIndex,
+    Pred,
+    Rejected,
+    ShapePolicy,
+    stack_predicates,
+)
+from repro.core.mutable import mutable_search
+from repro.obs import registry as obs_reg
+
+from . import common as C
+
+N_TENANTS = int(os.environ.get("REPRO_BENCH_TENANTS", 4))
+N_REQUESTS = 240  # zipfian stream length
+POOL = 24  # distinct (query, pred) pairs per tenant — repeats hit the cache
+ZIPF_S = 1.2  # tenant popularity exponent (hot/cold skew)
+D = 16
+N_ATTRS = 4
+BURST = 16  # requests submitted between scheduling rounds
+
+
+def _zipf_weights(n: int, s: float) -> np.ndarray:
+    w = 1.0 / np.arange(1, n + 1) ** s
+    return w / w.sum()
+
+
+def _build_service(seed: int = 0, n_tenants: int = N_TENANTS):
+    """>= 3 mutable collections of *different* corpus sizes that all
+    collapse into one ShapePolicy row bucket — the precondition for
+    cross-tenant executable sharing."""
+    rng = np.random.default_rng(seed)
+    shape = ShapePolicy(min_rows=1024, delta_cap=64)
+    pm = CompassParams(k=10, ef=32, backend=C.BACKEND, shape=shape)
+    svc = CollectionService(pm, batch_size=8, max_wait_s=0.0)
+    names = [f"t{i}" for i in range(n_tenants)]
+    sizes = [900 - 120 * (i % 4) for i in range(n_tenants)]
+    clients = {}
+    for i, (name, n) in enumerate(zip(names, sizes)):
+        x = rng.normal(size=(n, D)).astype(np.float32)
+        at = rng.uniform(size=(n, N_ATTRS)).astype(np.float32)
+        mut = MutableIndex.build(
+            x, at, BuildConfig(m=8, nlist=16, kmeans_iters=3),
+            delta_cap=64, shape=shape,
+        )
+        # the hot tenant (zipf rank 0) gets the largest fair share
+        clients[name] = svc.create(
+            name, mut, weight=4.0 if i == 0 else 1.0, cache_capacity=256
+        )
+    # per-tenant request pool: half conjunctive (T=1), half disjunctive
+    # (T=2) — two predicate-shape buckets shared by every tenant
+    pools = {}
+    for name in names:
+        pool = []
+        for j in range(POOL):
+            q = rng.normal(size=D).astype(np.float32)
+            a = j % N_ATTRS
+            pred = (
+                Pred.range(a, 0.1, 0.7)
+                if j % 2 == 0
+                else Pred.or_(Pred.le(a, 0.3), Pred.ge(a, 0.8))
+            )
+            pool.append((q, pred.tensor(N_ATTRS)))
+        pools[name] = pool
+    return svc, clients, pools, names
+
+
+def measure(seed: int = 0, n_requests: int = N_REQUESTS, out=print) -> dict:
+    svc, clients, pools, names = _build_service(seed)
+    rng = np.random.default_rng(seed + 1)
+    tw = _zipf_weights(len(names), ZIPF_S)
+
+    # warmup: occupy both shape buckets once so the measured stream is
+    # steady-state serving, not compilation
+    for name in names[:1]:
+        for q, pred in pools[name][:2]:
+            clients[name].submit(q, pred)
+    svc.run_until_idle()
+    warm_compiles = svc.compile_count
+    jit0 = mutable_search._cache_size()
+
+    lat = {name: [] for name in names}
+    n_sub = {name: 0 for name in names}
+    t0 = time.perf_counter()
+    submitted = 0
+    while submitted < n_requests:
+        for _ in range(min(BURST, n_requests - submitted)):
+            name = names[rng.choice(len(names), p=tw)]
+            q, pred = pools[name][rng.integers(0, POOL)]
+            r = clients[name].submit(q, pred)
+            n_sub[name] += 1
+            submitted += 1
+            assert not isinstance(r, Rejected)  # depth 1024 >> burst
+        for res in svc.step():
+            lat[res.collection].append(res.queue_wait_s + res.batch_exec_s)
+    for res in svc.run_until_idle():
+        lat[res.collection].append(res.queue_wait_s + res.batch_exec_s)
+    wall = time.perf_counter() - t0
+
+    jit_delta = mutable_search._cache_size() - jit0
+    stats = svc.stats()
+    per_tenant = {}
+    for name in names:
+        arr = np.array(lat[name]) if lat[name] else np.array([0.0])
+        cs = stats["collections"][name]
+        per_tenant[name] = {
+            "tenant": name,
+            "weight": cs["weight"],
+            "n_requests": cs["n_requests"],
+            "n_shed": cs["n_shed"],
+            "p50_ms": float(np.percentile(arr, 50) * 1e3),
+            "p99_ms": float(np.percentile(arr, 99) * 1e3),
+            "cache_hit_rate": cs["cache"]["hit_rate"],
+            "qps": cs["n_requests"] / wall if wall else 0.0,
+        }
+    agg_lat = np.array([v for vs in lat.values() for v in vs] or [0.0])
+    hits = sum(stats["collections"][n]["cache"]["hits_exact"] for n in names)
+    looked = sum(
+        stats["collections"][n]["cache"]["hits_exact"]
+        + stats["collections"][n]["cache"]["misses"]
+        for n in names
+    )
+    summary = {
+        "n_tenants": len(names),
+        "n_requests": n_requests,
+        "qps": n_requests / wall if wall else 0.0,
+        "p50_ms": float(np.percentile(agg_lat, 50) * 1e3),
+        "p99_ms": float(np.percentile(agg_lat, 99) * 1e3),
+        "cache_hit_rate": hits / looked if looked else 0.0,
+        "n_compiles": svc.compile_count,
+        "warm_compiles": warm_compiles,
+        "steady_state_compiles": svc.compile_count - warm_compiles,
+        "jit_cache_delta": jit_delta,
+        "occupied_shape_buckets": svc.compile_count,
+        "tenants_x_buckets": len(names) * max(
+            len(stats["collections"][n]["buckets"]) for n in names
+        ),
+        "per_tenant": per_tenant,
+    }
+    out(
+        f"tenancy: {len(names)} tenants, {n_requests} reqs @ "
+        f"{summary['qps']:.0f} qps, p50 {summary['p50_ms']:.1f}ms "
+        f"p99 {summary['p99_ms']:.1f}ms, cache hit {summary['cache_hit_rate']:.0%}, "
+        f"{summary['n_compiles']} compiles for "
+        f"{summary['tenants_x_buckets']} tenant-buckets"
+    )
+    return summary, svc, clients, pools
+
+
+def run(dataset: str = "SYN-EASY", out=print):
+    summary, _svc, _clients, _pools = measure(out=out)
+    rows = [dict(v) for v in summary["per_tenant"].values()]
+    agg = {k: v for k, v in summary.items() if k != "per_tenant"}
+    rows.append({"tenant": "_aggregate", **agg})
+    return rows
+
+
+def selfcheck(out=print) -> int:
+    """Blocking CI gate — the ISSUE 10 acceptance criteria, executed."""
+    failures: list[str] = []
+    prev = obs_reg.set_enabled(True)
+    try:
+        rng = np.random.default_rng(7)
+        shape = ShapePolicy(min_rows=512, delta_cap=64)
+        pm = CompassParams(k=8, ef=32, backend=C.BACKEND, shape=shape)
+        svc = CollectionService(pm, batch_size=4, max_wait_s=0.0)
+        clients = {}
+        for name, n in (("a", 300), ("b", 420), ("c", 360)):
+            x = rng.normal(size=(n, D)).astype(np.float32)
+            at = rng.uniform(size=(n, N_ATTRS)).astype(np.float32)
+            mut = MutableIndex.build(
+                x, at, BuildConfig(m=8, nlist=8, kmeans_iters=3),
+                delta_cap=64, shape=shape,
+            )
+            clients[name] = svc.create(name, mut, cache_capacity=64)
+
+        # -- 1. compiles == occupied shape buckets, not tenants x buckets
+        jit0 = mutable_search._cache_size()
+        preds = [Pred.range(0, 0.1, 0.8), Pred.or_(Pred.le(1, 0.3), Pred.ge(1, 0.8))]
+        queries = {}
+        for name, cl in clients.items():
+            for j in range(4):
+                q = rng.normal(size=D).astype(np.float32)
+                cl.submit(q, preds[j % 2], k=5)
+                queries.setdefault(name, []).append((q, preds[j % 2]))
+        svc.run_until_idle()
+        jit_delta = mutable_search._cache_size() - jit0
+        occupied = svc.compile_count
+        if occupied != 2:
+            failures.append(
+                f"3 same-shape tenants across 2 predicate buckets occupy "
+                f"{occupied} shape keys, expected 2"
+            )
+        if jit_delta != occupied:
+            failures.append(
+                f"jit cache grew by {jit_delta} != {occupied} occupied shape keys "
+                "(tenants are not sharing compiled programs)"
+            )
+        if occupied >= len(clients) * 2:
+            failures.append(
+                f"compiles {occupied} >= tenants x buckets {len(clients) * 2}"
+            )
+
+        # -- 2. exact-tier cache hit: bitwise parity with uncached search
+        q0, p0 = queries["a"][0]
+        rid1 = clients["a"].submit(q0, p0, k=5)
+        svc.run_until_idle()
+        r1 = svc.poll(rid1)
+        if r1 is None or r1.cache_tier != "exact":
+            failures.append(
+                f"repeat submission served from tier {getattr(r1, 'cache_tier', None)!r}, "
+                "expected 'exact'"
+            )
+        else:
+            col = svc._col("a")
+            direct = col.mutable.search(
+                q0[None], stack_predicates([p0.tensor(N_ATTRS)]), col.params
+            )
+            ids_direct = np.asarray(direct.ids)[0, :5]
+            dists_direct = np.asarray(direct.dists)[0, :5]
+            if not np.array_equal(r1.ids, ids_direct):
+                failures.append("exact-tier hit ids != uncached search ids")
+            if not np.array_equal(
+                r1.dists.view(np.uint32), dists_direct.view(np.uint32)
+            ):
+                failures.append("exact-tier hit dists not bitwise-equal to uncached")
+
+        # -- 3. epoch swap invalidates the owning collection (and only it)
+        b_entries_before = svc._col("b").cache.stats()["entries_exact"]
+        svc.compact("a")
+        rid2 = clients["a"].submit(q0, p0, k=5)
+        svc.run_until_idle()
+        r2 = svc.poll(rid2)
+        if r2 is None or r2.cache_tier is not None:
+            failures.append(
+                f"post-compaction submission served from tier "
+                f"{getattr(r2, 'cache_tier', None)!r}, expected a live search"
+            )
+        elif r2.epoch != svc._col("a").mutable.epoch:
+            failures.append("post-compaction result pinned to a stale epoch")
+        if svc._col("b").cache.stats()["entries_exact"] != b_entries_before:
+            failures.append("collection A's epoch swap touched collection B's cache")
+        # the compacted shapes must have stayed inside the occupied keys
+        if svc.compile_count != occupied:
+            failures.append(
+                f"compaction changed compile count {occupied} -> {svc.compile_count} "
+                "(ShapePolicy not holding shapes stable)"
+            )
+
+        # -- 4. overload -> typed Rejected + compass_shed_total
+        x = rng.normal(size=(280, D)).astype(np.float32)
+        at = rng.uniform(size=(280, N_ATTRS)).astype(np.float32)
+        mut = MutableIndex.build(
+            x, at, BuildConfig(m=8, nlist=8, kmeans_iters=3),
+            delta_cap=64, shape=shape,
+        )
+        bcl = svc.create("burst", mut, max_queue_depth=4)
+        outcomes = [
+            bcl.submit(rng.normal(size=D).astype(np.float32), preds[0])
+            for _ in range(10)
+        ]
+        shed = [o for o in outcomes if isinstance(o, Rejected)]
+        if len(shed) != 6:
+            failures.append(f"10 submissions over depth 4 shed {len(shed)}, expected 6")
+        if shed and not all(
+            s.reason == "queue_depth" and s.collection == "burst" and s.limit == 4
+            for s in shed
+        ):
+            failures.append("Rejected results carry wrong reason/collection/limit")
+        c = obs_reg.registry().get("compass_shed_total")
+        got = 0.0 if c is None else c.value(tenant="burst")
+        if got != len(shed):
+            failures.append(
+                f"compass_shed_total{{tenant='burst'}} == {got}, expected {len(shed)}"
+            )
+        svc.run_until_idle()  # drain the admitted remainder
+        errs = obs_reg.validate_export(obs_reg.registry().to_json())
+        failures.extend(f"metrics export: {e}" for e in errs)
+    finally:
+        obs_reg.set_enabled(prev)
+
+    if failures:
+        for f in failures:
+            out(f"FAIL bench_tenancy selfcheck: {f}")
+        return 1
+    out(
+        f"ok bench_tenancy selfcheck: {occupied} compiles for 3 tenants x 2 "
+        f"buckets (jit delta {jit_delta}), exact-tier bitwise parity, "
+        f"epoch-swap invalidation scoped to owner, {len(shed)} typed sheds "
+        "counted per tenant"
+    )
+    return 0
+
+
+def main(argv: list[str] | None = None):
+    args = sys.argv[1:] if argv is None else argv
+    if "--selfcheck" in args:
+        sys.exit(selfcheck())
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -11,6 +11,8 @@
   bench_quant         -> PQ tier: recall/QPS/bytes-per-vector sweep (ours)
   bench_kernels       -> fused-visit / pq / ivf kernel microbench (ours)
   bench_obs           -> observability overhead: obs-on vs obs-off QPS (ours)
+  bench_tenancy       -> multi-tenant zipfian workload: per-tenant p50/p99,
+                         cache hit rates, shared-executable compiles (ours)
 
 ``python -m benchmarks.run [--only name] [--quick] [--json-dir DIR]``
 
@@ -56,6 +58,7 @@ ALL = (
     "bench_quant",
     "bench_kernels",
     "bench_obs",
+    "bench_tenancy",
 )
 
 

@@ -101,6 +101,11 @@ ROW_REQUIRED = {
     "bench_kernels": ("kernel", "metric", "d", "v"),
     # off/on/explain arms plus a summary row with the overhead fraction
     "bench_obs": ("arm", "qps"),
+    # one row per tenant (zipfian hot/cold mix) plus a trailing
+    # "_aggregate" row that adds the shared-executable compile accounting
+    # (n_compiles / occupied_shape_buckets / tenants_x_buckets)
+    "bench_tenancy": ("tenant", "n_requests", "p50_ms", "p99_ms",
+                      "cache_hit_rate", "qps"),
 }
 
 

@@ -29,6 +29,11 @@ Layer map (each name re-exported from its implementation module):
   (search), ``quantize_index``.
 * **serving** — ``SearchService`` (continuous batching, AOT executable
   cache), ``ServiceResult``.
+* **tenancy** — ``CollectionService`` (named collections behind one
+  weighted-fair front door: per-tenant admission queues, typed
+  ``Rejected`` load shedding, cross-tenant executable-cache sharing and
+  a two-tier semantic result cache), ``CollectionSpec`` (per-collection
+  weight / queue depth / cache policy), ``TenantResult``.
 * **distributed** — ``DistributedMutableIndex`` (owner-routed mutable
   shards), ``build_sharded_index`` / ``make_distributed_search`` (static
   shard_map fan-out).
@@ -70,6 +75,13 @@ from repro.core.quant import QuantConfig, QuantParams
 from repro.core.quant.encode import quantize_index
 from repro.obs import QueryTrace, ShardedQueryTrace, explain
 from repro.serving.search_service import SearchService, ServiceResult
+from repro.serving.tenancy import (
+    CollectionClient,
+    CollectionService,
+    CollectionSpec,
+    Rejected,
+    TenantResult,
+)
 
 # the canonical short names; the long forms stay available for callers
 # migrating mechanically from repro.core.* imports
@@ -79,6 +91,9 @@ search = compass_search
 __all__ = [
     "ENGINE_VERSION",
     "BuildConfig",
+    "CollectionClient",
+    "CollectionService",
+    "CollectionSpec",
     "CompassIndex",
     "CompassParams",
     "DistributedMutableIndex",
@@ -88,11 +103,13 @@ __all__ = [
     "QuantConfig",
     "QuantParams",
     "QueryTrace",
+    "Rejected",
     "SearchResult",
     "SearchService",
     "SearchStats",
     "ServiceResult",
     "ShapePolicy",
+    "TenantResult",
     "ShardedQueryTrace",
     "Snapshot",
     "build",

@@ -30,6 +30,12 @@ not vibes:
   / ``compass_steps_total`` deltas.  Fan-out latency is the *slowest*
   shard; skew means one shard does multiples of the average work
   (straggler, hot shard, bad placement).
+* **admission_pressure** — worst per-tenant windowed shed fraction
+  (``compass_shed_total`` / ``compass_submitted_total``) plus worst
+  queue fill against the shed limit.  Typed shedding is working as
+  designed, but a *sustained* shed rate means a tenant's offered load
+  exceeds its share → raise its weight / queue depth or push back
+  upstream.
 
 :class:`Monitor` owns the snapshot cadence: ``tick()`` (called from
 ``SearchService.step()``) snapshots at most once per ``interval_s`` and
@@ -63,6 +69,10 @@ TOMBSTONE_WARN = 0.25  # dead fraction of real base rows
 TOMBSTONE_CRIT = 0.50
 SKEW_WARN = 2.0  # max/mean windowed per-shard work
 SKEW_CRIT = 4.0
+SHED_RATE_WARN = 0.01  # windowed shed / submitted fraction per tenant
+SHED_RATE_CRIT = 0.05
+QUEUE_FILL_WARN = 0.80  # queue depth / shed limit per tenant
+QUEUE_FILL_CRIT = 0.95
 #: default lookback for windowed watchdogs — long enough that a ring at
 #: any realistic cadence resolves it as "the whole ring" in tests
 WATCH_WINDOW_S = 600.0
@@ -273,6 +283,65 @@ def shard_skew(
     )
 
 
+def admission_pressure(
+    reg: R.MetricsRegistry, ring: TimeSeriesRing, now: Optional[float] = None
+) -> HealthCheck:
+    """Multi-tenant admission health: worst per-tenant windowed shed
+    fraction (``compass_shed_total`` / ``compass_submitted_total``) and
+    worst instantaneous queue fill (``compass_queue_depth`` over
+    ``compass_queue_limit``).  Shedding *is* the designed overload
+    response — typed, never silent — but a sustained shed rate means a
+    tenant's offered load exceeds its fair share, and a near-limit queue
+    is one burst from shedding; both deserve an operator's eye before
+    the SLO burn does."""
+    submitted = reg.get("compass_submitted_total")
+    if submitted is None:
+        return HealthCheck("admission_pressure", "ok", detail="no collection service")
+    tenants = sorted({s["labels"].get("tenant", "") for s in submitted.samples()})
+    worst, detail, remediation = 0.0, "no admission pressure", ""
+    for t in tenants:
+        lab = {"tenant": t}
+        shed = ring.delta("compass_shed_total", window_s=WATCH_WINDOW_S, now=now, labels=lab)
+        total = ring.delta(
+            "compass_submitted_total", window_s=WATCH_WINDOW_S, now=now, labels=lab
+        )
+        if shed and total:
+            rate = shed / total
+            score = _grade(rate, SHED_RATE_WARN, SHED_RATE_CRIT)
+            if STATUS_LEVELS[score] > 0 and rate > worst:
+                worst, detail = rate, (
+                    f"tenant {t!r} shed {rate:.1%} of submissions in the window"
+                )
+                remediation = "raise the tenant's weight/queue depth or shed earlier upstream"
+    status = _grade(worst, SHED_RATE_WARN, SHED_RATE_CRIT)
+    # queue fill is a leading indicator: only escalates, never calms, the
+    # verdict the shed rate already gave
+    depth = reg.get("compass_queue_depth")
+    limit = reg.get("compass_queue_limit")
+    if depth is not None and limit is not None:
+        limits = {
+            frozenset(s["labels"].items()): s["value"] for s in limit.samples()
+        }
+        for s in depth.samples():
+            cap = limits.get(frozenset(s["labels"].items()))
+            if cap:
+                fill = s["value"] / cap
+                g = _grade(fill, QUEUE_FILL_WARN, QUEUE_FILL_CRIT)
+                if STATUS_LEVELS[g] > STATUS_LEVELS[status]:
+                    status, worst = g, fill
+                    detail = (
+                        f"tenant {s['labels'].get('tenant', '')!r} queue at "
+                        f"{fill:.0%} of its shed limit"
+                    )
+                    remediation = "drain faster (more step() budget) or raise max_queue_depth"
+    if status == "ok":
+        return HealthCheck("admission_pressure", "ok", value=worst, detail=detail)
+    return HealthCheck(
+        "admission_pressure", status, value=worst, detail=detail,
+        remediation=remediation,
+    )
+
+
 DEFAULT_WATCHDOGS: tuple[Callable, ...] = (
     planner_calibration,
     quant_staleness,
@@ -280,6 +349,7 @@ DEFAULT_WATCHDOGS: tuple[Callable, ...] = (
     tombstone_debt,
     recompile_churn,
     shard_skew,
+    admission_pressure,
 )
 
 

@@ -333,19 +333,22 @@ def record_search_stats(stats, *, labels: dict | None = None, reg=None) -> None:
     §Observability).  No-ops when disabled.
 
     The search counters share one canonical label schema —
-    ``(bucket, shard)`` — whatever subset the caller supplies; absent
-    dimensions record as ``""`` (Prometheus treats an empty label value
-    as unset).  A fixed schema is what lets the serving layer (bucket
-    labels) and the distributed layer (shard labels) fold into the same
+    ``(bucket, shard, tenant)`` — whatever subset the caller supplies;
+    absent dimensions record as ``""`` (Prometheus treats an empty label
+    value as unset).  A fixed schema is what lets the serving layer
+    (bucket labels), the distributed layer (shard labels) and the
+    multi-tenant collection layer (tenant labels) fold into the same
     series family in one process without a labelname redeclaration
-    conflict.
+    conflict.  Pre-tenancy ``(bucket, shard)`` exports stay valid:
+    re-importing them just lacks the ``tenant`` dimension, and new
+    recorders default it to ``""``.
     """
     if not _ENABLED:
         return
     import numpy as np
 
     r = reg or _REGISTRY
-    lnames = ("bucket", "shard")
+    lnames = ("bucket", "shard", "tenant")
     given = dict(labels or {})
     unknown = set(given) - set(lnames)
     if unknown:

@@ -166,6 +166,37 @@ def default_slos() -> tuple[SloSpec, ...]:
     )
 
 
+def tenant_slos(tenant: str, *, latency_threshold_s: float = 0.25) -> tuple[SloSpec, ...]:
+    """Per-tenant objectives over the ``tenant``-labeled serving series
+    the :class:`~repro.serving.tenancy.CollectionService` records: batch
+    p-latency restricted to the tenant's micro-batches, and admission
+    availability (shed fraction of offered load — shedding is typed and
+    deliberate, but it still spends this tenant's error budget).
+
+    Compose with the defaults per hot tenant::
+
+        svc.enable_monitoring(slos=default_slos() + tenant_slos("hot"))
+    """
+    return (
+        SloSpec(
+            name=f"serve_latency:{tenant}",
+            kind="latency",
+            objective=0.99,
+            metric="compass_serve_exec_seconds",
+            threshold=latency_threshold_s,
+            labels={"tenant": tenant},
+        ),
+        SloSpec(
+            name=f"admission:{tenant}",
+            kind="ratio",
+            objective=0.999,
+            metric="compass_shed_total",
+            total_metric="compass_submitted_total",
+            labels={"tenant": tenant},
+        ),
+    )
+
+
 def evaluate_slos(
     specs,
     ring: TimeSeriesRing,

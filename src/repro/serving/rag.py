@@ -24,6 +24,7 @@ from repro.core.index import BuildConfig, CompassIndex, build_index
 from repro.core.engine import CompassParams, compass_search
 from repro.models.model import forward
 from repro.serving.search_service import SearchService
+from repro.serving.tenancy import CollectionClient, CollectionService
 
 
 def embed_tokens(params, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
@@ -54,16 +55,37 @@ class RagIndex:
         return cls(build_index(embs, doc_attrs, build_cfg), doc_tokens)
 
     def make_service(self, k: int = 4, ef: int = 16, backend: str = "auto",
-                     **service_kw) -> SearchService:
-        """A continuous-batching :class:`SearchService` over this index —
-        the production retrieval path (shape-bucketed, bounded compiles)."""
-        return SearchService(
-            self.index, CompassParams(k=k, ef=ef, backend=backend), **service_kw
-        )
+                     collection: str = "docs",
+                     service: CollectionService | None = None,
+                     **service_kw) -> CollectionClient:
+        """Register this index as a named collection on a multi-tenant
+        :class:`CollectionService` and return the tenant handle — RAG
+        callers get admission control, fair scheduling and the semantic
+        result cache for free, through the same submit/poll surface the
+        single-index ``SearchService`` exposed.
+
+        Pass an existing ``service`` to co-host several RAG corpora
+        (each a collection) behind one scheduler; by default a private
+        service is created.  ``service_kw`` splits between the service
+        constructor (batch_size, max_wait_s, ...) and the collection
+        spec (weight, max_queue_depth, cache_capacity, near_cache).
+        """
+        spec_keys = ("weight", "max_queue_depth", "cache_capacity", "near_cache", "quant")
+        spec_kw = {kk: service_kw.pop(kk) for kk in spec_keys if kk in service_kw}
+        if service is None:
+            service = CollectionService(
+                CompassParams(k=k, ef=ef, backend=backend), **service_kw
+            )
+        elif service_kw:
+            raise ValueError(
+                f"service_kw {sorted(service_kw)} need a fresh service "
+                "(the shared one is already constructed)"
+            )
+        return service.create(collection, self.index, **spec_kw)
 
     def retrieve(self, params, cfg, query_tokens: np.ndarray, pred: P.Predicate,
                  k: int = 2, ef: int = 16, backend: str = "auto",
-                 service: SearchService | None = None) -> np.ndarray:
+                 service: "SearchService | CollectionClient | None" = None) -> np.ndarray:
         """Filtered retrieval for a batch of queries sharing one predicate.
 
         With ``service`` the queries go through the continuous-batching

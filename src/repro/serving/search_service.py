@@ -327,7 +327,8 @@ class SearchService:
                         obs_reg.registry().counter(
                             "compass_write_errors_total",
                             "Rejected/raced write operations",
-                        ).inc()
+                            labelnames=("tenant",),
+                        ).inc(tenant="")
             applied += 1
         return applied
 
@@ -500,30 +501,34 @@ class SearchService:
                 lambda a: np.asarray(a)[:lanes], res.stats
             )
             obs_reg.record_search_stats(sliced, labels={"bucket": bname})
+            # the serve families share their declaration with the
+            # multi-tenant CollectionService: same (bucket, tenant)
+            # schema, this single-index service recording tenant="" (the
+            # unset-value convention record_search_stats already uses)
             R = obs_reg.registry()
             R.counter(
                 "compass_serve_requests_total", "Real requests served",
-                labelnames=("bucket",),
-            ).inc(lanes, bucket=bname)
+                labelnames=("bucket", "tenant"),
+            ).inc(lanes, bucket=bname, tenant="")
             R.counter(
                 "compass_serve_batches_total", "Micro-batches dispatched",
-                labelnames=("bucket",),
-            ).inc(bucket=bname)
+                labelnames=("bucket", "tenant"),
+            ).inc(bucket=bname, tenant="")
             if n_fill:
                 R.counter(
                     "compass_serve_fillers_total", "Padded filler lanes dispatched",
-                    labelnames=("bucket",),
-                ).inc(n_fill, bucket=bname)
+                    labelnames=("bucket", "tenant"),
+                ).inc(n_fill, bucket=bname, tenant="")
             R.histogram(
                 "compass_serve_exec_seconds", "Micro-batch execution wall time",
-                labelnames=("bucket",), buckets=obs_reg.LATENCY_BUCKETS_S,
-            ).observe(exec_s, bucket=bname)
+                labelnames=("bucket", "tenant"), buckets=obs_reg.LATENCY_BUCKETS_S,
+            ).observe(exec_s, bucket=bname, tenant="")
             wait_h = R.histogram(
                 "compass_serve_wait_seconds", "Per-request queue wait",
-                labelnames=("bucket",), buckets=obs_reg.LATENCY_BUCKETS_S,
+                labelnames=("bucket", "tenant"), buckets=obs_reg.LATENCY_BUCKETS_S,
             )
             for job in jobs:
-                wait_h.observe(t0 - job.t_submit, bucket=bname)
+                wait_h.observe(t0 - job.t_submit, bucket=bname, tenant="")
 
         ids = np.asarray(res.ids)
         dists = np.asarray(res.dists)

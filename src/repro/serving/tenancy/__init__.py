@@ -1,0 +1,21 @@
+"""Multi-tenant collection serving: named collections, weighted-fair
+admission, typed load shedding, shared executable caches and a two-tier
+semantic result cache (DESIGN.md §Tenancy)."""
+from .cache import CacheEntry, CollectionCache
+from .service import (
+    CollectionClient,
+    CollectionService,
+    CollectionSpec,
+    Rejected,
+    TenantResult,
+)
+
+__all__ = [
+    "CacheEntry",
+    "CollectionCache",
+    "CollectionClient",
+    "CollectionService",
+    "CollectionSpec",
+    "Rejected",
+    "TenantResult",
+]

@@ -1,0 +1,143 @@
+"""Two-tier semantic result cache, one instance per collection
+(DESIGN.md §Tenancy).
+
+Tier 1 (**exact**) keys on the request bytes themselves — query float32
+bytes + lowered predicate interval bytes + requested ``k`` — so a hit
+replays a previously computed engine result verbatim: bitwise identical
+to re-running the search, because the cached entry *is* the engine
+output for those exact inputs against the same index epoch.
+
+Tier 2 (**near-duplicate**, opt-in) keys on the collection's own PQ
+codes (``core.quant.encode.encode_rows`` against the index codebooks):
+two queries that quantize to the same code word under *this
+collection's* codebooks are close enough that serving one's result for
+the other is an acceptable approximation.  Near hits are flagged in the
+response (``TenantResult.cache_tier == "near"``) so callers can opt out
+per request by ignoring them.  Keys embed the codebooks only implicitly
+(each collection owns its cache object), so a code word can never match
+across collections — isolation is structural, not probabilistic.
+
+Invalidation contract: the owning :class:`CollectionService` clears the
+whole cache whenever the collection's visible state can change — any
+applied write (upsert/delete, including the auto-compaction a delta
+overflow triggers) and any explicit epoch swap (``compact()``).  Entries
+carry the epoch they were computed against purely as provenance; the
+clear-on-write policy means a served hit always matches the current
+epoch.  Whole-cache clearing is deliberately coarse: per-entry
+re-validation would need to know which cached results a write could have
+perturbed, which is the search problem itself.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+
+@dataclass
+class CacheEntry:
+    """One cached engine result at the service's full ``params.k`` width
+    (responses are served as the request's ``k``-prefix, same truncation
+    rule as the live dispatch path)."""
+
+    ids: np.ndarray  # (params.k,) int32
+    dists: np.ndarray  # (params.k,) float32
+    epoch: Optional[int]  # index epoch the result was computed against
+
+
+class CollectionCache:
+    """LRU exact tier + LRU near-duplicate tier for one collection.
+
+    ``capacity`` bounds the exact tier; ``near_capacity`` bounds the
+    near tier (0 disables it).  ``capacity == 0`` disables caching
+    entirely — every lookup misses and inserts are dropped.
+    """
+
+    def __init__(self, capacity: int, near_capacity: int = 0):
+        self.capacity = int(capacity)
+        self.near_capacity = int(near_capacity)
+        self._exact: OrderedDict[tuple, CacheEntry] = OrderedDict()
+        self._near: OrderedDict[tuple, CacheEntry] = OrderedDict()
+        self.hits_exact = 0
+        self.hits_near = 0
+        self.misses = 0
+        self.insertions = 0
+        self.invalidations = 0
+
+    @property
+    def enabled(self) -> bool:
+        return self.capacity > 0
+
+    def lookup(
+        self, exact_key: tuple, near_key: Optional[tuple] = None
+    ) -> tuple[Optional[CacheEntry], Optional[str]]:
+        """``(entry, "exact"|"near")`` on a hit, ``(None, None)`` on a
+        miss.  The exact tier always wins — a near hit is only consulted
+        when the request bytes themselves are not cached."""
+        if not self.enabled:
+            return None, None
+        e = self._exact.get(exact_key)
+        if e is not None:
+            self._exact.move_to_end(exact_key)
+            self.hits_exact += 1
+            return e, "exact"
+        if near_key is not None and self.near_capacity > 0:
+            e = self._near.get(near_key)
+            if e is not None:
+                self._near.move_to_end(near_key)
+                self.hits_near += 1
+                return e, "near"
+        self.misses += 1
+        return None, None
+
+    def insert(
+        self,
+        exact_key: tuple,
+        near_key: Optional[tuple],
+        ids: np.ndarray,
+        dists: np.ndarray,
+        epoch: Optional[int] = None,
+    ) -> None:
+        if not self.enabled:
+            return
+        entry = CacheEntry(
+            ids=np.asarray(ids).copy(), dists=np.asarray(dists).copy(), epoch=epoch
+        )
+        self._exact[exact_key] = entry
+        self._exact.move_to_end(exact_key)
+        while len(self._exact) > self.capacity:
+            self._exact.popitem(last=False)
+        if near_key is not None and self.near_capacity > 0:
+            self._near[near_key] = entry
+            self._near.move_to_end(near_key)
+            while len(self._near) > self.near_capacity:
+                self._near.popitem(last=False)
+        self.insertions += 1
+
+    def invalidate(self) -> int:
+        """Clear both tiers; returns the number of entries dropped."""
+        n = len(self._exact) + len(self._near)
+        if n:
+            self.invalidations += 1
+        self._exact.clear()
+        self._near.clear()
+        return n
+
+    def stats(self) -> dict:
+        lookups = self.hits_exact + self.hits_near + self.misses
+        return {
+            "capacity": self.capacity,
+            "near_capacity": self.near_capacity,
+            "entries_exact": len(self._exact),
+            "entries_near": len(self._near),
+            "hits_exact": self.hits_exact,
+            "hits_near": self.hits_near,
+            "misses": self.misses,
+            "hit_rate": (
+                (self.hits_exact + self.hits_near) / lookups if lookups else 0.0
+            ),
+            "insertions": self.insertions,
+            "invalidations": self.invalidations,
+        }

@@ -282,7 +282,12 @@ def test_obs_enabled_is_bitwise_invariant(built_index, corpus, backend):
     obs_reg.record_search_stats(on.stats)  # recording is host-side only
     np.testing.assert_array_equal(np.asarray(off.ids), np.asarray(on.ids))
     np.testing.assert_array_equal(np.asarray(off.dists), np.asarray(on.dists))
-    assert obs_reg.registry().get("compass_queries_total").value(bucket="", shard="") == 4
+    assert (
+        obs_reg.registry()
+        .get("compass_queries_total")
+        .value(bucket="", shard="", tenant="")
+        == 4
+    )
 
 
 def test_kernel_route_strings():
@@ -446,11 +451,12 @@ def test_distributed_search_records_per_shard():
     on = dmi.search(q, pred, pm)
     np.testing.assert_array_equal(np.asarray(off.ids), np.asarray(on.ids))
     c = obs_reg.registry().get("compass_queries_total")
-    assert c.value(bucket="", shard="0") == 2 and c.value(bucket="", shard="1") == 2
+    assert c.value(bucket="", shard="0", tenant="") == 2
+    assert c.value(bucket="", shard="1", tenant="") == 2
     # the aggregate the caller sees matches the per-shard sum in the registry
     per_shard_dist = obs_reg.registry().get("compass_dist_total")
-    assert per_shard_dist.value(bucket="", shard="0") + per_shard_dist.value(
-        bucket="", shard="1"
+    assert per_shard_dist.value(bucket="", shard="0", tenant="") + per_shard_dist.value(
+        bucket="", shard="1", tenant=""
     ) == pytest.approx(float(np.asarray(on.stats.n_dist).sum()))
 
 
@@ -485,12 +491,12 @@ def test_service_records_batch_metrics():
     assert len(samples) == 1  # one (B, T) bucket for this uniform workload
     bname = samples[0]["labels"]["bucket"]
     assert bname.startswith("B4xT")
-    assert req.value(bucket=bname) == 6
-    assert r.get("compass_serve_batches_total").value(bucket=bname) == 2
-    assert r.get("compass_serve_fillers_total").value(bucket=bname) == 2
+    assert req.value(bucket=bname, tenant="") == 6
+    assert r.get("compass_serve_batches_total").value(bucket=bname, tenant="") == 2
+    assert r.get("compass_serve_fillers_total").value(bucket=bname, tenant="") == 2
     # queries recorded == real lanes, not padded lanes
-    assert r.get("compass_queries_total").value(bucket=bname, shard="") == 6
-    _, _, n_exec = r.get("compass_serve_exec_seconds").series(bucket=bname)
+    assert r.get("compass_queries_total").value(bucket=bname, shard="", tenant="") == 6
+    _, _, n_exec = r.get("compass_serve_exec_seconds").series(bucket=bname, tenant="")
     assert n_exec == 2
     assert svc.stats()["obs_enabled"] is True
     assert svc.stats()["obs_events"].get("compile", 0) >= 1
@@ -506,7 +512,7 @@ def test_service_write_error_routing():
     svc.step()
     assert svc.n_write_errors == 1
     assert svc.stats()["n_write_errors"] == 1
-    assert obs_reg.registry().get("compass_write_errors_total").value() == 1
+    assert obs_reg.registry().get("compass_write_errors_total").value(tenant="") == 1
     assert obs_ev.EVENTS.counts().get("write_error") == 1
     ev = obs_ev.EVENTS.tail(1, kind="write_error")[0]
     assert ev["gid"] == gid
